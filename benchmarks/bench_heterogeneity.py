@@ -1,0 +1,47 @@
+"""Table 5 — node heterogeneity calibration.
+
+Times the REAL jitted armada-detector forward on this host, then derives
+each testbed node's modeled per-frame time via its speed factor — showing
+the simulator's processing times are anchored to real JAX compute.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import emulation, real_world
+from repro.models.api import build_model, make_batch
+
+
+def run():
+    cfg = get_config("armada-detector")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, "train", 1, cfg.num_patches + 8)
+
+    @jax.jit
+    def fwd(p, b):
+        return model.hidden_states(p, b)[0]
+
+    fwd(params, batch)[0].block_until_ready()
+    times = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        fwd(params, batch).block_until_ready()
+        times.append((time.perf_counter() - t0) * 1e3)
+    host_ms = float(np.median(times))
+
+    rows = [("table5/host_jitted_forward", host_ms,
+             f"params={cfg.param_count()/1e6:.2f}M")]
+    ref = 30.0                                    # D6's paper time anchors
+    for topo_name, topo in (("real", real_world()), ("emu", emulation())):
+        for nid, spec in topo.nodes.items():
+            if spec.proc_ms <= 0:
+                continue
+            rows.append((f"table5/{topo_name}/{nid}", spec.proc_ms,
+                         f"speed_factor={spec.proc_ms / ref:.2f};"
+                         f"host_equiv={host_ms * spec.proc_ms / ref:.1f}ms"))
+    return rows

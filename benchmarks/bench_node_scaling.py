@@ -1,0 +1,61 @@
+"""Figure 8 — varying number of edge nodes with fixed users.
+
+Three static users (one per city).  Nodes are added per the paper:
+(a) A only, (b) +new node at City_A (A2), (c) +B, (d) +C.  New capacity at
+City_A helps everyone (b); City_B traffic returns home in (c); (d) adds C
+but the stronger A keeps serving User_C, so nothing changes.
+"""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import WARM
+from repro.core.app_manager import ServiceSpec
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.cluster import NodeSpec, emulation
+
+SCENARIOS = {
+    "a": ["A"],
+    "b": ["A", "A2"],
+    "c": ["A", "A2", "B"],
+    "d": ["A", "A2", "B", "C"],
+}
+
+
+def _clone_node(topo, src: str, dst: str):
+    s = topo.nodes[src]
+    topo.nodes[dst] = NodeSpec(dst, s.loc, s.proc_ms, slots=s.slots,
+                               dedicated=s.dedicated, net_type=s.net_type)
+    for (a, b), ms in list(topo.rtt_base.items()):
+        if a == src:
+            topo.rtt_base[(dst, b)] = ms
+        if b == src:
+            topo.rtt_base[(a, dst)] = ms
+
+
+def run():
+    rows = []
+    for tag, nodes in SCENARIOS.items():
+        topo = emulation()
+        if "A2" in nodes:
+            _clone_node(topo, "A", "A2")
+        sys_ = ArmadaSystem(topo, seed=4, compute_nodes=nodes + ["Cloud"])
+        spec = ServiceSpec("detect", detection_image(),
+                           locations=[topo.nodes[n].loc for n in nodes],
+                           min_replicas=max(3, len(nodes)))
+        sys_.beacon.deploy_application(spec)
+        sys_.ensure_cloud_replica("detect")
+        sys_.am.autoscale_enabled = False
+        clients = {}
+        for i, uid in enumerate(("User_A", "User_B", "User_C")):
+            c = sys_.make_client(uid, "detect", mode="armada",
+                                 frame_interval_ms=33.0)
+            clients[uid] = c
+            sys_.sim.at(WARM, c.start)
+        sys_.sim.run(until=WARM + 30_000.0)
+        for uid, c in clients.items():
+            node = c.active.captain.node_id if c.active else "-"
+            rows.append((f"fig8{tag}/{uid}",
+                         c.mean_latency(since=WARM + 10_000.0),
+                         f"selected={node};nodes={'+'.join(nodes)}"))
+    return rows

@@ -1,0 +1,45 @@
+"""§Roofline — the full (arch × shape × mesh) table from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per cell: the three roofline terms, the dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs.  This is the generator for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def cells(tag=None):
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        r_tag = r.get("tag") or r.get("variant", "baseline")
+        if tag is None and r_tag != "baseline":
+            continue                      # §Perf variants listed separately
+        if tag is not None and r_tag != tag:
+            continue
+        yield r
+
+
+def run():
+    rows = []
+    for r in cells():
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            rows.append((f"roofline/{tag}", float("nan"),
+                         "SKIP:" + r["reason"][:60]))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline/{tag}", float("nan"), "ERROR"))
+            continue
+        rf = r["roofline"]
+        bound = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        rows.append((
+            f"roofline/{tag}", bound * 1e3,
+            f"dom={rf['dominant']};tc={rf['t_compute']:.3g}s;"
+            f"tm={rf['t_memory']:.3g}s;tx={rf['t_collective']:.3g}s;"
+            f"frac={rf['compute_fraction']:.3f};"
+            f"useful={r.get('useful_flop_ratio') or 0:.2f}"))
+    return rows

@@ -1,0 +1,114 @@
+"""Storage layer benches — Table 7, Figure 11, Figures 12/13.
+
+Face-recognition Cargo workloads: 1000 labeled descriptors
+(<ID 8B, 128×8B vector>), read-only / write-only / read-followed-by-write,
+strong vs eventual consistency, dedicated vs volunteer vs cloud Cargos.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.beacon import ArmadaSystem
+from repro.core.cluster import real_world
+from repro.core.storage.cargo import Cargo
+
+N_OPS = 200
+
+
+def _system(cargo_nodes):
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=8, compute_nodes=["V3", "V4", "V5"],
+                        cargo_nodes=cargo_nodes)
+    return sys_
+
+
+def _provision(sys_, service="facerec", n_records=1000):
+    group = list(sys_.cargos.values())
+    initial = {f"face{i}": b"x" * (8 + 128 * 8) for i in range(n_records)}
+    for c in group:
+        c.provision(service, group, initial)
+    return group
+
+
+def _measure(sys_, cargo: Cargo, requester: str, workload: str,
+             consistency: str, n=N_OPS) -> float:
+    out: List[float] = []
+
+    def read_done(val, ms):
+        out.append(ms)
+
+    def write_done(ms):
+        out.append(ms)
+
+    t = sys_.sim.now
+    for i in range(n):
+        if workload == "read":
+            sys_.sim.at(t, cargo.read, "facerec", f"face{i % 1000}",
+                        requester, read_done)
+        elif workload == "write":
+            sys_.sim.at(t, cargo.write, "facerec", f"new{i}", b"y" * 1032,
+                        requester, consistency, write_done)
+        else:  # read-modify-write
+            def _rmw(i=i, t=t):
+                def after_read(val, ms1):
+                    cargo.write("facerec", f"rmw{i}", b"z" * 1032,
+                                requester, consistency,
+                                lambda ms2: out.append(ms1 + ms2))
+                cargo.read("facerec", f"face{i % 1000}", requester,
+                           after_read)
+            sys_.sim.at(t, _rmw)
+        t += 40.0
+    sys_.sim.run(until=t + 5_000.0)
+    return sum(out) / len(out) if out else float("nan")
+
+
+def run():
+    rows = []
+
+    # ---- Table 7: cargo selection matrix (tasks on V3/V4/V5)
+    sys_ = _system(["V1", "V2", "D6", "Cloud"])
+    _provision(sys_)
+    paper = {"V3": "V1", "V4": "V2", "V5": "D6"}
+    for task_node in ("V3", "V4", "V5"):
+        lat = {}
+        for cname, cargo in sys_.cargos.items():
+            lat[cname] = _measure(sys_, cargo, task_node, "read", "eventual",
+                                  n=50)
+        best = min(lat, key=lat.get)
+        rows.append((f"table7/task_{task_node}", lat[best],
+                     f"selected={best};paper={paper[task_node]};"
+                     f"all=" + ",".join(f"{k}:{v:.0f}" for k, v in
+                                        sorted(lat.items()))))
+
+    # ---- Fig 11: storage failover (task on V5, D6 cargo dies)
+    sys_ = _system(["V1", "V2", "D6", "Cloud"])
+    _provision(sys_)
+    pre = _measure(sys_, sys_.cargos["D6"], "V5", "read", "eventual", n=50)
+    sys_.cargos["D6"].fail()
+    # immediate switch to next-best cargo (V2 per Table 7 neighborhood)
+    alive = {k: _measure(sys_, c, "V5", "read", "eventual", n=20)
+             for k, c in sys_.cargos.items() if c.alive and k != "Cloud"}
+    nxt = min(alive, key=alive.get)
+    cloud = _measure(sys_, sys_.cargos["Cloud"], "V5", "read", "eventual",
+                     n=50)
+    rows.append(("fig11/before_fail", pre, "cargo=D6"))
+    rows.append(("fig11/after_fail", alive[nxt],
+                 f"switched_to={nxt};paper=V2"))
+    rows.append(("fig11/cloud_backup", cloud, "baseline"))
+
+    # ---- Fig 12/13: consistency x workload x cargo class.  Volunteer
+    # replicas propagate over residential links (the paper's Fig 12b point:
+    # strong-consistency volunteer writes can exceed cloud latency).
+    classes = {"dedicated": ["D6"], "volunteer": ["V1", "V2", "V5"],
+               "cloud": ["Cloud"]}
+    for cls, cargo_nodes in classes.items():
+        for consistency in ("strong", "eventual"):
+            sys_ = _system(sorted(set(cargo_nodes)))
+            _provision(sys_)
+            target = sys_.cargos[cargo_nodes[0]]
+            for wl in ("read", "write", "rmw"):
+                ms = _measure(sys_, target, "V3", wl, consistency)
+                fig = "fig12" if consistency == "strong" else "fig13"
+                rows.append((f"{fig}/{wl}/{cls}", ms,
+                             f"consistency={consistency}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Figure 7 — varying number of users with a fixed set of edge nodes.
+
+Emulation testbed, closed-loop clients (continuous video).  The paper's key
+behaviors: a lone City_C user offloads to the faster remote node A (b);
+returns to local C when City_A users fill node A (c — our A is 2-slot, so
+it takes three closed-loop locals to saturate where the paper needed two);
+a second City_C user picks remote A over the occupied local C (d).
+"""
+from __future__ import annotations
+
+from benchmarks.common import WARM, emulation_system
+from repro.core.cluster import city_user
+
+SCENARIOS = {
+    "a": ["User_A", "User_B"],
+    "b": ["User_A", "User_B", "User_C"],
+    "c": ["User_A", "User_A2", "User_A3", "User_B", "User_C"],
+    "d": ["User_A", "User_B", "User_C", "User_C2"],
+}
+EXPECT = {
+    "a": {"User_A": "A", "User_B": "B"},
+    "b": {"User_C": "A"},
+    "c": {"User_C": "C"},
+    "d": {"User_C2": "A"},
+}
+
+
+def run():
+    rows = []
+    for tag, users in SCENARIOS.items():
+        sys_ = emulation_system(seed=2)
+        for u in users:
+            if u not in sys_.topo.nodes:
+                city, ix = u.split("_")[1][0], u[-1]
+                city_user(sys_.topo, city, ix)
+        clients = {}
+        for i, uid in enumerate(users):
+            c = sys_.make_client(uid, "detect", mode="armada",
+                                 frame_interval_ms=0.0)
+            clients[uid] = c
+            sys_.sim.at(WARM + i * 500.0, c.start)
+        sys_.sim.run(until=WARM + 30_000.0)
+        for uid, c in clients.items():
+            node = c.active.captain.node_id if c.active else "-"
+            want = EXPECT.get(tag, {}).get(uid)
+            note = f";paper={want};match={node == want}" if want else ""
+            rows.append((f"fig7{tag}/{uid}",
+                         c.mean_latency(since=WARM + 10_000.0),
+                         f"selected={node}" + note))
+    return rows

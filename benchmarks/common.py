@@ -1,0 +1,58 @@
+"""Shared experiment harness for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.app_manager import ServiceSpec
+from repro.core.beacon import ArmadaSystem, detection_image, facerec_image
+from repro.core.cluster import campus_users, city_user, emulation, real_world
+
+WARM = 15_000.0          # ms: replicas deployed + probes settled
+MEASURE = 40_000.0       # ms: measurement window end
+
+
+def realworld_system(seed=0, replicas=6, *, autoscale=True) -> ArmadaSystem:
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=seed)
+    spec = ServiceSpec("detect", detection_image(),
+                       locations=[topo.nodes["D6"].loc],
+                       min_replicas=replicas)
+    sys_.beacon.deploy_application(spec)
+    sys_.ensure_cloud_replica("detect")
+    sys_.am.autoscale_enabled = autoscale
+    return sys_
+
+
+def emulation_system(seed=0, nodes=("A", "B", "C"), *, cloud=True,
+                     autoscale=False) -> ArmadaSystem:
+    topo = emulation()
+    names = list(nodes) + (["Cloud"] if cloud else [])
+    sys_ = ArmadaSystem(topo, seed=seed, compute_nodes=names)
+    spec = ServiceSpec("detect", detection_image(),
+                       locations=[topo.nodes[n].loc for n in nodes],
+                       min_replicas=max(3, len(nodes)))
+    sys_.beacon.deploy_application(spec)
+    if cloud:
+        sys_.ensure_cloud_replica("detect")
+    sys_.am.autoscale_enabled = autoscale
+    return sys_
+
+
+def run_clients(sys_: ArmadaSystem, client_ids: List[str], mode: str,
+                *, start_at: float = WARM, until: float = MEASURE,
+                frame_interval: float = 30.0, stagger: float = 0.0,
+                **kw) -> Dict[str, object]:
+    clients = {}
+    for i, cid in enumerate(client_ids):
+        c = sys_.make_client(cid, "detect", mode=mode,
+                             frame_interval_ms=frame_interval, **kw)
+        clients[cid] = c
+        sys_.sim.at(start_at + i * stagger, c.start)
+    sys_.sim.run(until=until)
+    return clients
+
+
+def mean_latency(clients: Dict[str, object], since: float) -> float:
+    vals = [c.mean_latency(since=since) for c in clients.values()]
+    vals = [v for v in vals if v == v]
+    return sum(vals) / len(vals) if vals else float("nan")

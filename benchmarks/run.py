@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: every paper table/figure + roofline + kernels.
+
+``PYTHONPATH=src python -m benchmarks.run [--only substring]``
+Writes artifacts/bench/results.csv alongside the stdout CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import pathlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.bench_heterogeneity",      # Table 5
+    "benchmarks.bench_selection",          # Table 6
+    "benchmarks.bench_scalability",        # Fig 6
+    "benchmarks.bench_user_distribution",  # Fig 7
+    "benchmarks.bench_node_scaling",       # Fig 8
+    "benchmarks.bench_autoscale",          # Fig 9
+    "benchmarks.bench_fault_tolerance",    # Fig 10
+    "benchmarks.bench_storage",            # Table 7 + Fig 11-13
+    "benchmarks.bench_kernels",            # kernel oracles + pallas equiv
+    "benchmarks.bench_roofline",           # §Roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(modname)
+        rows = mod.run()
+        for name, ms, derived in rows:
+            us = ms * 1e3 if ms == ms else float("nan")   # ms -> us
+            print(f"{name},{us:.1f},{derived}")
+            all_rows.append({"name": name, "us_per_call": us,
+                             "derived": derived})
+        print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    out = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "results.json").write_text(json.dumps(all_rows, indent=1))
+    with open(out / "results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in all_rows:
+            f.write(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}\n")
+
+
+if __name__ == "__main__":
+    main()

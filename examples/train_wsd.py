@@ -1,0 +1,51 @@
+"""Train the MiniCPM-style arch with its WSD schedule + preemption restart.
+
+    PYTHONPATH=src python examples/train_wsd.py
+
+Trains a reduced minicpm-2b for 120 steps, interrupting (preemption) at
+step ~60 and restarting from the checkpoint — the loss curve must continue
+where it left off, and the WSD decay phase must show the LR drop.
+"""
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.config import TrainConfig, reduced
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.train.trainer import Trainer
+
+
+def main():
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=3e-3, schedule="wsd", warmup_steps=10,
+                     stable_steps=90, decay_steps=120, checkpoint_every=20,
+                     remat="none")
+    with tempfile.TemporaryDirectory() as d:
+        t1 = Trainer(model, cfg, tc, batch=8, seq=64, ckpt_dir=d)
+        t1.init_or_restore()
+        t1.interrupt_at = 60
+        # run 60 steps, then simulate preemption
+        m1 = t1.train(60)
+        print(f"[phase1] steps 1-60: loss "
+              f"{m1.steps[0]['loss']:.3f} -> {m1.steps[-1]['loss']:.3f}")
+        t1.ckpt.wait()
+
+        t2 = Trainer(model, cfg, tc, batch=8, seq=64, ckpt_dir=d)
+        start = t2.init_or_restore()
+        print(f"[phase2] restarted from checkpoint step {start} "
+              f"(restarts={t2.metrics.restarts})")
+        m2 = t2.train(120 - start)
+        lrs = [s["lr"] for s in m2.steps]
+        print(f"[phase2] steps {start + 1}-120: loss "
+              f"{m2.steps[0]['loss']:.3f} -> {m2.steps[-1]['loss']:.3f}; "
+              f"WSD lr stable {max(lrs):.1e} -> decayed {lrs[-1]:.1e}")
+        assert m2.steps[-1]["loss"] < m1.steps[0]["loss"]
+        assert lrs[-1] < 0.5 * max(lrs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,349 @@
+"""Configuration schema for the Armada-on-TPU framework.
+
+Every architecture in ``repro.configs`` instantiates :class:`ModelConfig`;
+every dry-run / train / serve entry point consumes (ModelConfig, ShapeConfig,
+MeshConfig).  Configs are frozen dataclasses: hashable, printable, and safe to
+use as jit static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Multi-head (grouped-query) attention hyper-parameters."""
+
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False                 # Qwen3-style per-head RMSNorm on q,k
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()  # Qwen2-VL M-RoPE (t, h, w) splits
+    causal: bool = True
+    window: int = 0                       # sliding window; 0 = full attention
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN block (DeepSeek-MoE fine-grained or classic)."""
+
+    num_experts: int
+    experts_per_token: int
+    d_expert: int                        # per-expert FFN hidden size
+    num_shared_experts: int = 0          # DeepSeek shared experts
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01        # load-balancing aux loss weight
+
+    @property
+    def active_experts(self) -> int:
+        return self.experts_per_token + self.num_shared_experts
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2-style state-space block parameters."""
+
+    state_dim: int = 64      # N: per-head SSM state size
+    head_dim: int = 64       # P: channels per SSM head
+    expand: int = 2          # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256         # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block-stack layout (arXiv:2405.04517)."""
+
+    slstm_every: int = 8       # 1 sLSTM block per this many blocks (rest mLSTM)
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv_width: int = 4
+    num_heads: int = 4
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "encdec", "vlm", "ssm", "hybrid")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: AttentionConfig
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # encoder-decoder (whisper): encoder depth + fixed encoder sequence length
+    num_encoder_layers: int = 0
+    encoder_seq: int = 0
+    encoder_feature_dim: int = 0          # stubbed modality frontend width
+    # hybrid (zamba2): one shared attention block applied every k ssm blocks
+    hybrid_attn_every: int = 0
+    # vlm: number of visual patch embeddings prepended (stub frontend)
+    num_patches: int = 0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    notes: str = ""
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+
+    # -- parameter accounting (used for roofline MODEL_FLOPS = 6 N D) -------
+
+    def _attn_params(self) -> int:
+        a = self.attention
+        qo = self.d_model * a.q_dim * 2          # Wq, Wo
+        kv = self.d_model * a.kv_dim * 2         # Wk, Wv
+        return qo + kv
+
+    def _dense_ffn_params(self) -> int:
+        # SwiGLU: gate, up, down
+        return 3 * self.d_model * self.d_ff
+
+    def _moe_ffn_params(self, active_only: bool) -> int:
+        m = self.moe
+        per_expert = 3 * self.d_model * m.d_expert
+        routed = (m.experts_per_token if active_only else m.num_experts)
+        router = self.d_model * m.num_experts
+        return per_expert * (routed + m.num_shared_experts) + router
+
+    def _ssm_params(self) -> int:
+        s = self.ssm
+        d_in = s.expand * self.d_model
+        nheads = d_in // s.head_dim
+        in_proj = self.d_model * (2 * d_in + 2 * nheads * s.state_dim + nheads)
+        out_proj = d_in * self.d_model
+        conv = (d_in + 2 * nheads * s.state_dim) * s.conv_width
+        return in_proj + out_proj + conv + 2 * nheads  # + A, D
+
+    def _xlstm_params(self) -> int:
+        x = self.xlstm
+        d_in = int(x.mlstm_proj_factor * self.d_model)
+        # mLSTM block: up(2x), block-diagonal per-head q,k,v on d_in, down.
+        mlstm = (self.d_model * 2 * d_in          # up proj (x, gate branches)
+                 + 3 * d_in * (d_in // x.num_heads)  # q,k,v (block-diagonal)
+                 + 2 * d_in                       # i,f gate projections
+                 + d_in * self.d_model)           # down
+        d_ff = int(x.slstm_proj_factor * self.d_model)
+        slstm = (4 * self.d_model * self.d_model           # input gates i,f,z,o
+                 + 4 * self.d_model * (self.d_model // x.num_heads)  # recurrent
+                 + 2 * self.d_model * d_ff)                # post-up/down FFN
+        n_slstm = self.num_layers // x.slstm_every
+        n_mlstm = self.num_layers - n_slstm
+        return n_mlstm * mlstm + n_slstm * slstm
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or active, for MoE) parameter count, excluding embeddings
+        for the per-token FLOP estimate's body term; embeddings counted once."""
+        emb = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            body = self._xlstm_params() if self.xlstm else self._ssm_params() * self.num_layers
+            return emb + body
+        if self.family == "hybrid":
+            ssm_body = self._ssm_params() * self.num_layers
+            n_attn = self.num_layers // max(self.hybrid_attn_every, 1)
+            # zamba2: ONE shared attention+mlp block reused at every site
+            shared = self._attn_params() + self._dense_ffn_params()
+            active_body = ssm_body + n_attn * shared if active_only else ssm_body + shared
+            # active compute re-applies the shared block; stored params count once
+            return emb + (ssm_body + shared if not active_only else active_body)
+        per_layer = self._attn_params()
+        if self.moe is not None:
+            per_layer += self._moe_ffn_params(active_only)
+        else:
+            per_layer += self._dense_ffn_params()
+        dec = self.num_layers * per_layer
+        enc = 0
+        if self.num_encoder_layers:
+            enc_layer = self._attn_params() + self._dense_ffn_params()
+            # decoder additionally has cross-attention
+            dec += self.num_layers * self._attn_params()
+            enc = self.num_encoder_layers * enc_layer
+        return emb + dec + enc
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # no encoder-only archs in this assignment
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason-if-skip) for an (arch, shape) cell — see DESIGN.md §4."""
+    if shape.name == "long_500k" and not model.is_subquadratic:
+        return False, "long_500k needs sub-quadratic attention; %s is full-attention" % model.name
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Mesh / hardware
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    """TPU v5e roofline constants (per chip)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link
+    ici_links: int = 4                # 2D torus: 4 links/chip
+    hbm_bytes: int = 16 * 2**30
+
+
+V5E = HardwareConfig()
+
+
+# ---------------------------------------------------------------------------
+# Training / serving run configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    schedule: str = "cosine"            # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    stable_steps: int = 8_000           # wsd only
+    microbatches: int = 1               # gradient-accumulation chunks
+    remat: str = "full"                 # "none" | "dots" | "full"
+    zero_shard_optimizer: bool = True   # shard Adam states over data axis
+    opt_state_dtype: str = "float32"    # bf16 moments fit 405B on v5e-256
+    accum_dtype: str = "float32"        # microbatch grad-accumulation dtype
+    grad_compression: str = "none"      # "none" | "int8"
+    checkpoint_every: int = 50
+    async_checkpoint: bool = True
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 2048
+    prefill_chunk: int = 512
+    top_n: int = 3                      # Armada candidate-list length
+    probe_period_s: float = 2.0         # client probing period
+    ema_alpha: float = 0.3              # probe latency smoothing
+    kv_page_size: int = 128
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+
+
+def reduced(model: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests (see spec §f)."""
+    a = model.attention
+    small_hd = min(a.head_dim, 32)
+    half = small_hd // 2
+    small_attn = dataclasses.replace(
+        a,
+        num_heads=max(2, min(a.num_heads, 4)),
+        num_kv_heads=max(1, min(a.num_kv_heads, 2)),
+        head_dim=small_hd,
+        mrope_sections=(half - 2 * (half // 4), half // 4, half // 4)
+        if a.mrope_sections else (),
+    )
+    if small_attn.num_heads % max(small_attn.num_kv_heads, 1):
+        small_attn = dataclasses.replace(small_attn, num_kv_heads=small_attn.num_heads)
+    kw = dict(
+        num_layers=min(model.num_layers, 4),
+        d_model=64,
+        d_ff=128 if model.d_ff else 0,
+        vocab_size=256,
+        attention=small_attn,
+        num_encoder_layers=2 if model.num_encoder_layers else 0,
+        encoder_seq=16 if model.encoder_seq else 0,
+        encoder_feature_dim=24 if model.encoder_feature_dim else 0,
+        num_patches=8 if model.num_patches else 0,
+        hybrid_attn_every=2 if model.hybrid_attn_every else 0,
+    )
+    if model.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            model.moe, num_experts=8, experts_per_token=2,
+            d_expert=32, num_shared_experts=min(model.moe.num_shared_experts, 1))
+    if model.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            model.ssm, state_dim=16, head_dim=16, chunk=16)
+    if model.xlstm is not None:
+        kw["xlstm"] = dataclasses.replace(model.xlstm, slstm_every=2, num_heads=2)
+    kw.update(overrides)
+    return dataclasses.replace(model, **kw)

@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published config; ``reduced`` (from
+repro.config) shrinks it for CPU smoke tests.  ``ARCH_IDS`` is the assignment
+order used by the dry-run and roofline table.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig
+
+ARCH_IDS = (
+    "whisper-large-v3",
+    "deepseek-moe-16b",
+    "grok-1-314b",
+    "qwen2-vl-2b",
+    "qwen3-1.7b",
+    "minicpm-2b",
+    "qwen3-14b",
+    "llama3-405b",
+    "xlstm-1.3b",
+    "zamba2-7b",
+    # the paper's own workloads (Armada services), not part of the 40 cells:
+    "armada-detector",
+    "armada-facerec",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def assigned_archs() -> tuple:
+    """The 10 graded architectures (excludes the paper's demo services)."""
+    return ARCH_IDS[:10]

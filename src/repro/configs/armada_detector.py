@@ -1,0 +1,23 @@
+"""armada-detector — the paper's real-time object-detection service (§5.1).
+
+A small vision-transformer-style detector standing in for the paper's
+object-detection model: it is the *service payload* for the Armada control
+plane benchmarks (selection, scalability, fault tolerance).  Sized so a
+jitted forward runs in tens of ms on heterogeneous "edge nodes" — matching
+Table 5's 24-58 ms/frame envelope when scaled by node speed factors.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="armada-detector",
+    family="vlm",
+    num_layers=6,
+    d_model=256,
+    d_ff=1024,
+    vocab_size=128,          # detection classes head
+    attention=AttentionConfig(num_heads=8, num_kv_heads=8, head_dim=32,
+                              causal=False),
+    num_patches=196,         # 14x14 patches per frame (stub frontend)
+    norm_eps=1e-6,
+    notes="paper §5.1 workload; runs really on CPU in benchmarks",
+)

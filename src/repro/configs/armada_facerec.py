@@ -1,0 +1,22 @@
+"""armada-facerec — the paper's face-recognition service (§5.2).
+
+Face-embedding model producing 128-d descriptors (matching the paper's
+<ID (8 bytes), vector (128*8 bytes)> Cargo records), exercising the storage
+layer: read-only / write-only / read-followed-by-write workloads under
+strong vs eventual consistency.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="armada-facerec",
+    family="vlm",
+    num_layers=4,
+    d_model=192,
+    d_ff=768,
+    vocab_size=128,          # descriptor dimension (output head)
+    attention=AttentionConfig(num_heads=6, num_kv_heads=6, head_dim=32,
+                              causal=False),
+    num_patches=64,
+    norm_eps=1e-6,
+    notes="paper §5.2 workload; descriptors stored in Cargo",
+)

@@ -1,0 +1,25 @@
+"""deepseek-moe-16b — fine-grained MoE, 2 shared + 64 routed experts, top-6.
+
+[arXiv:2401.06066] 28 layers, d_model=2048, 16 heads (kv=16), per-expert
+d_ff=1408, vocab=102400.
+"""
+from repro.config import AttentionConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    d_ff=1408,          # per-expert hidden (fine-grained)
+    vocab_size=102400,
+    attention=AttentionConfig(num_heads=16, num_kv_heads=16, head_dim=128),
+    moe=MoEConfig(
+        num_experts=64,
+        experts_per_token=6,
+        d_expert=1408,
+        num_shared_experts=2,
+        capacity_factor=1.25,
+    ),
+    norm_eps=1e-6,
+    notes="fine-grained MoE; all-to-all dispatch is the collective hot spot",
+)

@@ -1,0 +1,25 @@
+"""grok-1-314b — 314B-parameter MoE, 8 experts top-2.
+
+[hf:xai-org/grok-1] 64 layers, d_model=6144, 48 heads (GQA kv=8),
+d_ff=32768 per expert, vocab=131072.
+"""
+from repro.config import AttentionConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    d_ff=32768,
+    vocab_size=131072,
+    attention=AttentionConfig(num_heads=48, num_kv_heads=8, head_dim=128),
+    moe=MoEConfig(
+        num_experts=8,
+        experts_per_token=2,
+        d_expert=32768,
+        num_shared_experts=0,
+        capacity_factor=1.25,
+    ),
+    norm_eps=1e-5,
+    notes="coarse MoE; expert-parallel over the model axis",
+)

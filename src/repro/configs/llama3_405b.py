@@ -1,0 +1,21 @@
+"""llama3-405b — frontier-scale dense decoder.
+
+[arXiv:2407.21783] 126 layers, d_model=16384, 128 heads (GQA kv=8),
+d_ff=53248, vocab=128256.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    d_ff=53248,
+    vocab_size=128256,
+    attention=AttentionConfig(
+        num_heads=128, num_kv_heads=8, head_dim=128,
+        rope_theta=500_000.0,
+    ),
+    norm_eps=1e-5,
+    notes="the memory-pressure stress case: needs ZeRO-3 + microbatching",
+)

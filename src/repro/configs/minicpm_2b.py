@@ -1,0 +1,20 @@
+"""minicpm-2b — llama-like dense decoder trained with the WSD schedule.
+
+[arXiv:2404.06395] 40 layers, d_model=2304, 36 heads (MHA kv=36), d_ff=5760,
+vocab=122753.  The WSD (warmup-stable-decay) schedule lives in
+repro.optim.schedule and is selected by this arch's TrainConfig.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    d_ff=5760,
+    vocab_size=122753,
+    attention=AttentionConfig(num_heads=36, num_kv_heads=36, head_dim=64),
+    tie_embeddings=True,
+    norm_eps=1e-5,
+    notes="WSD schedule (optim/schedule.py); depth-scaled init per paper",
+)

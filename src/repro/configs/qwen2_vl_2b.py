@@ -1,0 +1,26 @@
+"""qwen2-vl-2b — VLM backbone with M-RoPE.
+
+[arXiv:2409.12191] 28 layers, d_model=1536, 12 heads (GQA kv=2), d_ff=8960,
+vocab=151936.  M-RoPE splits head_dim rotary channels into (temporal, height,
+width) sections; the ViT patch frontend is a STUB (precomputed patch
+embeddings prepended to the token stream).
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    d_ff=8960,
+    vocab_size=151936,
+    attention=AttentionConfig(
+        num_heads=12, num_kv_heads=2, head_dim=128,
+        rope_theta=1_000_000.0,
+        mrope_sections=(16, 24, 24),   # t/h/w rotary sections (sum = hd/2)
+    ),
+    num_patches=256,                   # stub visual prefix per request
+    tie_embeddings=True,
+    norm_eps=1e-6,
+    notes="M-RoPE; dynamic-resolution ViT frontend stubbed as patch embeddings",
+)

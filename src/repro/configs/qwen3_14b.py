@@ -1,0 +1,20 @@
+"""qwen3-14b — dense GQA decoder with qk_norm.
+
+[hf:Qwen/Qwen3-14B] 40 layers, d_model=5120, 40 heads (GQA kv=8),
+d_ff=17408, vocab=151936.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    d_ff=17408,
+    vocab_size=151936,
+    attention=AttentionConfig(
+        num_heads=40, num_kv_heads=8, head_dim=128,
+        qk_norm=True, rope_theta=1_000_000.0,
+    ),
+    norm_eps=1e-6,
+)

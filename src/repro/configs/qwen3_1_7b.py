@@ -1,0 +1,21 @@
+"""qwen3-1.7b — dense GQA decoder with qk_norm.
+
+[hf:Qwen/Qwen3-1.7B family] 28 layers, d_model=2048, 16 heads (GQA kv=8),
+d_ff=6144, vocab=151936.
+"""
+from repro.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    num_layers=28,
+    d_model=2048,
+    d_ff=6144,
+    vocab_size=151936,
+    attention=AttentionConfig(
+        num_heads=16, num_kv_heads=8, head_dim=128,
+        qk_norm=True, rope_theta=1_000_000.0,
+    ),
+    tie_embeddings=True,
+    norm_eps=1e-6,
+)

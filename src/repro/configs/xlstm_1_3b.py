@@ -1,0 +1,21 @@
+"""xlstm-1.3b — sLSTM + mLSTM block stack (attention-free).
+
+[arXiv:2405.04517] 48 blocks, d_model=2048, 4 mLSTM heads, vocab=50304,
+d_ff=0 (projection factors live inside the blocks).  Sub-quadratic: runs the
+long_500k shape with O(1) recurrent state.
+"""
+from repro.config import AttentionConfig, ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    d_ff=0,
+    vocab_size=50304,
+    # attention config is unused for compute; kept for uniform head metadata
+    attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=512),
+    xlstm=XLSTMConfig(slstm_every=8, num_heads=4),
+    norm_eps=1e-5,
+    notes="attention-free; Armada session offload stores recurrent state",
+)

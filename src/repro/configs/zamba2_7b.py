@@ -1,0 +1,23 @@
+"""zamba2-7b — Mamba2 backbone with a shared attention block.
+
+[arXiv:2411.15242] 81 blocks, d_model=3584, 32 heads, d_ff=14336,
+vocab=32000, ssm_state=64.  One shared (weight-tied) attention+MLP block is
+applied every ``hybrid_attn_every`` Mamba2 blocks.  Sub-quadratic: runs
+long_500k (Mamba2 state is O(1); the shared-attention decode step is linear
+in cache length).
+"""
+from repro.config import AttentionConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=32000,
+    attention=AttentionConfig(num_heads=32, num_kv_heads=32, head_dim=112),
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=256),
+    hybrid_attn_every=6,
+    norm_eps=1e-5,
+    notes="shared attention block weight-tied across its application sites",
+)

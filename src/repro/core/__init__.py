@@ -1,0 +1,10 @@
+"""Armada control plane: the paper's contribution (§2-§4).
+
+Beacon (entry point) -> Application Manager (registry + auto-scaling) ->
+Spinner (scheduler) -> Captains (compute nodes), plus the Cargo storage
+layer and the client SDK (2-step performance-aware selection,
+multi-connection fault tolerance).  A discrete-event simulator (sim.py)
+provides the WAN latency / churn environment; the served models are real
+JAX programs (repro.serving).
+"""
+from repro.core.sim import Simulator  # noqa: F401

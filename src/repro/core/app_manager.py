@@ -1,0 +1,202 @@
+"""Application Manager (paper §3.2): service lifecycle, the candidate-list
+half of 2-step selection (Algorithm 1), and demand-driven auto-scaling.
+
+Auto-scaling: 3 replicas at deploy time (fault-tolerance floor), then more
+wherever real users concentrate — the AM groups active users by reduced-
+precision geohash and asks Spinner for capacity in overloaded regions.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import geohash
+from repro.core.cluster import Topology
+from repro.core.sim import Simulator
+from repro.core.spinner import Image, Spinner
+
+_NET_AFFINITY = {
+    ("ethernet", "ethernet"): 1.0, ("ethernet", "wifi"): 0.7,
+    ("wifi", "ethernet"): 0.7, ("wifi", "wifi"): 0.6,
+    ("lte", "lte"): 0.5, ("lte", "wifi"): 0.4, ("wifi", "lte"): 0.4,
+    ("lte", "ethernet"): 0.5, ("ethernet", "lte"): 0.5,
+}
+
+
+@dataclass
+class ServiceSpec:
+    service_id: str
+    image: Image
+    workload_scale: float = 1.0            # × node per-frame reference time
+    locations: List[Tuple[float, float]] = field(default_factory=list)
+    need_storage: bool = False
+    storage_capacity_mb: float = 100.0
+    consistency: str = "eventual"          # "strong" | "eventual"
+    data_source: str = "Cloud"
+    min_replicas: int = 3
+
+
+@dataclass
+class Task:
+    task_id: str
+    service_id: str
+    captain: Optional[object] = None
+    status: str = "pending"
+    ready_at: Optional[float] = None
+
+
+class ApplicationManager:
+    def __init__(self, sim: Simulator, topo: Topology, spinner: Spinner,
+                 cargo_manager=None, *, top_n: int = 3,
+                 scale_check_s: float = 2.0,
+                 overload_ratio: float = 1.5):
+        self.sim = sim
+        self.topo = topo
+        self.spinner = spinner
+        self.cargo_manager = cargo_manager
+        self.top_n = top_n
+        self.scale_check_s = scale_check_s
+        self.overload_ratio = overload_ratio
+        self.services: Dict[str, ServiceSpec] = {}
+        self.tasks: Dict[str, List[Task]] = {}
+        self.users: Dict[str, List[object]] = {}
+        self._ids = itertools.count()
+        self.autoscale_enabled = True
+        self.scale_events: List[dict] = []
+
+    # ----------------------------------------------------------- deployment
+
+    def deploy_service(self, spec: ServiceSpec, selection: str = "armada"):
+        self.services[spec.service_id] = spec
+        self.tasks[spec.service_id] = []
+        self.users[spec.service_id] = []
+        locs = spec.locations or [next(iter(
+            self.spinner.captains.values())).spec.loc]
+        for i in range(spec.min_replicas):
+            self._spawn_task(spec, locs[i % len(locs)], selection)
+        if spec.need_storage and self.cargo_manager is not None:
+            self.cargo_manager.store_register(spec)
+        self._schedule_autoscale(spec.service_id)
+
+    def _spawn_task(self, spec: ServiceSpec, location,
+                    selection: str = "armada") -> Optional[Task]:
+        task = Task(f"{spec.service_id}/t{next(self._ids)}", spec.service_id)
+        dt = self.spinner.deploy_task(task, spec.image, location,
+                                      selection=selection,
+                                      on_ready=self._task_ready)
+        if dt is None:
+            return None
+        self.tasks[spec.service_id].append(task)
+        return task
+
+    def _task_ready(self, task: Task):
+        self.sim.log("task_ready", task=task.task_id,
+                     node=task.captain.node_id)
+        # storage layer follows compute expansion (paper §3.4 auto-scaling)
+        spec = self.services[task.service_id]
+        if spec.need_storage and self.cargo_manager is not None:
+            self.cargo_manager.on_new_task(spec, task)
+
+    # ----------------------------------------------- service discovery (Alg 1)
+
+    def candidate_list(self, service_id: str, user_loc, user_net: str,
+                       top_n: Optional[int] = None) -> List[Task]:
+        """Step 1 of 2-step selection: score nearby running replicas."""
+        running = [t for t in self.tasks.get(service_id, ())
+                   if t.status == "running" and t.captain is not None
+                   and t.captain.alive]
+        if not running:
+            return []
+        items = [(t.task_id, t.captain.spec.loc) for t in running]
+        local_ids = set(geohash.proximity_search(user_loc, items,
+                                                 precision=4))
+        local = [t for t in running if t.task_id in local_ids] or running
+        w1, w2, w3 = 0.5, 0.2, 0.3
+
+        def score(t: Task) -> float:
+            c = t.captain
+            resources = c.free_fraction()
+            aff = _NET_AFFINITY.get((c.spec.net_type, user_net), 0.5)
+            d = geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
+                                    user_loc[0], user_loc[1])
+            prox = 1.0 / (1.0 + d / 10.0)
+            return w1 * resources + w2 * aff + w3 * prox
+
+        local.sort(key=score, reverse=True)
+        return local[:top_n or self.top_n]
+
+    # -------------------------------------------------------------- users
+
+    def user_join(self, service_id: str, client):
+        self.users[service_id].append(client)
+
+    def user_leave(self, service_id: str, client):
+        if client in self.users.get(service_id, ()):
+            self.users[service_id].remove(client)
+
+    # ---------------------------------------------------------- auto-scaling
+
+    def _schedule_autoscale(self, service_id: str):
+        self.sim.after(self.scale_check_s * 1000.0, self._autoscale_tick,
+                       service_id)
+
+    def _autoscale_tick(self, service_id: str):
+        if service_id not in self.services:
+            return
+        if self.autoscale_enabled:
+            self._autoscale(service_id)
+        self._schedule_autoscale(service_id)
+
+    def _capacity(self, tasks: List[Task]) -> int:
+        seen, cap = set(), 0
+        for t in tasks:
+            if t.captain and t.captain.alive and t.status == "running" \
+                    and t.captain.node_id not in seen:
+                seen.add(t.captain.node_id)
+                cap += t.captain.spec.slots
+            elif t.status == "deploying":
+                cap += 1                      # in-flight capacity
+        return cap
+
+    def _autoscale(self, service_id: str):
+        spec = self.services[service_id]
+        clients = self.users.get(service_id, ())
+        if not clients:
+            return
+        # group active users by coarse geohash region
+        regions: Dict[str, List] = {}
+        for c in clients:
+            gh = geohash.encode(*c.loc, precision=3)
+            regions.setdefault(gh, []).append(c)
+        for gh, users in regions.items():
+            tasks_here = [
+                t for t in self.tasks[service_id]
+                if t.captain is not None and t.status in
+                ("running", "deploying")
+                and geohash.encode(*t.captain.spec.loc, precision=3) == gh]
+            cap = self._capacity(tasks_here) or 1e-9
+            if len(users) / cap > self.overload_ratio:
+                centroid = (
+                    sum(u.loc[0] for u in users) / len(users),
+                    sum(u.loc[1] for u in users) / len(users))
+                t = self._spawn_task(spec, centroid)
+                if t is not None:
+                    self.scale_events.append(
+                        {"t": self.sim.now, "service": service_id,
+                         "region": gh, "users": len(users), "cap": cap})
+                    self.sim.log("autoscale_up", service=service_id,
+                                 region=gh)
+
+    # ------------------------------------------------------------ shrink
+
+    def scale_down(self, service_id: str):
+        spec = self.services[service_id]
+        tasks = [t for t in self.tasks[service_id] if t.status == "running"]
+        if len(tasks) <= spec.min_replicas:
+            return
+        idle = [t for t in tasks if t.captain.load() == 0]
+        if idle:
+            victim = idle[-1]
+            self.spinner.cancel_task(victim)
+            self.sim.log("autoscale_down", task=victim.task_id)

@@ -1,0 +1,113 @@
+"""Beacon (paper §3.1): the global entry point, plus system assembly.
+
+``ArmadaSystem`` wires Simulator + Topology + Spinner + ApplicationManager
++ CargoManager and exposes the three interaction surfaces the paper gives
+Beacon: application deployment, user service discovery, and resource
+registration.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.app_manager import ApplicationManager, ServiceSpec
+from repro.core.captain import Captain
+from repro.core.client import Client
+from repro.core.cluster import Topology
+from repro.core.sim import Simulator
+from repro.core.spinner import Image, Spinner
+from repro.core.storage.cargo import Cargo
+from repro.core.storage.cargo_manager import CargoManager
+
+
+class Beacon:
+    """Request router: forwards to the right handler component."""
+
+    def __init__(self, am: ApplicationManager, spinner: Spinner,
+                 cargo_manager: CargoManager):
+        self.am = am
+        self.spinner = spinner
+        self.cargo_manager = cargo_manager
+
+    # the three public surfaces (paper §3.1)
+    def deploy_application(self, spec: ServiceSpec, **kw):
+        return self.am.deploy_service(spec, **kw)
+
+    def query_service(self, service_id: str, user_loc, user_net: str):
+        return self.am.candidate_list(service_id, user_loc, user_net)
+
+    def register_node(self, captain: Captain, runtime: str = "armada"):
+        return self.spinner.captain_join(captain, runtime)
+
+    def register_cargo(self, cargo: Cargo):
+        return self.cargo_manager.cargo_join(cargo)
+
+
+class ArmadaSystem:
+    """Fully wired Armada instance over a Topology."""
+
+    def __init__(self, topo: Topology, *, seed: int = 0,
+                 compute_nodes: Optional[List[str]] = None,
+                 cargo_nodes: Optional[List[str]] = None,
+                 include_cloud_compute: bool = True):
+        self.sim = Simulator(seed=seed)
+        self.topo = topo
+        self.spinner = Spinner(self.sim, topo)
+        self.cargo_manager = CargoManager(self.sim, topo)
+        self.am = ApplicationManager(self.sim, topo, self.spinner,
+                                     self.cargo_manager)
+        self.beacon = Beacon(self.am, self.spinner, self.cargo_manager)
+        self.captains: Dict[str, Captain] = {}
+        self.cargos: Dict[str, Cargo] = {}
+
+        names = compute_nodes if compute_nodes is not None else [
+            n for n, s in topo.nodes.items() if s.proc_ms > 0]
+        for name in names:
+            spec = topo.nodes[name]
+            if spec.is_cloud and not include_cloud_compute:
+                continue
+            cap = Captain(self.sim, topo, spec)
+            self.captains[name] = cap
+            self.beacon.register_node(cap)
+        for name in (cargo_nodes or []):
+            cg = Cargo(self.sim, topo, topo.nodes[name])
+            self.cargos[name] = cg
+            self.beacon.register_cargo(cg)
+
+    # ------------------------------------------------------------- helpers
+
+    def make_client(self, client_id: str, service_id: str, **kw) -> Client:
+        return Client(self.sim, self.topo, self.am, client_id, service_id,
+                      **kw)
+
+    def ensure_cloud_replica(self, service_id: str):
+        """The paper's cloud baseline assumes an always-available cloud
+        deployment; Armada's own scheduler never places on the cloud."""
+        from repro.core.app_manager import Task
+        cloud = next((c for c in self.captains.values()
+                      if c.spec.is_cloud), None)
+        if cloud is None:
+            return None
+        task = Task(f"{service_id}/cloud", service_id, captain=cloud,
+                    status="running", ready_at=self.sim.now)
+        cloud.tasks[task.task_id] = task
+        self.am.tasks[service_id].append(task)
+        return task
+
+    def fail_node(self, name: str, at_ms: float):
+        self.sim.at(at_ms, self.captains[name].fail)
+
+    def fail_cargo(self, name: str, at_ms: float):
+        self.sim.at(at_ms, self.cargos[name].fail)
+
+
+def detection_image() -> Image:
+    """The paper's object-detection service image (~480 MB, 6 layers)."""
+    return Image("detector", [("base", 120.0), ("cuda-lite", 140.0),
+                              ("py", 60.0), ("deps", 90.0),
+                              ("weights", 60.0), ("app", 10.0)])
+
+
+def facerec_image() -> Image:
+    return Image("facerec", [("base", 120.0), ("py", 60.0),
+                             ("dlib", 110.0), ("weights", 45.0),
+                             ("app", 10.0)])

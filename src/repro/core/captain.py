@@ -1,0 +1,102 @@
+"""Captain: an Armada edge compute node (paper §3.3.2).
+
+Hosts service replicas (tasks), processes offloaded frames through a
+``slots``-server queue, reports load/layers via heartbeats, and notifies
+warm-connected clients on failure (the multi-connection strategy's break
+signal).  Processing time = node's per-frame speed × service workload scale
+× jitter — calibrated against the real jitted models in
+benchmarks/bench_heterogeneity.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.cluster import NodeSpec, Topology
+from repro.core.sim import Simulator
+
+
+@dataclass
+class Request:
+    client: "object"              # repro.core.client.Client
+    task_id: str
+    sent_at: float
+    rtt: float
+    node_id: str = ""
+    proc_scale: float = 1.0
+    is_probe: bool = False
+    on_done: Optional[Callable] = None
+    storage_ops: int = 0          # cargo reads/writes piggybacked (facerec)
+
+
+class Captain:
+    def __init__(self, sim: Simulator, topo: Topology, spec: NodeSpec):
+        self.sim = sim
+        self.topo = topo
+        self.spec = spec
+        self.node_id = spec.node_id
+        self.alive = True
+        self.tasks: Dict[str, "object"] = {}         # task_id -> Task
+        self.connections: Set[object] = set()
+        self.queue: List[Request] = []
+        self.busy = 0
+        self.processed = 0
+        self.registered_at: Optional[float] = None
+
+    # ------------------------------------------------------------- status
+
+    def load(self) -> float:
+        return (self.busy + len(self.queue)) / max(self.spec.slots, 1)
+
+    def free_fraction(self) -> float:
+        return max(0.0, 1.0 - self.load())
+
+    def heartbeat(self) -> Dict:
+        return {"node": self.node_id, "load": self.load(),
+                "layers": set(self.spec.layers), "alive": self.alive,
+                "tasks": list(self.tasks)}
+
+    # ------------------------------------------------------------ serving
+
+    def arrive(self, req: Request):
+        if not self.alive:
+            return                       # connection break handles clients
+        if self.busy < self.spec.slots:
+            self._start(req)
+        else:
+            self.queue.append(req)
+
+    def _start(self, req: Request):
+        self.busy += 1
+        proc = self.sim.jitter(self.spec.proc_ms * req.proc_scale, 0.06)
+        self.sim.after(max(proc, 0.1), self._finish, req)
+
+    def _finish(self, req: Request):
+        if not self.alive:
+            return
+        self.busy -= 1
+        self.processed += 1
+        if self.queue:
+            self._start(self.queue.pop(0))
+        back = self.sim.jitter(req.rtt / 2, 0.08)
+        if req.on_done is not None:
+            self.sim.after(back, req.on_done, req)
+
+    # ------------------------------------------------------------ failure
+
+    def fail(self):
+        """Node churn: volunteer leaves / crashes. Warm connections break
+        immediately (the paper's zero-downtime switch signal)."""
+        if not self.alive:
+            return
+        self.alive = False
+        self.queue.clear()
+        self.busy = 0
+        self.sim.log("node_fail", node=self.node_id)
+        for client in list(self.connections):
+            self.sim.after(0.1, client.on_connection_break, self.node_id)
+        self.connections.clear()
+
+    def recover(self):
+        self.alive = True
+        self.sim.log("node_recover", node=self.node_id)

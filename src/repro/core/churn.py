@@ -1,0 +1,172 @@
+"""Online churn analysis + stability-aware scheduling (beyond-paper).
+
+The paper's stated next step (§8): "carry out an online churn analysis to
+quantify the volunteer node stability, which will play an essential part
+in the placement process."  This module implements it:
+
+* ``ChurnModel`` drives volunteer node failures/recoveries in the
+  simulator from per-node exponential lifetime distributions (dedicated
+  nodes get ~20× the volunteer MTTF).
+* ``StabilityTracker`` observes join/leave events ONLINE and maintains a
+  per-node stability score — the posterior-mean availability of an
+  exponential up/down process with a Beta(2,1) prior (new nodes start
+  optimistic-but-uncertain, exactly the paper's "quantify volunteer
+  stability" need).
+* ``stability_policy`` plugs the score into Spinner as a weighted sorting
+  policy, so replicas of latency-critical services prefer stable nodes —
+  measurably fewer failovers per client at equal latency
+  (tests/test_churn.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.captain import Captain
+from repro.core.sim import Simulator
+from repro.core.spinner import SchedulePolicy, Spinner
+
+
+@dataclass
+class NodeChurnStats:
+    joins: int = 0
+    leaves: int = 0
+    up_ms: float = 0.0
+    down_ms: float = 0.0
+    last_change: float = 0.0
+    up_now: bool = True
+
+
+class StabilityTracker:
+    """Online availability estimation from observed churn events."""
+
+    def __init__(self, sim: Simulator, prior_up: float = 2.0,
+                 prior_down: float = 1.0):
+        self.sim = sim
+        self.stats: Dict[str, NodeChurnStats] = {}
+        self.prior_up = prior_up
+        self.prior_down = prior_down
+
+    def _get(self, node: str) -> NodeChurnStats:
+        if node not in self.stats:
+            self.stats[node] = NodeChurnStats(last_change=self.sim.now)
+        return self.stats[node]
+
+    def on_join(self, node: str):
+        s = self._get(node)
+        if not s.up_now:
+            s.down_ms += self.sim.now - s.last_change
+        s.joins += 1
+        s.up_now = True
+        s.last_change = self.sim.now
+
+    def on_leave(self, node: str):
+        s = self._get(node)
+        if s.up_now:
+            s.up_ms += self.sim.now - s.last_change
+        s.leaves += 1
+        s.up_now = False
+        s.last_change = self.sim.now
+
+    def availability(self, node: str) -> float:
+        """Posterior-mean availability in [0, 1]; optimistic prior."""
+        s = self.stats.get(node)
+        if s is None:
+            return self.prior_up / (self.prior_up + self.prior_down)
+        up = s.up_ms + (self.sim.now - s.last_change if s.up_now else 0.0)
+        down = s.down_ms + (0.0 if s.up_now else
+                            self.sim.now - s.last_change)
+        # scale observations to pseudo-counts (1 count per 10 s observed)
+        k_up = up / 10_000.0 + self.prior_up
+        k_down = down / 10_000.0 + self.prior_down
+        # each leave event is strong evidence of instability
+        k_down += (s.leaves if s else 0)
+        return k_up / (k_up + k_down)
+
+    def mttf_ms(self, node: str) -> Optional[float]:
+        """Observed mean-time-to-failure, if any failures were seen."""
+        s = self.stats.get(node)
+        if not s or s.leaves == 0:
+            return None
+        up = s.up_ms + (self.sim.now - s.last_change if s.up_now else 0.0)
+        return up / s.leaves
+
+
+def stability_policy(tracker: StabilityTracker,
+                     weight: float = 0.35) -> SchedulePolicy:
+    """Spinner sorting policy: prefer nodes with high posterior
+    availability (paper §3.3.1 'customized' policy slot)."""
+    return SchedulePolicy(
+        "stability",
+        lambda captain, ctx: tracker.availability(captain.node_id),
+        weight)
+
+
+class ChurnModel:
+    """Exponential up/down process per node, driven in virtual time."""
+
+    def __init__(self, sim: Simulator, captains: Dict[str, Captain],
+                 tracker: Optional[StabilityTracker] = None, *,
+                 volunteer_mttf_ms: float = 60_000.0,
+                 dedicated_mttf_ms: float = 1_200_000.0,
+                 mttr_ms: float = 20_000.0,
+                 unstable: tuple = ()):
+        self.sim = sim
+        self.captains = captains
+        self.tracker = tracker
+        self.volunteer_mttf = volunteer_mttf_ms
+        self.dedicated_mttf = dedicated_mttf_ms
+        self.mttr = mttr_ms
+        self.unstable = set(unstable)
+        self.events: List[dict] = []
+
+    def _mttf(self, cap: Captain) -> float:
+        base = self.dedicated_mttf if cap.spec.dedicated else \
+            self.volunteer_mttf
+        if cap.node_id in self.unstable:
+            base *= 0.25
+        return base
+
+    def start(self):
+        for cap in self.captains.values():
+            if cap.spec.is_cloud:
+                continue
+            self._schedule_failure(cap)
+
+    def _schedule_failure(self, cap: Captain):
+        dt = float(self.sim.rng.exponential(self._mttf(cap)))
+        self.sim.after(dt, self._fail, cap)
+
+    def _fail(self, cap: Captain):
+        if not cap.alive:
+            return
+        cap.fail()
+        self.events.append({"t": self.sim.now, "node": cap.node_id,
+                            "kind": "leave"})
+        if self.tracker:
+            self.tracker.on_leave(cap.node_id)
+        self.sim.after(float(self.sim.rng.exponential(self.mttr)),
+                       self._recover, cap)
+
+    def _recover(self, cap: Captain):
+        cap.recover()
+        self.events.append({"t": self.sim.now, "node": cap.node_id,
+                            "kind": "join"})
+        if self.tracker:
+            self.tracker.on_join(cap.node_id)
+        self._schedule_failure(cap)
+
+
+def data_locality_policy(cargo_manager, service_id: str,
+                         topo, weight: float = 0.3) -> SchedulePolicy:
+    """Paper §3.3.1 'customized' policy: data-dependent workloads prefer
+    Captains near the service's Cargo replicas (pairs with
+    CargoManager.cargo_discover on the read path)."""
+    def score(captain, ctx) -> float:
+        reps = [c for c in cargo_manager.placements.get(service_id, ())
+                if c.alive]
+        if not reps:
+            return 0.5
+        best = min(topo.rtt(captain.node_id, c.node_id) for c in reps)
+        return 1.0 / (1.0 + best / 20.0)
+    return SchedulePolicy("data_locality", score, weight)

@@ -1,0 +1,254 @@
+"""Armada client SDK (paper §4): 2-step selection + multi-connection FT.
+
+Step 2 of service selection happens HERE: the client probes every candidate
+with a real (small) request and keeps an EMA of end-to-end latency per
+candidate.  The best candidate serves the workload; probing repeats
+periodically and asynchronously, so overload and churn show up in the EMAs
+and trigger switches.  All TopN connections stay warm — on a connection
+break the client flips to the second-best candidate with zero downtime.
+
+``mode`` selects the paper's baselines:
+  armada      2-step selection + probing + failover (the system)
+  geo         always the geographically closest node
+  dedicated   dedicated nodes only (D6/A/B/C), probing within them
+  cloud       cloud only
+  reconnect   armada selection, but on failure waits + re-queries (Fig 10a)
+  edge2cloud  armada selection, but fails over to cloud (Fig 10b)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import geohash
+from repro.core.app_manager import ApplicationManager, Task
+from repro.core.captain import Request
+from repro.core.cluster import Topology
+from repro.core.sim import Simulator
+
+RECONNECT_DELAY_MS = 2000.0
+
+
+@dataclass
+class LatencySample:
+    t: float
+    ms: float
+    node: str
+    is_probe: bool = False
+
+
+class Client:
+    def __init__(self, sim: Simulator, topo: Topology,
+                 am: ApplicationManager, client_id: str, service_id: str,
+                 *, mode: str = "armada", frame_interval_ms: float = 0.0,
+                 probe_period_ms: float = 2000.0, ema_alpha: float = 0.4,
+                 switch_margin: float = 0.95, workload_scale: float = 1.0,
+                 proc_scale_override: Optional[float] = None):
+        self.sim = sim
+        self.topo = topo
+        self.am = am
+        self.client_id = client_id
+        self.service_id = service_id
+        self.mode = mode
+        self.loc = topo.nodes[client_id].loc
+        self.net = topo.nodes[client_id].net_type
+        self.frame_interval = frame_interval_ms
+        self.probe_period = probe_period_ms
+        self.alpha = ema_alpha
+        self.switch_margin = switch_margin
+        self.workload_scale = workload_scale
+
+        self.candidates: List[Task] = []
+        self.ema: Dict[str, float] = {}
+        self.active: Optional[Task] = None
+        self.running = False
+        self.samples: List[LatencySample] = []
+        self.switches: List[dict] = []
+        self.downtime_until = 0.0
+        self._pending_switch: Optional[str] = None   # two-round confirmation
+
+    # ------------------------------------------------------------- control
+
+    def start(self):
+        self.running = True
+        self.am.user_join(self.service_id, self)
+        self._refresh_candidates(initial=True)
+
+    def stop(self):
+        self.running = False
+        self.am.user_leave(self.service_id, self)
+        for t in self.candidates:
+            if t.captain is not None:
+                t.captain.connections.discard(self)
+
+    # -------------------------------------------------- candidate handling
+
+    def _task_node(self, t: Task) -> str:
+        return t.captain.node_id
+
+    def _refresh_candidates(self, initial: bool = False):
+        if not self.running:
+            return
+        # mode baselines filter the WIDE list, then trim to TopN — otherwise
+        # a "dedicated-only" client would leak onto volunteer nodes
+        wide = self.am.candidate_list(self.service_id, self.loc, self.net,
+                                      top_n=64)
+        cands = self._apply_mode_filter(wide)[:self.am.top_n]
+        # keep warm connections to every candidate
+        for t in self.candidates:
+            if t not in cands and t.captain is not None:
+                t.captain.connections.discard(self)
+        for t in cands:
+            if t.captain is not None:
+                t.captain.connections.add(self)
+        self.candidates = cands
+        if not cands:
+            self.sim.after(500.0, self._refresh_candidates)
+            return
+        # step 2: probe every candidate
+        for t in cands:
+            self._send(t, is_probe=True)
+        if initial:
+            # pick provisional best by RTT until probes return
+            self.active = min(
+                cands, key=lambda t: self.topo.rtt(self.client_id,
+                                                   self._task_node(t)))
+            self._send_frame()
+            self.sim.after(self.probe_period, self._probe_tick)
+
+    def _apply_mode_filter(self, cands: List[Task]) -> List[Task]:
+        if self.mode == "geo":
+            if not cands:
+                return cands
+            best = min(cands, key=lambda t: geohash.distance_km(
+                *t.captain.spec.loc, *self.loc))
+            return [best]
+        if self.mode == "dedicated":
+            ded = [t for t in cands if t.captain.spec.dedicated
+                   and not t.captain.spec.is_cloud]
+            return ded or cands
+        if self.mode == "cloud":
+            cl = [t for t in cands if t.captain.spec.is_cloud]
+            return cl
+        return cands
+
+    def _probe_tick(self):
+        if not self.running:
+            return
+        self._refresh_candidates()
+        self._maybe_switch()
+        self.sim.after(self.probe_period, self._probe_tick)
+
+    def _maybe_switch(self):
+        """Switch to a better candidate only when it beats the active EMA
+        by the margin on TWO consecutive probe rounds — damps the herd
+        oscillation naive probing causes after mass failures."""
+        if not self.candidates:
+            return
+        known = [t for t in self.candidates
+                 if self._task_node(t) in self.ema]
+        if not known or self.active is None:
+            return
+        best = min(known, key=lambda t: self.ema[self._task_node(t)])
+        cur = self._task_node(self.active)
+        better = (best is not self.active and cur in self.ema
+                  and self.ema[self._task_node(best)]
+                  < self.switch_margin * self.ema[cur])
+        if not better:
+            self._pending_switch = None
+            return
+        if self._pending_switch != self._task_node(best):
+            self._pending_switch = self._task_node(best)
+            return
+        self.switches.append({"t": self.sim.now, "from": cur,
+                              "to": self._task_node(best)})
+        self.active = best
+        self._pending_switch = None
+
+    # ------------------------------------------------------------ traffic
+
+    def _send(self, task: Task, is_probe: bool):
+        if task.captain is None or not task.captain.alive:
+            return
+        node = task.captain.node_id
+        rtt = self.sim.jitter(self.topo.rtt(self.client_id, node), 0.08)
+        req = Request(client=self, task_id=task.task_id,
+                      sent_at=self.sim.now, rtt=rtt, node_id=node,
+                      proc_scale=self.workload_scale, is_probe=is_probe,
+                      on_done=self._on_response)
+        self.sim.after(rtt / 2, task.captain.arrive, req)
+
+    def _send_frame(self):
+        if not self.running or self.active is None:
+            return
+        self._send(self.active, is_probe=False)
+
+    def _on_response(self, req: Request):
+        if not self.running:
+            return
+        ms = self.sim.now - req.sent_at
+        node = req.node_id
+        prev = self.ema.get(node)
+        self.ema[node] = ms if prev is None else \
+            self.alpha * ms + (1 - self.alpha) * prev
+        if req.is_probe:
+            self.samples.append(LatencySample(self.sim.now, ms, node, True))
+            return
+        self.samples.append(LatencySample(self.sim.now, ms, node))
+        if self.frame_interval > 0:
+            self.sim.after(self.frame_interval, self._send_frame)
+        else:
+            self._send_frame()
+
+    # ------------------------------------------------------- fault handling
+
+    def on_connection_break(self, node_id: str):
+        """A warm connection broke (node failed/left)."""
+        if not self.running:
+            return
+        self.ema.pop(node_id, None)
+        dead = [t for t in self.candidates
+                if t.captain is None or not t.captain.alive]
+        for t in dead:
+            self.candidates.remove(t)
+        active_died = (self.active is None or self.active.captain is None
+                       or not self.active.captain.alive)
+        if not active_died:
+            return
+        if self.mode == "reconnect":
+            # baseline: tear down, wait, re-query the control plane
+            self.active = None
+            self.downtime_until = self.sim.now + RECONNECT_DELAY_MS
+
+            def _reconnect():
+                self._refresh_candidates()
+                if self.candidates:
+                    self.active = self.candidates[0]
+                    self._send_frame()
+            self.sim.after(RECONNECT_DELAY_MS, _reconnect)
+            return
+        if self.mode == "edge2cloud":
+            cloud = [t for t in self.am.tasks[self.service_id]
+                     if t.status == "running" and t.captain is not None
+                     and t.captain.spec.is_cloud]
+            if cloud:
+                self.active = cloud[0]
+                cloud[0].captain.connections.add(self)
+                self._send_frame()
+                return
+        # armada: instant switch to the best remaining warm candidate
+        if self.candidates:
+            known = [t for t in self.candidates
+                     if self._task_node(t) in self.ema]
+            self.active = min(
+                known, key=lambda t: self.ema[self._task_node(t)]) \
+                if known else self.candidates[0]
+            self._send_frame()            # zero downtime: next frame flows
+        else:
+            self._refresh_candidates(initial=True)
+
+    # ------------------------------------------------------------- metrics
+
+    def mean_latency(self, since: float = 0.0) -> float:
+        xs = [s.ms for s in self.samples if not s.is_probe and s.t >= since]
+        return sum(xs) / len(xs) if xs else float("nan")

@@ -1,0 +1,109 @@
+"""GeoHash (paper §3.2, [14]): locality encoding for proximity search.
+
+``geoProximitySearch`` uses *reduced precision* on purpose — the paper
+widens the geographic cell so farther-but-faster nodes stay in the
+candidate list in heterogeneous environments.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+_BASE32 = "0123456789bcdefghjkmnpqrstuvwxyz"
+_DECODE = {c: i for i, c in enumerate(_BASE32)}
+
+
+def encode(lat: float, lon: float, precision: int = 9) -> str:
+    lat_lo, lat_hi = -90.0, 90.0
+    lon_lo, lon_hi = -180.0, 180.0
+    bits = []
+    even = True
+    while len(bits) < precision * 5:
+        if even:
+            mid = (lon_lo + lon_hi) / 2
+            if lon >= mid:
+                bits.append(1)
+                lon_lo = mid
+            else:
+                bits.append(0)
+                lon_hi = mid
+        else:
+            mid = (lat_lo + lat_hi) / 2
+            if lat >= mid:
+                bits.append(1)
+                lat_lo = mid
+            else:
+                bits.append(0)
+                lat_hi = mid
+        even = not even
+    chars = []
+    for i in range(0, len(bits), 5):
+        n = 0
+        for b in bits[i:i + 5]:
+            n = (n << 1) | b
+        chars.append(_BASE32[n])
+    return "".join(chars)
+
+
+def decode(gh: str) -> Tuple[float, float, float, float]:
+    """-> (lat, lon, lat_err, lon_err): cell center and half-sizes."""
+    lat_lo, lat_hi = -90.0, 90.0
+    lon_lo, lon_hi = -180.0, 180.0
+    even = True
+    for c in gh:
+        n = _DECODE[c]
+        for shift in range(4, -1, -1):
+            bit = (n >> shift) & 1
+            if even:
+                mid = (lon_lo + lon_hi) / 2
+                if bit:
+                    lon_lo = mid
+                else:
+                    lon_hi = mid
+            else:
+                mid = (lat_lo + lat_hi) / 2
+                if bit:
+                    lat_lo = mid
+                else:
+                    lat_hi = mid
+            even = not even
+    return ((lat_lo + lat_hi) / 2, (lon_lo + lon_hi) / 2,
+            (lat_hi - lat_lo) / 2, (lon_hi - lon_lo) / 2)
+
+
+def common_prefix(a: str, b: str) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def distance_km(lat1, lon1, lat2, lon2) -> float:
+    """Haversine."""
+    r = 6371.0
+    p1, p2 = math.radians(lat1), math.radians(lat2)
+    dp = math.radians(lat2 - lat1)
+    dl = math.radians(lon2 - lon1)
+    a = (math.sin(dp / 2) ** 2
+         + math.cos(p1) * math.cos(p2) * math.sin(dl / 2) ** 2)
+    return 2 * r * math.asin(math.sqrt(a))
+
+
+def proximity_search(origin: Tuple[float, float],
+                     items: List[Tuple[str, Tuple[float, float]]],
+                     precision: int = 4, min_hits: int = 4) -> List[str]:
+    """IDs whose reduced-precision geohash cell matches the origin's.
+
+    The precision is *reduced* until at least ``min_hits`` candidates are in
+    the cell (paper: 'apply GeoHash with less precision ... so relatively
+    far-away edge nodes will be evaluated in the same way as closer edge
+    nodes to avoid excluding better-performing options')."""
+    og = encode(*origin, precision=9)
+    for p in range(precision, 0, -1):
+        hits = [i for i, loc in items
+                if common_prefix(encode(*loc, precision=9), og) >= p]
+        if len(hits) >= min(min_hits, len(items)):
+            return hits
+    return [i for i, _ in items]

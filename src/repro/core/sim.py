@@ -1,0 +1,71 @@
+"""Discrete-event simulator: virtual clock, event heap, seeded RNG.
+
+The paper's experiments run 5-15 users against 3-7 nodes for minutes of
+wall time; the simulator reproduces them in milliseconds, deterministically.
+Latencies are virtual; the *compute* latencies are calibrated against real
+jitted step times of the service models (benchmarks/bench_heterogeneity.py).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable = field(compare=False)
+    args: tuple = field(compare=False, default=())
+    cancelled: bool = field(compare=False, default=False)
+
+
+class Simulator:
+    def __init__(self, seed: int = 0):
+        self.now = 0.0
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self.rng = np.random.default_rng(seed)
+        self.trace: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------- events
+
+    def at(self, t: float, fn: Callable, *args) -> _Event:
+        assert t >= self.now - 1e-9, (t, self.now)
+        ev = _Event(t, next(self._seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def after(self, dt: float, fn: Callable, *args) -> _Event:
+        return self.at(self.now + dt, fn, *args)
+
+    def cancel(self, ev: _Event):
+        ev.cancelled = True
+
+    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            if until is not None and self._heap[0].time > until:
+                break
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.now = ev.time
+            ev.fn(*ev.args)
+            n += 1
+        if until is not None:
+            self.now = max(self.now, until)
+        return n
+
+    # -------------------------------------------------------------- trace
+
+    def log(self, kind: str, **kw):
+        self.trace.append({"t": self.now, "kind": kind, **kw})
+
+    def jitter(self, base: float, frac: float = 0.1) -> float:
+        """Multiplicative noise around ``base`` (deterministic via rng)."""
+        return float(base * (1.0 + frac * self.rng.standard_normal()))

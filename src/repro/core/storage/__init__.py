@@ -1,0 +1,3 @@
+"""Armada storage layer: Cargo nodes + Cargo manager (paper §3.4)."""
+from repro.core.storage.cargo import Cargo  # noqa: F401
+from repro.core.storage.cargo_manager import CargoManager  # noqa: F401

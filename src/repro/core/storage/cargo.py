@@ -1,0 +1,117 @@
+"""Cargo: an Armada edge storage node (paper §3.4.2).
+
+Holds replicated key-value stores per service (face descriptors:
+<ID 8 bytes, 128×8-byte vector>), serves reads/writes with network+lookup
+latency, and propagates updates to its replica peers in a cascade.
+Consistency:
+
+* strong   — a write acks only after ALL replicas applied it (the
+             synchronous fan-out makes loosely-coupled volunteers slow,
+             Fig. 12b)
+* eventual — a write acks after the local apply; propagation cascades
+             asynchronously (Fig. 13)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cluster import NodeSpec, Topology
+from repro.core.sim import Simulator
+
+LOOKUP_MS = 2.0          # descriptor match against 1000-entry store
+WRITE_MS = 1.5
+RECORD_BYTES = 8 + 128 * 8
+
+
+class Cargo:
+    def __init__(self, sim: Simulator, topo: Topology, spec: NodeSpec):
+        self.sim = sim
+        self.topo = topo
+        self.spec = spec
+        self.node_id = spec.node_id
+        self.alive = True
+        self.stores: Dict[str, Dict[str, bytes]] = {}
+        self.peers: Dict[str, List["Cargo"]] = {}     # per-service replicas
+        self.used_mb: float = 0.0
+
+    # ------------------------------------------------------------- control
+
+    def provision(self, service_id: str, peers: List["Cargo"],
+                  initial: Optional[Dict[str, bytes]] = None):
+        self.stores[service_id] = dict(initial or {})
+        self.peers[service_id] = [p for p in peers if p is not self]
+        self.used_mb += len(self.stores[service_id]) * RECORD_BYTES / 1e6
+
+    def fail(self):
+        self.alive = False
+        self.sim.log("cargo_fail", node=self.node_id)
+
+    # ---------------------------------------------------------------- I/O
+
+    def read(self, service_id: str, key: str, requester_id: str,
+             on_done: Callable):
+        """Latency = RTT + lookup.  on_done(value, ms)."""
+        rtt = self.sim.jitter(self.topo.rtt(requester_id, self.node_id), 0.08)
+        t0 = self.sim.now
+
+        def _lookup():
+            if not self.alive:
+                return
+            val = self.stores.get(service_id, {}).get(key)
+            self.sim.after(rtt / 2, lambda: on_done(val, self.sim.now - t0))
+
+        self.sim.after(rtt / 2 + self.sim.jitter(LOOKUP_MS, 0.2), _lookup)
+
+    def write(self, service_id: str, key: str, value: bytes,
+              requester_id: str, consistency: str, on_done: Callable):
+        """Write + replicate.  on_done(ms)."""
+        rtt = self.sim.jitter(self.topo.rtt(requester_id, self.node_id), 0.08)
+        t0 = self.sim.now
+
+        def _apply():
+            if not self.alive:
+                return
+            self.stores.setdefault(service_id, {})[key] = value
+            peers = [p for p in self.peers.get(service_id, ()) if p.alive]
+            if consistency == "strong":
+                if not peers:
+                    self.sim.after(rtt / 2,
+                                   lambda: on_done(self.sim.now - t0))
+                    return
+                pending = {"n": len(peers)}
+
+                def _acked():
+                    pending["n"] -= 1
+                    if pending["n"] == 0:
+                        self.sim.after(rtt / 2,
+                                       lambda: on_done(self.sim.now - t0))
+
+                for p in peers:
+                    self._propagate(service_id, key, value, p, _acked)
+            else:
+                # eventual: ack now, cascade in the background
+                self.sim.after(rtt / 2, lambda: on_done(self.sim.now - t0))
+                if peers:
+                    self._propagate(service_id, key, value, peers[0],
+                                    lambda: None,
+                                    cascade=peers[1:])
+
+        self.sim.after(rtt / 2 + self.sim.jitter(WRITE_MS, 0.2), _apply)
+
+    def _propagate(self, service_id: str, key: str, value: bytes,
+                   peer: "Cargo", on_acked: Callable,
+                   cascade: Optional[List["Cargo"]] = None):
+        hop = self.sim.jitter(self.topo.rtt(self.node_id, peer.node_id), 0.1)
+
+        def _arrive():
+            if not peer.alive:
+                on_acked()                      # skip dead replica
+                return
+            peer.stores.setdefault(service_id, {})[key] = value
+            if cascade:
+                peer._propagate(service_id, key, value, cascade[0],
+                                lambda: None, cascade=cascade[1:])
+            on_acked()
+
+        self.sim.after(hop + self.sim.jitter(WRITE_MS, 0.2), _arrive)

@@ -1,0 +1,106 @@
+"""Cargo Manager (paper §3.4.1): storage registration, 2-step data-access-
+point selection, and storage auto-scaling.
+
+Store_Register allocates THREE data replicas near the service's expected
+locations; Cargo_Discover hands a Captain a geo-ranked candidate list and
+the Captain probes them (the same 2-step idea as service selection).  When
+compute auto-scaling spawns replicas far from existing data, the manager
+cascades a new data replica onto a nearby Cargo.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core import geohash
+from repro.core.cluster import Topology
+from repro.core.sim import Simulator
+from repro.core.storage.cargo import Cargo
+
+
+class CargoManager:
+    def __init__(self, sim: Simulator, topo: Topology, *,
+                 replicas: int = 3, top_n: int = 3):
+        self.sim = sim
+        self.topo = topo
+        self.replicas = replicas
+        self.top_n = top_n
+        self.cargos: Dict[str, Cargo] = {}
+        self.placements: Dict[str, List[Cargo]] = {}    # service -> replicas
+        self.specs: Dict[str, object] = {}
+
+    # --------------------------------------------------------- registration
+
+    def cargo_join(self, cargo: Cargo):
+        self.cargos[cargo.node_id] = cargo
+        self.sim.log("cargo_join", node=cargo.node_id)
+
+    def _rank_by_location(self, loc, need_mb: float,
+                          exclude=()) -> List[Cargo]:
+        ok = [c for c in self.cargos.values()
+              if c.alive and c.node_id not in exclude
+              and (c.spec.storage_gb * 1024 - c.used_mb) >= need_mb]
+        ok.sort(key=lambda c: geohash.distance_km(
+            c.spec.loc[0], c.spec.loc[1], loc[0], loc[1]))
+        return ok
+
+    def store_register(self, spec,
+                       initial: Optional[Dict[str, bytes]] = None):
+        """Allocate three replicas near the service's expected location."""
+        loc = spec.locations[0] if spec.locations else (0.0, 0.0)
+        ranked = self._rank_by_location(loc, spec.storage_capacity_mb)
+        chosen = ranked[:self.replicas]
+        for c in chosen:
+            c.provision(spec.service_id, chosen, initial)
+        self.placements[spec.service_id] = chosen
+        self.specs[spec.service_id] = spec
+        self.sim.log("store_register", service=spec.service_id,
+                     cargos=[c.node_id for c in chosen])
+        return chosen
+
+    # ------------------------------------------------------------ discovery
+
+    def cargo_discover(self, service_id: str, captain_loc) -> List[Cargo]:
+        """Step 1: candidate list of data access points for a Captain."""
+        reps = [c for c in self.placements.get(service_id, ())
+                if c.alive]
+        reps.sort(key=lambda c: geohash.distance_km(
+            c.spec.loc[0], c.spec.loc[1], captain_loc[0], captain_loc[1]))
+        return reps[:self.top_n]
+
+    # --------------------------------------------------------- auto-scaling
+
+    def on_new_task(self, spec, task):
+        """Compute layer grew: ensure low-latency data access nearby."""
+        service_id = spec.service_id
+        reps = self.placements.get(service_id, [])
+        if not reps:
+            return
+        cap_loc = task.captain.spec.loc
+        nearest = min(
+            (geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
+                                 cap_loc[0], cap_loc[1])
+             for c in reps if c.alive), default=float("inf"))
+        if nearest <= 50.0:                      # close enough
+            return
+        ranked = self._rank_by_location(
+            cap_loc, spec.storage_capacity_mb,
+            exclude=[c.node_id for c in reps])
+        if not ranked:
+            return
+        new = ranked[0]
+        src = reps[0]
+        data = dict(src.stores.get(service_id, {}))
+        hop = self.topo.rtt(src.node_id, new.node_id)
+        xfer = len(data) * 1.0e-3 + hop          # bulk copy model
+
+        def _done():
+            group = reps + [new]
+            new.provision(service_id, group, data)
+            for c in group:
+                c.peers[service_id] = [p for p in group if p is not c]
+            self.placements[service_id] = group
+            self.sim.log("storage_scale", service=service_id,
+                         node=new.node_id)
+
+        self.sim.after(xfer, _done)

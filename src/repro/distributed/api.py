@@ -1,0 +1,67 @@
+"""Logical-axis sharding constraints (the MaxText/t5x pattern).
+
+Model code annotates activations with *logical* axes: ``shard(x, "batch",
+"seq", "embed")``.  A rules dict (logical axis -> mesh axis / tuple / None)
+is installed with :func:`axis_rules`; outside any rules context ``shard`` is
+a no-op, so the same model code runs on a laptop and lowers for a 512-chip
+mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxis]]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Dict[str, MeshAxis]], mesh=None):
+    old = current_rules()
+    old_mesh = current_mesh()
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = old
+        _state.mesh = old_mesh
+
+
+def spec(*axes: Optional[str]) -> PS:
+    """PartitionSpec for logical ``axes`` under the active rules."""
+    rules = current_rules() or {}
+    return PS(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain activation ``x`` (no-op outside an axis_rules context).
+
+    Dims whose size the target mesh axes don't divide are left unsharded
+    (vocab 51866 over a 16-way axis, 36 heads over 16, ...).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    s = spec(*axes)
+    mesh = current_mesh()
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        from repro.distributed.sharding import sanitize_spec
+        s = sanitize_spec(tuple(x.shape), s, sizes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+    return jax.lax.with_sharding_constraint(x, s)

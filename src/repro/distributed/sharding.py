@@ -1,0 +1,210 @@
+"""Sharding-rule engine: logical axes -> mesh axes, per (arch, shape, mesh).
+
+Baseline strategy (recorded as such in EXPERIMENTS.md §Perf):
+
+* params 2D-sharded: ``embed`` over "data" (ZeRO-3/FSDP style) and
+  heads/ff/vocab over "model" (tensor parallel) — GSPMD inserts the
+  all-gathers/reduce-scatters.
+* activations: batch over ("pod","data"); residual stream replicated over
+  "model" (Megatron convention); per-op ff/head shards inside blocks.
+* MoE experts over "model" when the expert count divides it (DeepSeek's 64),
+  otherwise expert_ff over "model" (Grok's 8).
+* KV caches: kv-head axis over "model" when divisible, else the cache
+  *sequence* axis over "model" (split-KV decode — the flash-decoding idea
+  expressed as a sharding rule; GSPMD adds the partial-softmax reduction).
+
+Variants ("seqpar", "expert_data", ...) are perf levers explored in
+EXPERIMENTS.md §Perf; each returns a modified rules dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+from repro.models.modules import logical_specs, tree_map_params
+
+
+def _divides(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def make_rules(cfg: ModelConfig, mesh: MeshConfig, shape: ShapeConfig,
+               *, variant: str = "baseline") -> Dict[str, Any]:
+    axes = dict(zip(mesh.axes, mesh.shape))
+    model_k = axes.get("model", 1)
+    data_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data")
+                                       if a in axes)
+    data_k = 1
+    for a in data_axes:
+        data_k *= axes[a]
+
+    batch_rule: Any = data_axes if len(data_axes) > 1 else \
+        (data_axes[0] if data_axes else None)
+    if not _divides(shape.global_batch, data_k):
+        # long_500k (batch=1): the data axis serves concurrent streams in
+        # production; here the batch is replicated.
+        batch_rule = None
+
+    a = cfg.attention
+    rules: Dict[str, Any] = {
+        # ---- params
+        "vocab": "model",
+        "embed": "data",
+        "embed_in": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "layers": None,
+        "conv": None,
+        "inner": "model",
+        "ssm_heads": "model" if _divides(_ssm_heads(cfg), model_k) else None,
+        "head_in": None,
+        "head_out": None,
+        # ---- activations
+        "batch": batch_rule,
+        "act_seq": None,
+        "act_embed": None,
+        "heads_act": "model" if _divides(a.num_heads, model_k) else None,
+        "kv_heads_act": "model" if _divides(a.num_kv_heads, model_k) else None,
+        "ff_act": "model",
+        "vocab_act": "model",
+        "kv_seq": None,
+    }
+
+    # KV cache: prefer head sharding; fall back to split-KV (sequence) decode
+    if rules["kv_heads_act"] is None and shape.kind == "decode":
+        rules["kv_seq"] = "model"
+
+    if cfg.moe is not None:
+        if _divides(cfg.moe.num_experts, model_k):
+            rules.update(experts="model", expert_ff=None, expert_ff_act=None,
+                         experts_dim=None)
+        else:
+            rules.update(experts=None, expert_ff="model",
+                         expert_ff_act="model", experts_dim=None)
+    else:
+        rules.update(experts=None, expert_ff=None, expert_ff_act=None,
+                     experts_dim=None)
+
+    # xLSTM: tiny head count, block-diag per-head mats -> shard d_in only
+    if cfg.xlstm is not None:
+        rules["inner"] = "model" if _divides(
+            2 * int(cfg.xlstm.mlstm_proj_factor * cfg.d_model), model_k) \
+            else None
+
+    if variant == "seqpar":
+        # sequence-parallel residual stream (memory hillclimb lever)
+        rules["act_seq"] = "model"
+        rules["act_embed"] = None
+    elif variant == "expert_data":
+        # MoE experts over the data axis (capacity vs bandwidth trade)
+        if cfg.moe is not None and _divides(cfg.moe.num_experts, data_k):
+            rules.update(experts=data_axes if len(data_axes) > 1
+                         else data_axes[0])
+    elif variant == "zero_off":
+        rules["embed"] = None
+    elif variant == "nokvseq":
+        # ablation: disable split-KV decode (cache seq replicated on model)
+        rules["kv_seq"] = None
+    elif variant == "serve_fast":
+        # serving profile (EXPERIMENTS.md §Perf cell C): params are
+        # read-only at serve time, so drop ZeRO-3 — replicate over "data"
+        # — whenever the TP-sharded weights fit comfortably per chip.
+        # Kills the per-layer weight all-gathers (−98 % collective/token).
+        tp_bytes = 2 * cfg.param_count() / max(model_k, 1)
+        if tp_bytes <= 6e9:
+            rules["embed"] = None
+    elif variant != "baseline":
+        raise ValueError(f"unknown sharding variant {variant!r}")
+    return rules
+
+
+def _ssm_heads(cfg: ModelConfig) -> int:
+    if cfg.ssm is not None:
+        return (cfg.ssm.expand * cfg.d_model) // cfg.ssm.head_dim
+    if cfg.xlstm is not None:
+        return cfg.xlstm.num_heads
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+
+def mesh_axis_size(entry: Any, mesh_sizes: Dict[str, int]) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh_sizes.get(entry, 1)
+    n = 1
+    for a in entry:
+        n *= mesh_sizes.get(a, 1)
+    return n
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: PS,
+                  mesh_sizes: Dict[str, int]) -> PS:
+    """Drop sharding on dims the mesh axis size does not divide — jit
+    in_shardings require exact divisibility (vocab 51866, d_ff 2730, ...).
+    Also drops repeated mesh axes within one spec (a mesh axis may shard at
+    most one positional dimension); first occurrence wins."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    used: set = set()
+    for dim, entry in zip(shape, entries):
+        k = mesh_axis_size(entry, mesh_sizes)
+        keep = entry if (k == 1 or dim % k == 0) else None
+        if keep is not None:
+            axes = (keep,) if isinstance(keep, str) else tuple(keep)
+            if any(a in used for a in axes):
+                keep = None
+            else:
+                used.update(axes)
+        out.append(keep)
+    return PS(*out)
+
+
+def spec_from_axes(axes: Tuple[Optional[str], ...],
+                   rules: Dict[str, Any]) -> PS:
+    return PS(*[rules.get(ax) if ax is not None else None for ax in axes])
+
+
+def param_specs(model, rules: Dict[str, Any],
+                mesh_sizes: Optional[Dict[str, int]] = None):
+    """PartitionSpec tree mirroring the model's param tree."""
+    def mk(_, p):
+        s = spec_from_axes(p.axes, rules)
+        if mesh_sizes:
+            s = sanitize_spec(p.shape, s, mesh_sizes)
+        return s
+    return tree_map_params(mk, model.param_tree())
+
+
+def param_shardings(mesh: Mesh, model, rules: Dict[str, Any]):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(model, rules, sizes))
+
+
+def tree_specs(axes_tree: Dict[str, Tuple], rules: Dict[str, Any],
+               shapes: Optional[Dict[str, Any]] = None,
+               mesh_sizes: Optional[Dict[str, int]] = None):
+    out = {}
+    for k, ax in axes_tree.items():
+        s = spec_from_axes(ax, rules)
+        if shapes is not None and mesh_sizes:
+            s = sanitize_spec(tuple(shapes[k].shape), s, mesh_sizes)
+        out[k] = s
+    return out
+
+
+def tree_shardings(mesh: Mesh, axes_tree, rules, shapes=None):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return {k: NamedSharding(mesh, s)
+            for k, s in tree_specs(axes_tree, rules, shapes, sizes).items()}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots of Armada-served models.
+
+Each kernel subpackage ships three files:
+
+* ``kernel.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU
+  target; validated on CPU with ``interpret=True``)
+* ``ops.py``    — jit'd public wrapper; dispatches pallas on TPU, the jnp
+  reference on other backends (keeps the 512-device CPU dry-run lowerable)
+* ``ref.py``    — pure-jnp oracle used by tests and as the CPU fallback
+
+Kernels: flash_attention (prefill/train), decode_attention (single-token
+serve), moe_gmm (grouped expert matmul), ssm_scan (Mamba2 chunked SSD).
+"""

@@ -1,0 +1,113 @@
+"""Single-token decode attention as a Pallas TPU kernel.
+
+Decode is memory-bound: the whole KV cache streams HBM→VMEM once per step
+while compute is a rank-1 matmul per head.  TPU adaptation: instead of the
+GPU "split-KV + cross-SM reduction" scheme (flash-decoding), we make the KV
+sequence the innermost *sequential* grid axis — the Pallas pipeline
+double-buffers (bs, d) cache tiles while online-softmax state for the
+``group`` query heads that share a KV head lives in VMEM scratch.  Queries
+are tiled (group, d) so the per-KV-head GQA bundle is one MXU matmul;
+per-sequence cache lengths arrive as a VMEM scalar tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, bs, ns):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0, 0]
+    run = si * bs < length                      # skip tiles past the cache end
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                       # (group, d)
+        k = k_ref[0].astype(jnp.float32)                       # (bs, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_next = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_next), m_next, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+        alpha = jnp.exp(m_prev - m_safe)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_next
+
+    @pl.when(si == ns - 1)
+    def _out():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *, scale=None,
+                            block_s=256, interpret=False):
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    bs = min(block_s, S)
+    ps = -S % bs
+    if ps:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, ps), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    Sp = S + ps
+    ns = Sp // bs
+
+    # one (group, d) query tile per (batch, kv head)
+    qr = q.reshape(B, Hkv, group, D).reshape(B * Hkv, group, D)
+    kr = k_cache.reshape(B * Hkv, Sp, D)
+    vr = v_cache.reshape(B * Hkv, Sp, D)
+    lens = jnp.broadcast_to(lengths[:, None, None], (B, Hkv, 1)).reshape(
+        B * Hkv, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, si: (bh, 0)),       # lengths
+            pl.BlockSpec((1, group, D), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, bs, D), lambda bh, si: (bh, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, D), lambda bh, si: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(lens, qr, kr, vr)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,20 @@
+"""Public decode-attention op: pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_mha_reference
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "force_pallas", "interpret"))
+def decode_mha(q, k_cache, v_cache, lengths, *, scale=None,
+               force_pallas=False, interpret=False):
+    if force_pallas or jax.default_backend() == "tpu":
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, scale=scale,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return decode_mha_reference(q, k_cache, v_cache, lengths, scale=scale)

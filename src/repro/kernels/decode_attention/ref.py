@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for single-token decode attention over a padded KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_mha_reference(q, k_cache, v_cache, lengths, *, scale=None):
+    """One decode step of GQA attention.
+
+    q: (B, Hq, D) — the new token's queries.
+    k_cache, v_cache: (B, Hkv, S, D) — padded caches.
+    lengths: (B,) int32 — number of valid cache entries per sequence
+             (includes the just-written current token).
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, kf)                  # (B,Hkv,g,S)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]           # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_attention.ops import mha  # noqa: F401

@@ -1,0 +1,153 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation (vs the CUDA flash-attention-2 algorithm): the online-softmax
+recurrence is kept, but tiling targets VMEM and the MXU — (bq, d) query tiles
+resident in VMEM, (bk, d) key/value tiles streamed HBM→VMEM by the Pallas
+pipeline, s = q·kᵀ on the 128×128 systolic MXU.  The kv-block loop is the
+innermost *sequential* grid dimension; running max / denominator / output
+accumulator live in fp32 VMEM scratch across those grid steps (the TPU grid
+is executed in order, which replaces the CUDA thread-block-local loop).
+GQA is expressed through BlockSpec index maps — no KV head replication in
+HBM.  Causal blocks above the diagonal are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, causal, bq, bk, nk, q_offset, kv_len, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # global positions of this tile's queries / keys
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = jnp.bool_(True)
+    if causal:
+        # skip kv tiles entirely above the causal diagonal
+        run = ki * bk <= q_offset + qi * bq + bq - 1
+    if window:
+        run = jnp.logical_and(run, (ki + 1) * bk - 1 >= q_offset + qi * bq - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                      # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                      # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (bq, 1)
+        l_prev = l_scr[...]
+        m_curr = jnp.max(s, axis=-1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        m_safe = jnp.where(jnp.isfinite(m_next), m_next, 0.0)
+        p = jnp.exp(s - m_safe)                               # -inf rows -> 0
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_safe)                      # m_prev=-inf -> 0
+        l_next = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha
+        acc_scr[...] = acc + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_next
+        l_scr[...] = l_next
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, scale=None, q_offset=0,
+                           kv_len=None, window=0, block_q=128, block_k=128,
+                           interpret=False):
+    """q: (B, Hq, Tq, D);  k, v: (B, Hkv, Tk, D) -> (B, Hq, Tq, D)."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kv_len = Tk if kv_len is None else kv_len
+
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    # pad sequence dims to tile multiples; padded keys masked via kv_len
+    pq, pk = -Tq % bq, -Tk % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Tqp, Tkp = Tq + pq, Tk + pk
+    nq, nk = Tqp // bq, Tkp // bk
+
+    qr = q.reshape(B * Hq, Tqp, D)
+    kr = k.reshape(B * Hkv, Tkp, D)
+    vr = v.reshape(B * Hkv, Tkp, D)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // Hq) * Hkv + (bh % Hq) // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nk=nk,
+        q_offset=q_offset, kv_len=kv_len, window=window)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(qr, kr, vr)
+    out = out.reshape(B, Hq, Tqp, D)
+    return out[:, :, :Tq] if pq else out
+
+
+def vmem_bytes(bq, bk, d, dtype_bytes=2):
+    """Static VMEM budget check used by tests and block-size autotuning."""
+    tiles = (bq * d + 2 * bk * d) * dtype_bytes        # q, k, v tiles
+    scratch = (bq * 1 * 2 + bq * d) * 4                # m, l, acc fp32
+    out = bq * d * dtype_bytes
+    return 2 * tiles + scratch + out                   # x2: pipeline double-buffer

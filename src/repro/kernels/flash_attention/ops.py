@@ -1,0 +1,34 @@
+"""Public attention op: pallas on TPU, jnp reference elsewhere.
+
+The CPU fallback keeps the 512-host-device dry-run lowerable (Pallas TPU
+kernels only lower for TPU targets) while tests exercise the kernel in
+``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "q_offset", "kv_len", "window",
+                     "force_pallas", "interpret"))
+def mha(q, k, v, *, causal=True, scale=None, q_offset=0, kv_len=None,
+        window=0, force_pallas=False, interpret=False):
+    """Grouped-query flash attention. Shapes: see ref.mha_reference."""
+    if force_pallas or _on_tpu():
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            kv_len=kv_len, window=window,
+            interpret=interpret or not _on_tpu())
+    return mha_reference(q, k, v, causal=causal, scale=scale,
+                         q_offset=q_offset, kv_len=kv_len, window=window)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/window, offsets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, scale=None, q_offset=0,
+                  kv_len=None, window=0):
+    """Attention with grouped KV heads.
+
+    q: (B, Hq, Tq, D);  k, v: (B, Hkv, Tk, D);  Hkv divides Hq.
+    ``q_offset``: global position of q[0] (decode/chunked prefill).
+    ``kv_len``: valid key length (rest masked; supports padded caches).
+    ``window``: sliding-window size (0 = unlimited).
+    Returns (B, Hq, Tq, D) in q.dtype.
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, Hkv, group, Tq, Tk)
+    qg = qf.reshape(B, Hkv, group, Tq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)           # fully-masked row guard
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Tq, D).astype(q.dtype)

@@ -1,0 +1,72 @@
+"""Grouped (per-expert) matmul as a Pallas TPU kernel.
+
+The MoE FFN applies a different weight matrix to each expert's capacity
+buffer: y[e] = x[e] @ w[e].  On GPU this is a CUTLASS grouped-GEMM; the TPU
+adaptation tiles each expert's GEMM over the MXU with (bc, bd) × (bd, bf)
+VMEM tiles and makes the contraction dimension the innermost sequential grid
+axis, accumulating partial products in fp32 VMEM scratch.  The expert axis is
+an outer parallel grid dimension, so XLA can pipeline experts back-to-back —
+no padding of experts to a common token count beyond the capacity buffer the
+dispatch already produces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr, *, nd):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)         # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)         # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _out():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def gmm_pallas(x, w, *, block_c=128, block_f=128, block_d=512,
+               interpret=False):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    pc, pf, pd = -C % bc, -F % bf, -D % bd
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    Cp, Fp, Dp = C + pc, F + pf, D + pd
+    nc, nf, nd = Cp // bc, Fp // bf, Dp // bd
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, nd=nd),
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, w)
+    return out[:, :C, :F]

@@ -1,0 +1,17 @@
+"""Public grouped-matmul op: pallas on TPU, einsum elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import gmm_pallas
+from repro.kernels.moe_gmm.ref import gmm_reference
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas", "interpret"))
+def gmm(x, w, *, force_pallas=False, interpret=False):
+    if force_pallas or jax.default_backend() == "tpu":
+        return gmm_pallas(x, w,
+                          interpret=interpret or jax.default_backend() != "tpu")
+    return gmm_reference(x, w)

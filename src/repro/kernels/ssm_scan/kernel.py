@@ -1,0 +1,145 @@
+"""Generalized SSD chunked scan as a Pallas TPU kernel.
+
+Primitive: h_t = exp(g_t)·h_{t-1} + s_t·x_t⊗B_t;  y_t = C_t·h_t + D·x_t.
+Serves Mamba2 (g=dt·A, s=dt) and the xLSTM mLSTM matrix memory (g=logσ(f),
+s=exp(i), x=v, B=k, C=q) — see ref.py.
+
+GPU Mamba2 uses a warp-specialized chunked-scan (SSD) with inter-chunk state
+passed through shared memory.  TPU adaptation: chunks become the innermost
+*sequential* grid axis; the (P, N) inter-chunk state lives in fp32 VMEM
+scratch across grid steps (the TPU grid is executed in order on one core, so
+the carried state needs no cross-block reduction).  Within a chunk all the
+work is MXU matmuls on VMEM tiles: (L,N)@(N,L) decay-masked score matrix,
+(L,L)@(L,P) intra-chunk output, (P,L)@(L,N) state update — hardware-aligned
+when chunk, P, N are multiples of 128/8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, g_ref, s_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                h_scr, *, L, nc, bc_load):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    g = g_ref[0, 0].astype(jnp.float32)          # (L, 1)
+    s = s_ref[0, 0].astype(jnp.float32)          # (L, 1)
+    Bc = bc_load(b_ref).astype(jnp.float32)      # (L, N)
+    Cc = bc_load(c_ref).astype(jnp.float32)      # (L, N)
+    d = d_ref[0, 0]                              # scalar skip
+
+    cum = jnp.cumsum(g, axis=0)                  # (L, 1)
+    rel = cum - cum.reshape(1, L)                # (L, L): cum_t - cum_s
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(row >= col, jnp.exp(rel), 0.0)
+
+    cb = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    Smat = cb * decay * s.reshape(1, L)
+    y = jax.lax.dot_general(Smat, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (L, P)
+    h = h_scr[...]                                                 # (P, N)
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        Cc, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y += d * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    w = s * jnp.exp(cum[L - 1] - cum)                              # (L, 1)
+    h_scr[...] = jnp.exp(cum[L - 1]) * h + jax.lax.dot_general(
+        x * w, Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _hout():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan_pallas(x, g, s, Bm, Cm, D, *, chunk=64, interpret=False):
+    """x: (B,T,H,P); g, s: (B,T,H); Bm, Cm: (B,T,N) shared across heads
+    (Mamba2 ngroups=1) or (B,T,H,N) per-head (mLSTM k/q); D: (H,).
+
+    Returns y: (B,T,H,P), h_final: (B,H,P,N) fp32.
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    per_head = Bm.ndim == 4
+    L = min(chunk, T)
+    pad = -T % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))   # g=0,s=0 -> no-op steps
+        s = jnp.pad(s, ((0, 0), (0, pad), (0, 0)))
+        bc_pad = ((0, 0), (0, pad), (0, 0), (0, 0)) if per_head else \
+            ((0, 0), (0, pad), (0, 0))
+        Bm = jnp.pad(Bm, bc_pad)
+        Cm = jnp.pad(Cm, bc_pad)
+    Tp = T + pad
+    nc = Tp // L
+
+    xr = jnp.moveaxis(x, 2, 1)                      # (B, H, Tp, P)
+    gr = jnp.moveaxis(g, 2, 1)[..., None]           # (B, H, Tp, 1)
+    sr = jnp.moveaxis(s, 2, 1)[..., None]
+    d2 = D.astype(jnp.float32).reshape(H, 1)
+
+    if per_head:
+        Bm = jnp.moveaxis(Bm, 2, 1)                 # (B, H, Tp, N)
+        Cm = jnp.moveaxis(Cm, 2, 1)
+        bc_spec = pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, h, c, 0))
+
+        def _bc_load(ref):
+            return ref[0, 0]
+    else:
+        bc_spec = pl.BlockSpec((1, L, N), lambda b, h, c: (b, c, 0))
+
+        def _bc_load(ref):
+            return ref[0]
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    y, h = pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L, nc=nc, bc_load=_bc_load),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, c: (b, h, c, 0)),
+            bc_spec,
+            bc_spec,
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, Tp, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(xr, gr, sr, Bm, Cm, d2)
+    y = jnp.moveaxis(y, 1, 2)[:, :T]                # (B, T, H, P)
+    return y, h
+
+
+def vmem_bytes(L, P, N, dtype_bytes=2):
+    """Static VMEM budget for one grid step (double-buffered tiles)."""
+    tiles = (L * P + 2 * L + 2 * L * N) * dtype_bytes
+    scratch = P * N * 4
+    work = 2 * L * L * 4                       # decay + score matrices
+    return 2 * tiles + scratch + work + L * P * dtype_bytes

@@ -1,0 +1,21 @@
+"""Public SSD-scan op: pallas on TPU, chunked-jnp reference elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssm_scan.ref import ssd_chunked_reference
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "force_pallas", "interpret"))
+def ssd_scan(x, g, s, Bm, Cm, D, *, chunk=64, force_pallas=False,
+             interpret=False):
+    """Generalized SSD scan: h_t = e^{g_t} h + s_t x_t⊗B_t; y_t = C_t·h_t+D·x."""
+    if force_pallas or jax.default_backend() == "tpu":
+        return ssd_scan_pallas(
+            x, g, s, Bm, Cm, D, chunk=chunk,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return ssd_chunked_reference(x, g, s, Bm, Cm, D, chunk=chunk)

@@ -1,0 +1,119 @@
+"""Oracles for the generalized SSD (state-space-dual) scan.
+
+The primitive recurrence (per batch, head):
+
+    h_t = exp(g_t) * h_{t-1} + s_t * x_t ⊗ B_t        h: (P, N)
+    y_t = C_t · h_t + D * x_t                          y: (P,)
+
+with per-step decay-log ``g_t`` and input-scale ``s_t`` decoupled.  Mamba2 is
+``g = dt*A, s = dt``; the xLSTM mLSTM matrix memory is ``g = logσ(f),
+s = exp(i)`` (with x=v, B=k, C=q) — one kernel serves both architectures.
+
+``ssd_sequential`` is the ground-truth per-timestep recurrence;
+``ssd_chunked_reference`` is the chunked reformulation the Pallas kernel
+implements; ``ssd_decode_step`` is the O(1) serving update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, g, s, Bm, Cm, D):
+    """Ground-truth recurrence.
+
+    x: (B, T, H, P); g, s: (B, T, H); Bm, Cm: (B, T, N) shared across heads
+    (ngroups=1) or (B, T, H, N) per-head; D: (H,) skip.
+    Returns y: (B, T, H, P), h_final: (B, H, P, N) fp32.
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if Bm.ndim == 3:                       # broadcast shared B/C across heads
+        Bm = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, T, H, N))
+        Cm = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, T, H, N))
+
+    def step(h, inputs):
+        xt, gt, st, bt, ct = inputs
+        decay = jnp.exp(gt)                                    # (B, H)
+        upd = st[..., None, None] * xt[..., :, None] * bt[:, :, None, :]
+        h = h * decay[..., None, None] + upd                   # (B,H,P,N)
+        yt = jnp.einsum("bhpn,bhn->bhp", h, ct) + D[None, :, None] * xt
+        return h, yt
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+               for a in (x, g, s, Bm, Cm))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def _chunk_body(h, args, D_h):
+    """One chunk, one head. x (L,P), g/s (L,), B/C (L,N), h (P,N)."""
+    x, g, s, Bc, Cc = args
+    cum = jnp.cumsum(g)                               # (L,)
+    L = x.shape[0]
+    rel = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri, jnp.exp(rel), 0.0)
+    S = (Cc @ Bc.T) * decay * s[None, :]
+    y = S @ x
+    y = y + jnp.exp(cum)[:, None] * (Cc @ h.T)
+    y = y + D_h * x
+    w = s * jnp.exp(cum[-1] - cum)
+    h_new = jnp.exp(cum[-1]) * h + (x * w[:, None]).T @ Bc
+    return h_new, y
+
+
+def ssd_chunked_reference(x, g, s, Bm, Cm, D, *, chunk=64):
+    """Chunked SSD — the algorithm the Pallas kernel implements."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    per_head = Bm.ndim == 4
+    pad = -T % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))    # g=0,s=0 -> no-op steps
+        s = jnp.pad(s, ((0, 0), (0, pad), (0, 0)))
+        bc_pad = ((0, 0), (0, pad), (0, 0), (0, 0)) if per_head else \
+            ((0, 0), (0, pad), (0, 0))
+        Bm = jnp.pad(Bm, bc_pad)
+        Cm = jnp.pad(Cm, bc_pad)
+    Tp = T + pad
+    nc = Tp // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    gf = g.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    sf = s.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    bc_shape = (Bsz, nc, chunk, H, N) if per_head else (Bsz, nc, chunk, N)
+    Bf = Bm.astype(jnp.float32).reshape(bc_shape)
+    Cf = Cm.astype(jnp.float32).reshape(bc_shape)
+
+    def per_bh(xb, gb, sb, Bb, Cb, D_h):
+        def body(h, args):
+            return _chunk_body(h, args, D_h)
+        h0 = jnp.zeros((xb.shape[-1], Bb.shape[-1]), jnp.float32)
+        h, ys = jax.lax.scan(body, h0, (xb, gb, sb, Bb, Cb))
+        return ys, h
+
+    # vmap heads then batch (inside the outer vmap, dim 0 is gone: head ax 2)
+    bc_ax = 2 if per_head else None
+    f = jax.vmap(per_bh, in_axes=(2, 2, 2, bc_ax, bc_ax, 0), out_axes=(1, 0))
+    f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0, None), out_axes=(0, 0))
+    ys, h = f(xf, gf, sf, Bf, Cf, D.astype(jnp.float32))
+    ys = jnp.moveaxis(ys, 2, 3).reshape(Bsz, Tp, H, P)[:, :T]
+    return ys.astype(x.dtype), h
+
+
+def ssd_decode_step(h, x, g, s, Bm, Cm, D):
+    """O(1) decode update. h: (B,H,P,N); x: (B,H,P); g, s: (B,H);
+    Bm, Cm: (B,N) shared or (B,H,N) per-head.  Returns (y: (B,H,P), h_new)."""
+    if Bm.ndim == 2:
+        Bm = Bm[:, None, :]
+        Cm = Cm[:, None, :]
+    decay = jnp.exp(g)
+    upd = s[..., None, None] * x[..., :, None] * Bm[..., None, :]
+    h = h * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h.astype(jnp.float32),
+                   jnp.broadcast_to(Cm, h.shape[:2] + Cm.shape[-1:]).astype(
+                       jnp.float32)) + D[None, :, None] * x
+    return y.astype(x.dtype), h

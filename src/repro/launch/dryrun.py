@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_HOST_DEVICES", "512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device count
+on first init); they give this process 512 host devices so the production
+meshes (16×16 single-pod, 2×16×16 multi-pod) can be built.
+
+For each cell we jit the appropriate step (train_step / prefill_step /
+serve_step) with full in/out shardings, ``.lower().compile()``, then record
+memory_analysis / cost_analysis / collective stats to
+``artifacts/dryrun/<cell>.json`` — the §Roofline table is generated from
+those artifacts by benchmarks/bench_roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 1]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# gradient-accumulation depth per arch for train_4k (memory fit; DESIGN.md §5)
+MICROBATCHES = {
+    "llama3-405b": 32,
+    "grok-1-314b": 16,
+    "qwen3-14b": 4,
+    "zamba2-7b": 4,
+    "deepseek-moe-16b": 4,
+    "whisper-large-v3": 2,
+    "minicpm-2b": 2,
+    "qwen2-vl-2b": 2,
+    "qwen3-1.7b": 2,
+    "xlstm-1.3b": 2,
+}
+
+# bf16 optimizer moments where fp32 states cannot fit the pod (DESIGN.md §5)
+BF16_OPT = {"llama3-405b", "grok-1-314b"}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "baseline", moe_dispatch: str = "einsum",
+               microbatches: int | None = None, remat: str = "full",
+               moe_group: int = 512, decode_impl: str = "scan"):
+    """Lower+compile one cell; returns the artifact record dict."""
+    import jax
+
+    from repro.config import SHAPES, TrainConfig, shape_applicable
+    from repro.configs import get_config
+    from repro.distributed.api import axis_rules
+    from repro.distributed.sharding import (make_rules, param_shardings,
+                                            tree_shardings)
+    from repro.launch.mesh import make_production_mesh, mesh_config
+    from repro.models.api import build_model, cache_axes, input_axes
+    from repro.optim import AdamW
+    from repro.telemetry import roofline as rf
+    from repro.train.train_step import make_train_step
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "moe_dispatch": moe_dispatch}
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    mcfg = mesh_config(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mcfg, shape, variant=variant)
+    model = build_model(cfg, moe_dispatch=moe_dispatch,
+                        moe_group=moe_group)
+    mb = microbatches if microbatches is not None else \
+        MICROBATCHES.get(arch, 1)
+    tc = TrainConfig(
+        microbatches=mb if shape.kind == "train" else 1,
+        remat=remat,
+        opt_state_dtype="bfloat16" if arch in BF16_OPT else "float32",
+        accum_dtype="bfloat16" if arch in BF16_OPT else "float32",
+    )
+
+    params_abs = model.abstract("bfloat16")
+    p_shard = param_shardings(mesh, model, rules)
+    specs = model.input_specs(shape)
+    in_ax = input_axes(specs)
+    b_shard = tree_shardings(mesh, in_ax, rules, shapes=specs)
+    repl = NamedSharding(mesh, PS())
+
+    t0 = time.time()
+    with axis_rules(rules, mesh=mesh):
+        if shape.kind == "train":
+            step = make_train_step(model, tc)
+            opt = AdamW(tc)
+            opt_abs = opt.init_abstract(params_abs)
+            o_shard = type(opt_abs)(step=repl,
+                                    mu=jax.tree.map(lambda s: s, p_shard),
+                                    nu=jax.tree.map(lambda s: s, p_shard))
+            metrics_shard = {"loss": repl, "grad_norm": repl, "lr": repl,
+                             "skipped": repl}
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, metrics_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, max_seq=shape.seq_len)
+            jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            cache_abs = model.init_cache_abstract(shape.global_batch,
+                                                  shape.seq_len, "bfloat16")
+            c_shard = tree_shardings(mesh, cache_axes(model, cache_abs),
+                                     rules, shapes=cache_abs)
+            step_fn = model.decode_step_fori if decode_impl == "fori" \
+                else model.decode_step
+
+            def serve_step(params, cache, batch):
+                return step_fn(params, cache, batch)
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shard, c_shard, b_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, specs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(ma, f, None)
+                if v is not None:
+                    mem[f] = int(v)
+    except Exception as e:          # CPU backend may not implement it
+        mem["error"] = repr(e)
+
+    roof, ca = rf.from_compiled(compiled, None, chips=mcfg.num_devices)
+    coll = ca.pop("_walker_coll_by_kind", {})
+    mf = rf.model_flops(cfg, shape)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        microbatches=tc.microbatches,
+        chips=mcfg.num_devices,
+        memory_analysis=mem,
+        cost_analysis={k: v for k, v in sorted(ca.items())
+                       if isinstance(v, (int, float))},
+        collectives={k: {"count": v["count"], "gbytes": v["bytes"] / 1e9}
+                     for k, v in sorted(coll.items())},
+        roofline=roof.as_dict(),
+        model_flops=mf,
+        model_flops_per_chip=mf / mcfg.num_devices,
+        useful_flop_ratio=(mf / mcfg.num_devices) / roof.flops
+        if roof.flops else None,
+    )
+    return rec
+
+
+def cell_path(arch, shape, mesh_name, variant="baseline") -> pathlib.Path:
+    tag = f"{arch}__{shape}__{mesh_name}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    return ART_DIR / f"{tag}.json"
+
+
+def run_cell_subprocess(arch, shape, mesh_name, variant, timeout=3600):
+    """Run one cell in a fresh process (RAM + XLA isolation)."""
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh_name, "--variant", variant]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[2])
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    return r.returncode, time.time() - t0, r.stdout[-2000:], r.stderr[-4000:]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--moe-dispatch", default="einsum")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--moe-group", type=int, default=512)
+    ap.add_argument("--decode-impl", default="scan",
+                    choices=["scan", "fori"])
+    ap.add_argument("--tag", default=None,
+                    help="artifact name suffix for perf iterations")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.config import SHAPES
+        from repro.configs import assigned_archs
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch in assigned_archs():
+            for shape in SHAPES:
+                for mesh_name in meshes:
+                    p = cell_path(arch, shape, mesh_name, args.variant)
+                    if p.exists() and not args.force:
+                        print(f"[cached] {p.name}")
+                        continue
+                    print(f"[run] {arch} × {shape} × {mesh_name} ...",
+                          flush=True)
+                    code, dt, out, err = run_cell_subprocess(
+                        arch, shape, mesh_name, args.variant)
+                    if code != 0:
+                        failures.append((arch, shape, mesh_name))
+                        print(f"  FAILED ({dt:.0f}s)\n{err}", flush=True)
+                    else:
+                        print(f"  ok ({dt:.0f}s)", flush=True)
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("all cells passed")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh_name in meshes:
+        rec = None
+        try:
+            rec = build_cell(args.arch, args.shape, mesh_name == "multi",
+                             args.variant, args.moe_dispatch,
+                             args.microbatches, args.remat,
+                             args.moe_group, args.decode_impl)
+        except Exception:
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+                   "variant": args.variant, "status": "error",
+                   "error": traceback.format_exc()}
+        rec["tag"] = args.tag or args.variant
+        rec["remat"] = args.remat
+        out = cell_path(args.arch, args.shape, mesh_name,
+                        args.tag or args.variant)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+        print(json.dumps({k: rec.get(k) for k in
+                          ("arch", "shape", "mesh", "status", "compile_s",
+                           "roofline")}, indent=1, default=str))
+        if rec.get("status") == "error":
+            print(rec["error"], file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialization — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def _override(multi_pod: bool):
+    """REPRO_MESH_OVERRIDE="4x2" / "2x2x2" shrinks the mesh for test-scale
+    dry-runs (8 host devices) without touching production defaults."""
+    env = os.environ.get("REPRO_MESH_OVERRIDE")
+    if not env:
+        return None
+    parts = env.split(";")
+    spec = parts[1] if multi_pod and len(parts) > 1 else parts[0]
+    shape = tuple(int(x) for x in spec.split("x"))
+    axes = ("pod", "data", "model")[-len(shape):]
+    return MeshConfig(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    cfg = mesh_config(multi_pod=multi_pod)
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    ov = _override(multi_pod)
+    if ov is not None:
+        return ov
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_local_mesh(axes=("data", "model")):
+    """A mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1,) * (len(axes) - 1) + (n,), axes)

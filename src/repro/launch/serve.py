@@ -1,0 +1,72 @@
+"""Serving driver: Armada replicas over real jitted engines.
+
+``python -m repro.launch.serve --arch qwen3-1.7b --requests 12`` builds N
+replica engines (reduced config on CPU), registers them as Armada service
+replicas, routes a batch of generation requests through 2-step selection,
+and reports per-request latency + the selected replicas.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    if cfg.family in ("encdec", "vlm"):
+        print(f"[serve] {args.arch}: engine demo uses decoder-only reduced "
+              f"configs; switching to qwen3-1.7b backbone")
+        cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engines = [ServeEngine(cfg, params, max_batch=args.max_batch,
+                           max_seq=128) for _ in range(args.replicas)]
+    rng = np.random.default_rng(0)
+
+    # probe each replica once (step 2 of Armada selection, in-process)
+    for i, e in enumerate(engines):
+        e.submit(f"probe{i}", list(rng.integers(2, 100, 4)),
+                 max_new_tokens=2)
+        t0 = time.perf_counter()
+        e.run_until_drained()
+        print(f"[probe] replica {i}: {(time.perf_counter()-t0)*1e3:.1f} ms")
+
+    t0 = time.perf_counter()
+    lat = {}
+    for r in range(args.requests):
+        # least-loaded warm replica (queue depth = probe signal here)
+        e = min(engines, key=lambda e: len(e.scheduler.queue)
+                + sum(x is not None for x in e.scheduler.slots))
+        e.submit(f"req{r}", list(rng.integers(2, 100, 8)),
+                 max_new_tokens=args.max_new_tokens)
+        lat[f"req{r}"] = time.perf_counter()
+    done = {}
+    while len(done) < args.requests:
+        for e in engines:
+            for rid, toks in e.step().items():
+                if rid in lat:
+                    done[rid] = (time.perf_counter() - lat[rid]) * 1e3
+    total = time.perf_counter() - t0
+    ms = sorted(done.values())
+    print(f"[serve] {args.requests} requests on {args.replicas} replicas in "
+          f"{total:.2f}s; p50={ms[len(ms)//2]:.0f}ms p95={ms[int(len(ms)*.95)-1]:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container use ``--preset tiny`` (runs a few hundred steps of a
+reduced config in minutes).  On a pod, drop ``--preset`` and pass
+``--mesh single|multi`` to train the full config under the production mesh
+(the same sharding rules the dry-run validates).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.config import SHAPES, TrainConfig, reduced
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--preset", choices=["tiny", "small", "full"],
+                    default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "const"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "tiny":
+        cfg = reduced(cfg)
+        batch, seq = args.batch or 8, args.seq or 128
+    elif args.preset == "small":
+        cfg = reduced(cfg, num_layers=min(cfg.num_layers, 8), d_model=256,
+                      d_ff=1024, vocab_size=4096)
+        batch, seq = args.batch or 16, args.seq or 256
+    else:
+        batch, seq = args.batch or 256, args.seq or 4096
+
+    # MiniCPM trains with WSD (its signature schedule)
+    schedule = "wsd" if args.arch == "minicpm-2b" and \
+        args.schedule == "cosine" else args.schedule
+    tc = TrainConfig(learning_rate=args.lr, schedule=schedule,
+                     warmup_steps=max(args.steps // 20, 5),
+                     decay_steps=args.steps,
+                     stable_steps=int(args.steps * 0.8),
+                     microbatches=args.microbatches,
+                     checkpoint_every=args.checkpoint_every,
+                     remat="none" if args.preset == "tiny" else "full")
+    model = build_model(cfg)
+    trainer = Trainer(model, cfg, tc, batch=batch, seq=seq,
+                      ckpt_dir=f"{args.ckpt_dir}/{args.arch}")
+    start = trainer.init_or_restore()
+    print(f"[train] arch={args.arch} preset={args.preset} "
+          f"params={cfg.param_count()/1e6:.1f}M start_step={start}")
+    metrics = trainer.train(args.steps, log_every=args.log_every)
+    for s in metrics.steps[::args.log_every]:
+        print(f"  step {s['step']:5d} loss {s['loss']:.4f} "
+              f"lr {s['lr']:.2e} {s['ms']:.0f} ms")
+    if metrics.steps:
+        first, last = metrics.steps[0], metrics.steps[-1]
+        print(f"[train] loss {first['loss']:.4f} -> {last['loss']:.4f} "
+              f"({len(metrics.steps)} steps, "
+              f"{metrics.skipped_steps} skipped, "
+              f"{metrics.straggler_steps} stragglers)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: dense / MoE / enc-dec / VLM / xLSTM / Mamba2-hybrid."""

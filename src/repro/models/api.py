@@ -1,0 +1,118 @@
+"""Unified model API: build any assigned architecture from its config.
+
+Every model exposes: param_tree / init / abstract, loss, prefill,
+decode_step, init_cache(_abstract), input_specs, plus the logical-axis
+metadata (cache_axes) the distribution layer needs to shard serve-time
+state.  ``build_model`` dispatches on config.family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.mamba2 import Zamba2
+from repro.models.moe import MoELM
+from repro.models.transformer import DenseLM, VLM
+from repro.models.whisper import WhisperEncDec
+from repro.models.xlstm import XLSTM
+
+
+def build_model(cfg: ModelConfig, *, moe_dispatch: str = "einsum",
+                moe_group: int = 512):
+    if cfg.family == "dense":
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        return MoELM(cfg, dispatch=moe_dispatch, group_size=moe_group)
+    if cfg.family == "vlm":
+        return VLM(cfg)
+    if cfg.family == "encdec":
+        return WhisperEncDec(cfg)
+    if cfg.family == "ssm":
+        assert cfg.xlstm is not None
+        return XLSTM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for inputs and caches (consumed by distributed.sharding)
+# ---------------------------------------------------------------------------
+
+
+def input_axes(specs: Dict[str, Any]) -> Dict[str, tuple]:
+    """Batch-leading logical axes for every model input."""
+    return {name: ("batch",) + (None,) * (s.ndim - 1)
+            for name, s in specs.items()}
+
+
+def cache_axes(model, cache_abstract) -> Dict[str, tuple]:
+    """Logical axes for each cache leaf, keyed by cache dict key."""
+    def axes_for(key: str, s) -> tuple:
+        nd = s.ndim
+        if key in ("k", "v"):
+            return ("layers", "batch", "kv_heads_act", "kv_seq", None)
+        if key in ("cross_k", "cross_v"):
+            return ("layers", "batch", "kv_heads_act", None, None)
+        if key == "lengths":
+            return ("batch",)
+        if key.startswith("conv") or key == "m_conv":
+            return ("layers",) * (nd - 3) + ("batch", "conv", "inner")
+        if key.startswith("ssm") or key == "m_mem":
+            return ("layers",) * (nd - 4) + ("batch", "ssm_heads", None, None)
+        if key.startswith("s_"):                      # sLSTM vector states
+            return ("layers", "batch", "act_embed")
+        return ("batch",) + (None,) * (nd - 1)
+    return {k: axes_for(k, v) for k, v in cache_abstract.items()}
+
+
+# ---------------------------------------------------------------------------
+# Concrete batch synthesis (smoke tests, examples, data pipeline seed)
+# ---------------------------------------------------------------------------
+
+
+def make_batch(cfg: ModelConfig, kind: str, batch: int, seq: int,
+               seed: int = 0, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """A concrete, well-formed batch for any family (small shapes only)."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+
+    def toks(b, t):
+        return jnp.asarray(rng.integers(0, V, (b, t)), jnp.int32)
+
+    if cfg.family == "encdec":
+        feats = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.encoder_feature_dim))
+            .astype(np.float32), dtype)
+        b = {"enc_feats": feats, "tokens": toks(batch, seq),
+             "labels": toks(batch, seq)}
+    elif cfg.family == "vlm" and cfg.num_patches:
+        n_text = max(seq - cfg.num_patches, 1)
+        total = n_text + cfg.num_patches
+        if cfg.attention.mrope_sections:
+            pos = jnp.broadcast_to(jnp.arange(total)[None, :, None],
+                                   (batch, total, 3)).astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(jnp.arange(total)[None, :],
+                                   (batch, total)).astype(jnp.int32)
+        b = {"tokens": toks(batch, n_text), "labels": toks(batch, total),
+             "patches": jnp.asarray(
+                 rng.normal(size=(batch, cfg.num_patches, cfg.d_model))
+                 .astype(np.float32), dtype),
+             "positions": pos,
+             "mask": jnp.concatenate(
+                 [jnp.zeros((batch, cfg.num_patches), bool),
+                  jnp.ones((batch, n_text), bool)], axis=1)}
+    else:
+        b = {"tokens": toks(batch, seq), "labels": toks(batch, seq)}
+
+    if kind == "train":
+        return b
+    b.pop("labels", None)
+    b.pop("mask", None)
+    b["lengths"] = jnp.full((batch,), b["tokens"].shape[1], jnp.int32)
+    return b

@@ -1,0 +1,255 @@
+"""Shared model layers: norms, RoPE/M-RoPE, attention, MLPs, embeddings.
+
+All layers are pure functions over (param-dict, activations).  Parameter
+*declarations* (P leaves) live next to the apply functions so structure,
+init and sharding stay in one place.  Activation sharding uses the logical
+``shard`` hook (no-op outside a mesh/rules context).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig
+from repro.distributed.api import shard
+from repro.kernels.decode_attention import decode_mha
+from repro.kernels.flash_attention import mha
+from repro.models.modules import P
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim: int, theta: float,
+                 sections: Tuple[int, ...] = ()):
+    """positions: (..., ) or (..., 3) for M-RoPE -> angles (..., head_dim/2)."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if sections:
+        # M-RoPE: rotary channels split into (t, h, w) sections, each driven
+        # by its own position component.  positions: (..., 3)
+        assert sum(sections) == half, (sections, half)
+        comp_ix = jnp.repeat(
+            jnp.arange(len(sections)), jnp.asarray(sections),
+            total_repeat_length=half)                       # (half,)
+        pc = jnp.take(positions.astype(jnp.float32), comp_ix, axis=-1)
+        return pc * inv                                     # (..., half)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x, positions, theta: float, sections: Tuple[int, ...] = ()):
+    """x: (B, T, H, D); positions: (B, T) or (B, T, 3) for M-RoPE."""
+    *_, H, D = x.shape
+    ang = _rope_angles(positions, D, theta, sections)       # (B, T, D/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (B, T, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(length: int, dim: int):
+    """Whisper-style fixed sinusoidal embedding table (length, dim)."""
+    half = dim // 2
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (declaration + apply; full/prefill/decode modes)
+# ---------------------------------------------------------------------------
+
+
+def attention_params(a: AttentionConfig, d_model: int, *, layers: int = 0,
+                     cross: bool = False) -> Dict[str, P]:
+    """Param declarations; ``layers`` > 0 prepends a stacked scan axis."""
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    p = {
+        "wq": P(lead + (d_model, a.q_dim), lax_ + ("embed", "heads")),
+        "wk": P(lead + (d_model, a.kv_dim), lax_ + ("embed", "kv_heads")),
+        "wv": P(lead + (d_model, a.kv_dim), lax_ + ("embed", "kv_heads")),
+        "wo": P(lead + (a.q_dim, d_model), lax_ + ("heads", "embed")),
+    }
+    if a.qk_norm:
+        p["q_norm"] = P(lead + (a.head_dim,), lax_ + ("head_dim",), init="ones")
+        p["k_norm"] = P(lead + (a.head_dim,), lax_ + ("head_dim",), init="ones")
+    return p
+
+
+def _project_qkv(p, a: AttentionConfig, x, positions, eps,
+                 kv_from=None, rope: bool = True):
+    """Returns q (B,Tq,H,D), k, v (B,Tk,Hkv,D).  ``kv_from`` for cross-attn."""
+    B, Tq, _ = x.shape
+    src = x if kv_from is None else kv_from
+    Tk = src.shape[1]
+    q = (x @ p["wq"]).reshape(B, Tq, a.num_heads, a.head_dim)
+    k = (src @ p["wk"]).reshape(B, Tk, a.num_kv_heads, a.head_dim)
+    v = (src @ p["wv"]).reshape(B, Tk, a.num_kv_heads, a.head_dim)
+    if a.qk_norm:
+        q = rmsnorm(q, p["q_norm"], eps)
+        k = rmsnorm(k, p["k_norm"], eps)
+    if rope and a.rope_theta:
+        q = apply_rope(q, positions, a.rope_theta, a.mrope_sections)
+        if kv_from is None:
+            k = apply_rope(k, positions, a.rope_theta, a.mrope_sections)
+    return q, k, v
+
+
+def attention_full(p, a: AttentionConfig, x, positions, *, eps=1e-6,
+                   kv_from=None, causal=None, q_offset: int = 0,
+                   return_kv: bool = False):
+    """Full (train / prefill) attention.  x: (B, T, D_model)."""
+    causal = a.causal if causal is None else causal
+    q, k, v = _project_qkv(p, a, x, positions, eps, kv_from=kv_from)
+    q = shard(q, "batch", "act_seq", "heads_act", None)
+    k = shard(k, "batch", "act_seq", "kv_heads_act", None)
+    v = shard(v, "batch", "act_seq", "kv_heads_act", None)
+    o = mha(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal, q_offset=q_offset, window=a.window)
+    o = o.swapaxes(1, 2).reshape(x.shape[0], x.shape[1], a.q_dim)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p, a: AttentionConfig, x, positions, k_cache, v_cache,
+                     lengths, *, eps=1e-6):
+    """One-token decode.  x: (B, 1, D); caches: (B, Hkv, S, D); lengths (B,).
+
+    Writes the new k/v at each sequence's ``lengths`` slot, then attends over
+    ``lengths + 1`` entries.  Returns (out (B,1,D), k_cache, v_cache).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, a, x, positions, eps)
+    k1, v1 = k[:, 0], v[:, 0]                             # (B, Hkv, Dh)
+
+    def write(cache, new, length):
+        # cache: (Hkv, S, Dh); new: (Hkv, Dh)
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new[:, None, :], length, axis=1)
+
+    k_cache = jax.vmap(write)(k_cache, k1, lengths)
+    v_cache = jax.vmap(write)(v_cache, v1, lengths)
+    o = decode_mha(q[:, 0], k_cache, v_cache, lengths + 1)
+    out = o.reshape(B, 1, a.q_dim) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def cross_attention_decode(p, a: AttentionConfig, x, k_cache, v_cache,
+                           enc_len: int):
+    """Decode-time cross-attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    q = (x @ p["wq"]).reshape(B, a.num_heads, a.head_dim)
+    lengths = jnp.full((B,), enc_len, jnp.int32)
+    o = decode_mha(q, k_cache, v_cache, lengths)
+    return o.reshape(B, 1, a.q_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_params(d_model: int, d_ff: int, *, layers: int = 0) -> Dict[str, P]:
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    return {
+        "w_gate": P(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_up": P(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_down": P(lead + (d_ff, d_model), lax_ + ("ff", "embed")),
+    }
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", "act_seq", "ff_act")
+    return h @ p["w_down"]
+
+
+def gelu_mlp_params(d_model: int, d_ff: int, *, layers: int = 0) -> Dict[str, P]:
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    return {
+        "w_in": P(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_out": P(lead + (d_ff, d_model), lax_ + ("ff", "embed")),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu((x @ p["w_in"]).astype(jnp.float32), approximate=True)
+    h = shard(h.astype(x.dtype), "batch", "act_seq", "ff_act")
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise convolution (Mamba2 / xLSTM frontends)
+# ---------------------------------------------------------------------------
+
+
+def causal_depthwise_conv(x, w, b):
+    """x: (B, T, C); w: (K, C) depthwise taps; b: (C,).  Causal (left) pad."""
+    K = w.shape[0]
+    T = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):                      # K is tiny (4): unrolled slices
+        out = out + xp[:, k:k + T, :] * w[k]
+    return out + b
+
+
+def causal_depthwise_conv_step(window, w, b):
+    """One decode step. window: (B, K, C) (oldest..newest); returns (B, C)."""
+    return jnp.sum(window * w[None], axis=1) + b
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embed, tokens):
+    return shard(jnp.take(embed, tokens, axis=0), "batch", "act_seq", "act_embed")
+
+
+def logits_from(x, embed_or_unembed, *, tied: bool):
+    w = embed_or_unembed.T if tied else embed_or_unembed
+    return shard(x @ w.astype(x.dtype), "batch", "act_seq", "vocab_act")
+
+
+def softmax_xent(logits, labels, mask=None, *, z_coef: float = 0.0):
+    """Token-mean cross-entropy in fp32 with optional z-loss."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_coef:
+        nll = nll + z_coef * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

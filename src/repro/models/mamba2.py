@@ -1,0 +1,341 @@
+"""Mamba2 blocks and the Zamba2 hybrid (Mamba2 stack + shared attention).
+
+The SSD scan runs through repro.kernels.ssm_scan (Pallas on TPU, chunked-jnp
+oracle elsewhere).  Zamba2's distinguishing feature — ONE weight-tied
+attention+MLP block applied every ``hybrid_attn_every`` Mamba blocks — maps
+naturally onto a scan over "super-blocks": the shared block's weights are
+closure-captured (not scan xs), so they are stored once but applied at every
+site, exactly like the paper's parameter sharing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.distributed.api import shard
+from repro.kernels.ssm_scan import ssd_scan
+from repro.kernels.ssm_scan.ref import ssd_decode_step
+from repro.models import layers as nn
+from repro.models.modules import P, abstract_params, init_params
+from repro.models.transformer import _remat
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim         # x, B, C go through the conv
+    return d_in, H, s.state_dim, conv_ch
+
+
+def mamba2_param_tree(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d_in, H, N, conv_ch = mamba2_dims(cfg)
+    s = cfg.ssm
+    la = ("layers",) * len(lead)
+    proj_out = 2 * d_in + 2 * N + H          # z, x, B, C, dt
+    return {
+        "norm": P(lead + (cfg.d_model,), la + ("embed",), init="ones"),
+        "in_proj": P(lead + (cfg.d_model, proj_out), la + ("embed", "inner")),
+        "conv_w": P(lead + (s.conv_width, conv_ch), la + ("conv", "inner"),
+                    scale=0.3),
+        "conv_b": P(lead + (conv_ch,), la + ("inner",), init="zeros"),
+        "A_log": P(lead + (H,), la + ("ssm_heads",), init="zeros"),
+        "D": P(lead + (H,), la + ("ssm_heads",), init="ones"),
+        "dt_bias": P(lead + (H,), la + ("ssm_heads",), init="zeros"),
+        "out_norm": P(lead + (d_in,), la + ("inner",), init="ones"),
+        "out_proj": P(lead + (d_in, cfg.d_model), la + ("inner", "embed")),
+    }
+
+
+def _mamba2_project(lp, cfg, x):
+    d_in, H, N, conv_ch = mamba2_dims(cfg)
+    zxbcdt = x @ lp["in_proj"]
+    z, rest = jnp.split(zxbcdt, [d_in], axis=-1)
+    conv_in, dt = jnp.split(rest, [conv_ch], axis=-1)
+    return z, conv_in, dt
+
+
+def _mamba2_ssd_inputs(lp, cfg, conv_out, dt):
+    d_in, H, N, _ = mamba2_dims(cfg)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])     # (..,H)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    g = dt * A
+    xh = xin.reshape(xin.shape[:-1] + (H, cfg.ssm.head_dim))
+    return xh, g, dt, Bc, Cc
+
+
+def mamba2_block(lp, cfg: ModelConfig, x):
+    """Train/prefill form.  x: (B, T, d_model)."""
+    d_in, H, N, _ = mamba2_dims(cfg)
+    h = nn.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    z, conv_in, dt = _mamba2_project(lp, cfg, h)
+    conv_out = jax.nn.silu(
+        nn.causal_depthwise_conv(conv_in, lp["conv_w"], lp["conv_b"]))
+    xh, g, s, Bc, Cc = _mamba2_ssd_inputs(lp, cfg, conv_out, dt)
+    y, _ = ssd_scan(xh, g, s, Bc.astype(xh.dtype), Cc.astype(xh.dtype),
+                    lp["D"].astype(jnp.float32), chunk=cfg.ssm.chunk)
+    y = y.reshape(y.shape[:2] + (d_in,))
+    y = nn.rmsnorm(y * jax.nn.silu(z), lp["out_norm"], cfg.norm_eps)
+    return x + y @ lp["out_proj"]
+
+
+def mamba2_block_decode(lp, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token decode.  x: (B, 1, d); conv_state: (B, K-1, conv_ch);
+    ssm_state: (B, H, P, N) fp32.  Returns (x, conv_state, ssm_state)."""
+    d_in, H, N, conv_ch = mamba2_dims(cfg)
+    h = nn.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    z, conv_in, dt = _mamba2_project(lp, cfg, h)
+    window = jnp.concatenate(
+        [conv_state, conv_in.astype(conv_state.dtype)], axis=1)  # (B, K, ch)
+    conv_out = jax.nn.silu(nn.causal_depthwise_conv_step(
+        window, lp["conv_w"], lp["conv_b"]))[:, None]            # (B, 1, ch)
+    xh, g, s, Bc, Cc = _mamba2_ssd_inputs(lp, cfg, conv_out, dt)
+    y, ssm_state = ssd_decode_step(
+        ssm_state, xh[:, 0].astype(jnp.float32), g[:, 0], s[:, 0],
+        Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32),
+        lp["D"].astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(x.shape[0], 1, d_in)
+    y = nn.rmsnorm(y * jax.nn.silu(z), lp["out_norm"], cfg.norm_eps)
+    return x + y @ lp["out_proj"], window[:, 1:], ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+
+class Zamba2:
+    """Mamba2 backbone with a single shared attention+MLP block applied after
+    every ``hybrid_attn_every`` Mamba2 blocks."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        every = cfg.hybrid_attn_every
+        self.n_super = cfg.num_layers // every
+        self.tail = cfg.num_layers - self.n_super * every
+        self.every = every
+
+    # ------------------------------------------------------------- params
+
+    def param_tree(self) -> Dict[str, Any]:
+        c = self.cfg
+        tree = {
+            "embed": P((c.vocab_size, c.d_model), ("vocab", "embed"),
+                       init="embed"),
+            "mamba": mamba2_param_tree(c, (self.n_super, self.every)),
+            "shared_attn": {
+                "attn_norm": P((c.d_model,), ("embed",), init="ones"),
+                "attn": nn.attention_params(c.attention, c.d_model),
+                "mlp_norm": P((c.d_model,), ("embed",), init="ones"),
+                "mlp": nn.swiglu_params(c.d_model, c.d_ff),
+            },
+            "final_norm": P((c.d_model,), ("embed",), init="ones"),
+            "unembed": P((c.d_model, c.vocab_size), ("embed", "vocab")),
+        }
+        if self.tail:
+            tree["mamba_tail"] = mamba2_param_tree(c, (self.tail,))
+        return tree
+
+    def init(self, rng, dtype="float32"):
+        return init_params(self.param_tree(), rng, dtype)
+
+    def abstract(self, dtype="bfloat16"):
+        return abstract_params(self.param_tree(), dtype)
+
+    # ------------------------------------------------------------ forward
+
+    def _shared_block(self, sp, x, positions):
+        c = self.cfg
+        h = nn.rmsnorm(x, sp["attn_norm"], c.norm_eps)
+        x = x + nn.attention_full(sp["attn"], c.attention, h, positions,
+                                  eps=c.norm_eps)
+        h = nn.rmsnorm(x, sp["mlp_norm"], c.norm_eps)
+        return x + nn.swiglu(sp["mlp"], h)
+
+    def hidden_states(self, params, batch, *, remat="none"):
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = nn.embed_tokens(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+        sp = params["shared_attn"]
+
+        def super_body(carry, mp):
+            def inner(ic, ilp):
+                return mamba2_block(ilp, c, ic), None
+            y, _ = jax.lax.scan(_remat(inner, remat), carry, mp)
+            y = self._shared_block(sp, y, positions)
+            return shard(y, "batch", "act_seq", "act_embed"), None
+
+        x, _ = jax.lax.scan(super_body, x, params["mamba"])
+        if self.tail:
+            def inner(ic, ilp):
+                return mamba2_block(ilp, c, ic), None
+            x, _ = jax.lax.scan(_remat(inner, remat), x,
+                                params["mamba_tail"])
+        return nn.rmsnorm(x, params["final_norm"], c.norm_eps), 0.0
+
+    def loss(self, params, batch, *, remat="full"):
+        x, _ = self.hidden_states(params, batch, remat=remat)
+        logits = nn.logits_from(x, params["unembed"], tied=False)
+        return nn.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+
+    def _abstract_states(self, batch: int, dtype="bfloat16"):
+        c = self.cfg
+        d_in, H, N, conv_ch = mamba2_dims(c)
+        K = c.ssm.conv_width
+        a = c.attention
+
+        def stk(lead, shape, dt):
+            return jax.ShapeDtypeStruct(lead + shape, dt)
+
+        states = {
+            "conv": stk((self.n_super, self.every),
+                        (batch, K - 1, conv_ch), dtype),
+            "ssm": stk((self.n_super, self.every),
+                       (batch, H, c.ssm.head_dim, N), jnp.float32),
+        }
+        if self.tail:
+            states["conv_tail"] = stk((self.tail,), (batch, K - 1, conv_ch),
+                                      dtype)
+            states["ssm_tail"] = stk((self.tail,),
+                                     (batch, H, c.ssm.head_dim, N),
+                                     jnp.float32)
+        return states
+
+    def init_cache_abstract(self, batch: int, max_seq: int, dtype="bfloat16"):
+        c, a = self.cfg, self.cfg.attention
+        cache = self._abstract_states(batch, dtype)
+        cache["k"] = jax.ShapeDtypeStruct(
+            (self.n_super, batch, a.num_kv_heads, max_seq, a.head_dim), dtype)
+        cache["v"] = cache["k"]
+        cache["lengths"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        return cache
+
+    def init_cache(self, batch: int, max_seq: int, dtype="bfloat16"):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.init_cache_abstract(batch, max_seq, dtype))
+
+    def prefill(self, params, batch, max_seq: int):
+        """Prefill via the train-form forward; SSD final states and shared-
+        attention K/V become the cache."""
+        c = self.cfg
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = nn.embed_tokens(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(T), tokens.shape)
+        sp = params["shared_attn"]
+        lengths = batch.get("lengths")
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+
+        def mamba_prefill(ic, ilp):
+            # mamba2_block with state extraction
+            d_in, H, N, _ = mamba2_dims(c)
+            h = nn.rmsnorm(ic, ilp["norm"], c.norm_eps)
+            z, conv_in, dt = _mamba2_project(ilp, c, h)
+            conv_out = jax.nn.silu(nn.causal_depthwise_conv(
+                conv_in, ilp["conv_w"], ilp["conv_b"]))
+            xh, g, s, Bc, Cc = _mamba2_ssd_inputs(ilp, c, conv_out, dt)
+            y, hf = ssd_scan(xh, g, s, Bc.astype(xh.dtype),
+                             Cc.astype(xh.dtype),
+                             ilp["D"].astype(jnp.float32), chunk=c.ssm.chunk)
+            y = y.reshape(y.shape[:2] + (d_in,))
+            y = nn.rmsnorm(y * jax.nn.silu(z), ilp["out_norm"], c.norm_eps)
+            K = c.ssm.conv_width
+            conv_state = conv_in[:, -(K - 1):].astype(ic.dtype) if T >= K - 1 \
+                else jnp.pad(conv_in, ((0, 0), (K - 1 - T, 0), (0, 0))).astype(ic.dtype)
+            return ic + y @ ilp["out_proj"], (conv_state, hf)
+
+        def super_body(carry, mp):
+            y, (convs, ssms) = jax.lax.scan(mamba_prefill, carry, mp)
+            h = nn.rmsnorm(y, sp["attn_norm"], c.norm_eps)
+            a_out, (k, v) = nn.attention_full(
+                sp["attn"], c.attention, h, positions, eps=c.norm_eps,
+                return_kv=True)
+            y = y + a_out
+            h = nn.rmsnorm(y, sp["mlp_norm"], c.norm_eps)
+            y = y + nn.swiglu(sp["mlp"], h)
+            return y, (convs, ssms, k, v)
+
+        x, (convs, ssms, ks, vs) = jax.lax.scan(super_body, x,
+                                                params["mamba"])
+        cache = {"conv": convs, "ssm": ssms, "lengths": lengths}
+        pad = max_seq - T
+        ks = jnp.moveaxis(ks, 3, 2)
+        vs = jnp.moveaxis(vs, 3, 2)
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        cache["k"], cache["v"] = ks, vs
+        if self.tail:
+            x, (convs_t, ssms_t) = jax.lax.scan(mamba_prefill, x,
+                                                params["mamba_tail"])
+            cache["conv_tail"], cache["ssm_tail"] = convs_t, ssms_t
+        x = nn.rmsnorm(x, params["final_norm"], c.norm_eps)
+        x_last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return x_last @ params["unembed"], cache
+
+    def decode_step(self, params, cache, batch):
+        c = self.cfg
+        x = nn.embed_tokens(params["embed"], batch["tokens"])   # (B, 1, d)
+        lengths = cache["lengths"]
+        sp = params["shared_attn"]
+
+        def mamba_dec(carry, xs):
+            ilp, conv_s, ssm_s = xs
+            y, conv_s, ssm_s = mamba2_block_decode(ilp, c, carry, conv_s,
+                                                   ssm_s)
+            return y, (conv_s, ssm_s)
+
+        def super_dec(carry, xs):
+            mp, conv_s, ssm_s, kc, vc = xs
+            y, (conv_s, ssm_s) = jax.lax.scan(mamba_dec, carry,
+                                              (mp, conv_s, ssm_s))
+            h = nn.rmsnorm(y, sp["attn_norm"], c.norm_eps)
+            a_out, kc, vc = nn.attention_decode(
+                sp["attn"], c.attention, h, lengths[:, None], kc, vc,
+                lengths, eps=c.norm_eps)
+            y = y + a_out
+            h = nn.rmsnorm(y, sp["mlp_norm"], c.norm_eps)
+            y = y + nn.swiglu(sp["mlp"], h)
+            return y, (conv_s, ssm_s, kc, vc)
+
+        x, (convs, ssms, k_new, v_new) = jax.lax.scan(
+            super_dec, x,
+            (params["mamba"], cache["conv"], cache["ssm"], cache["k"],
+             cache["v"]))
+        new_cache = dict(cache, conv=convs, ssm=ssms, k=k_new, v=v_new,
+                         lengths=lengths + 1)
+        if self.tail:
+            x, (ct, st) = jax.lax.scan(
+                mamba_dec, x,
+                (params["mamba_tail"], cache["conv_tail"],
+                 cache["ssm_tail"]))
+            new_cache["conv_tail"], new_cache["ssm_tail"] = ct, st
+        x = nn.rmsnorm(x, params["final_norm"], c.norm_eps)
+        return (x @ params["unembed"])[:, 0], new_cache
+
+    # ------------------------------------------------------------- shapes
+
+    def input_specs(self, shape: ShapeConfig, *, dtype="bfloat16"):
+        B, T = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok,
+                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,131 @@
+"""Minimal functional module system on pytrees (no flax in this container).
+
+A model declares its parameters ONCE as a nested dict of :class:`P` leaves
+(shape + logical axes + initializer).  From that single declaration we derive:
+
+* ``init_params``      — materialized, seeded parameter values
+* ``abstract_params``  — ShapeDtypeStructs (dry-run: zero allocation)
+* ``logical_specs``    — PartitionSpec-like tuples of logical axis names
+* ``repro.distributed.sharding.mesh_specs`` — mesh PartitionSpecs via rules
+
+Keeping declaration, init and sharding in one place is what makes the
+40-cell dry-run tractable: sharding rules can never drift from the tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim (or None)
+    init: str = "normal"                     # normal|zeros|ones|scaled|embed
+    scale: Optional[float] = None            # stddev override
+    dtype: Optional[str] = None              # leaf dtype override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # weights are stored (in_dim..., out_dim); treat all but last as fan-in
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    return max(n, 1)
+
+
+def _stddev(p: P) -> float:
+    if p.scale is not None:
+        return p.scale
+    if p.init == "embed":
+        return 0.02
+    return 1.0 / math.sqrt(_fan_in(p.shape if p.axes[0] != "layers"
+                                   else p.shape[1:]))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_params(fn: Callable[[str, P], Any], tree: PyTree,
+                    prefix: str = "") -> PyTree:
+    """Map fn(path, P) over a declaration tree, preserving structure."""
+    if is_param(tree):
+        return fn(prefix, tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_params(fn, v, f"{prefix}/{k}" if prefix else k)
+                for k, v in tree.items()}
+    raise TypeError(f"bad node at {prefix!r}: {type(tree)}")
+
+
+def init_params(tree: PyTree, rng: jax.Array, dtype: str = "float32") -> PyTree:
+    """Materialize parameters. Each leaf gets an independent fold_in'd key."""
+    leaves = []
+    tree_map_params(lambda path, p: leaves.append(path) or None, tree)
+    path_ix = {path: i for i, path in enumerate(sorted(leaves))}
+
+    def make(path: str, p: P):
+        d = p.dtype or dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, d)
+        if p.init == "ones":
+            return jnp.ones(p.shape, d)
+        key = jax.random.fold_in(rng, path_ix[path])
+        std = _stddev(p)
+        return (jax.random.normal(key, p.shape, "float32") * std).astype(d)
+
+    return tree_map_params(make, tree)
+
+
+def abstract_params(tree: PyTree, dtype: str = "bfloat16") -> PyTree:
+    """ShapeDtypeStruct stand-ins — the dry-run path, no allocation."""
+    return tree_map_params(
+        lambda _, p: jax.ShapeDtypeStruct(p.shape, p.dtype or dtype), tree)
+
+
+def logical_specs(tree: PyTree) -> PyTree:
+    """Tree of logical-axis tuples, mirroring the param tree."""
+    return tree_map_params(lambda _, p: p.axes, tree)
+
+
+def param_bytes(tree: PyTree, dtype: str = "bfloat16") -> int:
+    total = [0]
+    itemsize = jnp.dtype(dtype).itemsize
+
+    def acc(_, p):
+        n = 1
+        for s in p.shape:
+            n *= s
+        total[0] += n * jnp.dtype(p.dtype).itemsize if p.dtype else n * itemsize
+        return None
+
+    tree_map_params(acc, tree)
+    return total[0]
+
+
+def param_count_tree(tree: PyTree) -> int:
+    total = [0]
+
+    def acc(_, p):
+        n = 1
+        for s in p.shape:
+            n *= s
+        total[0] += n
+        return None
+
+    tree_map_params(acc, tree)
+    return total[0]

@@ -1,0 +1,139 @@
+"""Mixture-of-experts FFN (DeepSeek fine-grained + Grok coarse top-k).
+
+Two dispatch strategies, selectable per call — this is a first-class perf
+lever in EXPERIMENTS.md §Perf:
+
+* ``einsum``  — GShard-style one-hot dispatch/combine einsums over
+  (groups, group_size, experts, capacity).  The classic pjit-native path:
+  with groups sharded over ("pod","data") and experts over "model", XLA
+  inserts the canonical all-to-all pair around the expert computation.
+* ``gmm``     — dispatch to a dense (E, capacity_total, D) buffer and run
+  the Pallas grouped-matmul kernel (repro.kernels.moe_gmm) per FFN matrix.
+
+Tokens are processed in groups of ``group_size`` so the dispatch one-hots
+stay small (memory ∝ S·E·C per group, see DESIGN.md).  Router aux loss is
+the standard load-balancing term E·Σ_e f_e·p̄_e.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.api import shard
+from repro.kernels.moe_gmm import gmm
+from repro.models import layers as nn
+from repro.models.modules import P
+from repro.models.transformer import DenseLM
+
+GROUP_SIZE = 512
+
+
+def moe_param_tree(cfg: ModelConfig, layers: int) -> Dict[str, Any]:
+    m = cfg.moe
+    L, D, Fe, E = layers, cfg.d_model, m.d_expert, m.num_experts
+    tree = {
+        "router": P((L, D, E), ("layers", "embed", "experts_dim"),
+                    scale=D ** -0.5),
+        "w_gate": P((L, E, D, Fe), ("layers", "experts", "embed", "expert_ff")),
+        "w_up": P((L, E, D, Fe), ("layers", "experts", "embed", "expert_ff")),
+        "w_down": P((L, E, Fe, D), ("layers", "experts", "expert_ff", "embed")),
+    }
+    if m.num_shared_experts:
+        tree["shared"] = nn.swiglu_params(
+            D, Fe * m.num_shared_experts, layers=L)
+    return tree
+
+
+def _capacity(group_size: int, m) -> int:
+    return max(int(group_size * m.experts_per_token / m.num_experts
+                   * m.capacity_factor), 1)
+
+
+def moe_apply(lp, cfg: ModelConfig, x, *, method: str = "einsum",
+              group_size: int = GROUP_SIZE) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, T, D = x.shape
+    E, K = m.num_experts, m.experts_per_token
+    S = min(group_size, B * T)
+    G = (B * T) // S
+    xg = x.reshape(G, S, D)
+
+    logits = xg @ lp["router"].astype(jnp.float32)          # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ix = jax.lax.top_k(probs, K)                 # (G, S, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalize
+
+    # load-balancing aux: E * sum_e (token fraction to e) * (mean prob of e)
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(top_ix, E), axis=2), axis=(0, 1)) / K
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    C = _capacity(S, m)
+    onehot = jax.nn.one_hot(top_ix, E, dtype=jnp.float32)   # (G, S, K, E)
+    flat = onehot.reshape(G, S * K, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                 # pos among expert's tokens
+    ranks = jnp.sum(ranks.reshape(G, S, K, E) * onehot,
+                    axis=-1).astype(jnp.int32)              # (G, S, K)
+    keep = ranks < C                                        # capacity drop
+    w = top_w * keep                                        # (G, S, K)
+
+    if method == "einsum":
+        # dispatch (G,S,E,C): combine over K slots
+        disp = jnp.einsum(
+            "gske,gskc->gsec", onehot,
+            jax.nn.one_hot(ranks, C, dtype=jnp.float32) * keep[..., None])
+        comb = jnp.einsum("gske,gskc,gsk->gsec", onehot,
+                          jax.nn.one_hot(ranks, C, dtype=jnp.float32), w)
+        xe = jnp.einsum("gsec,gsd->gecd", disp.astype(x.dtype), xg)
+        xe = shard(xe, None, "experts", None, None)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, lp["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, lp["w_up"])
+        h = shard(h, None, "experts", None, "expert_ff_act")
+        ye = jnp.einsum("gecf,efd->gecd", h, lp["w_down"])
+        out = jnp.einsum("gsec,gecd->gsd", comb.astype(x.dtype), ye)
+    elif method == "gmm":
+        # scatter tokens into a dense (E, G*C, D) buffer, run the Pallas
+        # grouped matmul, gather back with combine weights.
+        slot = jnp.where(keep, ranks, C - 1).astype(jnp.int32)   # (G,S,K)
+        e_ix = top_ix.reshape(G, S * K)
+        s_ix = slot.reshape(G, S * K)
+        src = jnp.repeat(xg, K, axis=1)                     # (G, S*K, D)
+        keep_f = keep.reshape(G, S * K, 1)
+        buf = jnp.zeros((G, E, C, D), x.dtype)
+        gi = jnp.arange(G)[:, None]
+        buf = buf.at[gi, e_ix, s_ix].add(src * keep_f.astype(x.dtype))
+        be = jnp.moveaxis(buf, 1, 0).reshape(E, G * C, D)
+        h = jax.nn.silu(gmm(be, lp["w_gate"])) * gmm(be, lp["w_up"])
+        ye = gmm(h, lp["w_down"])                           # (E, G*C, D)
+        ye = jnp.moveaxis(ye.reshape(E, G, C, D), 0, 1)     # (G, E, C, D)
+        yk = ye[gi, e_ix, s_ix]                             # (G, S*K, D)
+        out = jnp.sum(
+            yk.reshape(G, S, K, D) * w[..., None].astype(x.dtype), axis=2)
+    else:
+        raise ValueError(f"unknown moe dispatch {method!r}")
+
+    if m.num_shared_experts:
+        out = out + nn.swiglu(lp["shared"], xg)
+    return out.reshape(B, T, D), aux.astype(jnp.float32)
+
+
+class MoELM(DenseLM):
+    """Dense attention + MoE FFN.  ``dispatch`` chooses the MoE path;
+    ``group_size`` trades dispatch-tensor memory vs capacity-padding waste
+    (a §Perf lever)."""
+
+    def __init__(self, cfg: ModelConfig, dispatch: str = "einsum",
+                 group_size: int = GROUP_SIZE):
+        super().__init__(cfg)
+        self.dispatch = dispatch
+        self.group_size = group_size
+
+    def _ffn_param_tree(self):
+        return moe_param_tree(self.cfg, self.cfg.num_layers)
+
+    def _ffn_apply(self, lp, x):
+        return moe_apply(lp, self.cfg, x, method=self.dispatch,
+                         group_size=self.group_size)

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend stubbed).
+
+Per the assignment, ``input_specs`` provides precomputed frame embeddings
+(batch, encoder_seq, feature_dim); the conv1d+mel frontend is out of scope.
+Decoder positions use fixed sinusoids (the learned table would tie parameter
+shapes to the input shape; noted in DESIGN.md).  No RoPE (rope_theta=0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.distributed.api import shard
+from repro.models import layers as nn
+from repro.models.modules import P, abstract_params, init_params
+from repro.models.transformer import _remat
+
+
+class WhisperEncDec:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+
+    def param_tree(self) -> Dict[str, Any]:
+        c = self.cfg
+        Le, Ld = c.num_encoder_layers, c.num_layers
+        enc = {
+            "attn_norm": P((Le, c.d_model), ("layers", "embed"), init="ones"),
+            "attn": nn.attention_params(c.attention, c.d_model, layers=Le),
+            "mlp_norm": P((Le, c.d_model), ("layers", "embed"), init="ones"),
+            "mlp": nn.gelu_mlp_params(c.d_model, c.d_ff, layers=Le),
+        }
+        dec = {
+            "self_norm": P((Ld, c.d_model), ("layers", "embed"), init="ones"),
+            "self_attn": nn.attention_params(c.attention, c.d_model, layers=Ld),
+            "cross_norm": P((Ld, c.d_model), ("layers", "embed"), init="ones"),
+            "cross_attn": nn.attention_params(c.attention, c.d_model,
+                                              layers=Ld),
+            "mlp_norm": P((Ld, c.d_model), ("layers", "embed"), init="ones"),
+            "mlp": nn.gelu_mlp_params(c.d_model, c.d_ff, layers=Ld),
+        }
+        return {
+            "feat_proj": P((c.encoder_feature_dim, c.d_model),
+                           ("embed_in", "embed")),
+            "enc_pos": P((c.encoder_seq, c.d_model), (None, "embed"),
+                         init="embed"),
+            "enc_blocks": enc,
+            "enc_norm": P((c.d_model,), ("embed",), init="ones"),
+            "embed": P((c.vocab_size, c.d_model), ("vocab", "embed"),
+                       init="embed"),
+            "dec_blocks": dec,
+            "dec_norm": P((c.d_model,), ("embed",), init="ones"),
+            "unembed": P((c.d_model, c.vocab_size), ("embed", "vocab")),
+        }
+
+    def init(self, rng, dtype="float32"):
+        return init_params(self.param_tree(), rng, dtype)
+
+    def abstract(self, dtype="bfloat16"):
+        return abstract_params(self.param_tree(), dtype)
+
+    # ------------------------------------------------------------ encoder
+
+    def encode(self, params, feats, *, remat="none"):
+        c = self.cfg
+        x = feats.astype(params["feat_proj"].dtype) @ params["feat_proj"]
+        x = x + params["enc_pos"][None, :x.shape[1]]
+        x = shard(x, "batch", "act_seq", "act_embed")
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, lp):
+            h = nn.rmsnorm(carry, lp["attn_norm"], c.norm_eps)
+            y = carry + nn.attention_full(lp["attn"], c.attention, h,
+                                          positions, eps=c.norm_eps,
+                                          causal=False)
+            h = nn.rmsnorm(y, lp["mlp_norm"], c.norm_eps)
+            y = y + nn.gelu_mlp(lp["mlp"], h)
+            return shard(y, "batch", "act_seq", "act_embed"), None
+
+        x, _ = jax.lax.scan(_remat(body, remat), x, params["enc_blocks"])
+        return nn.rmsnorm(x, params["enc_norm"], c.norm_eps)
+
+    # ------------------------------------------------------------ decoder
+
+    def _embed_dec(self, params, tokens):
+        x = nn.embed_tokens(params["embed"], tokens)
+        pos = nn.sinusoid_positions(tokens.shape[1], self.cfg.d_model)
+        return x + pos[None].astype(x.dtype)
+
+    def decode_hidden(self, params, tokens, enc_out, *, remat="none",
+                      return_kv=False):
+        c = self.cfg
+        x = self._embed_dec(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, lp):
+            h = nn.rmsnorm(carry, lp["self_norm"], c.norm_eps)
+            a, (k, v) = nn.attention_full(lp["self_attn"], c.attention, h,
+                                          positions, eps=c.norm_eps,
+                                          causal=True, return_kv=True)
+            y = carry + a
+            h = nn.rmsnorm(y, lp["cross_norm"], c.norm_eps)
+            ca, (ck, cv) = nn.attention_full(lp["cross_attn"], c.attention, h,
+                                             positions, eps=c.norm_eps,
+                                             kv_from=enc_out, causal=False,
+                                             return_kv=True)
+            y = y + ca
+            h = nn.rmsnorm(y, lp["mlp_norm"], c.norm_eps)
+            y = y + nn.gelu_mlp(lp["mlp"], h)
+            y = shard(y, "batch", "act_seq", "act_embed")
+            if return_kv:
+                return y, (k, v, ck, cv)
+            return y, None
+
+        x, kv = jax.lax.scan(_remat(body, remat), x, params["dec_blocks"])
+        return nn.rmsnorm(x, params["dec_norm"], c.norm_eps), kv
+
+    # -------------------------------------------------------------- train
+
+    def hidden_states(self, params, batch, *, remat="none"):
+        enc_out = self.encode(params, batch["enc_feats"], remat=remat)
+        x, _ = self.decode_hidden(params, batch["tokens"], enc_out,
+                                  remat=remat)
+        return x, 0.0
+
+    def loss(self, params, batch, *, remat="full"):
+        x, _ = self.hidden_states(params, batch, remat=remat)
+        logits = nn.logits_from(x, params["unembed"], tied=False)
+        return nn.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+
+    def prefill(self, params, batch, max_seq: int):
+        c = self.cfg
+        enc_out = self.encode(params, batch["enc_feats"])
+        x, kv = self.decode_hidden(params, batch["tokens"], enc_out,
+                                   return_kv=True)
+        ks, vs, cks, cvs = kv
+        B, T = batch["tokens"].shape
+        lengths = batch.get("lengths")
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        pad = max_seq - T
+        ks = jnp.moveaxis(ks, 3, 2)                # (L, B, Hkv, T, Dh)
+        vs = jnp.moveaxis(vs, 3, 2)
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        cache = {
+            "k": ks, "v": vs,
+            "cross_k": jnp.moveaxis(cks, 3, 2),    # (L, B, Hkv, Tenc, Dh)
+            "cross_v": jnp.moveaxis(cvs, 3, 2),
+            "lengths": lengths,
+        }
+        x_last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = x_last @ params["unembed"]
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        c = self.cfg
+        tokens = batch["tokens"]                    # (B, 1)
+        B = tokens.shape[0]
+        lengths = cache["lengths"]
+        x = nn.embed_tokens(params["embed"], tokens)
+        # per-row sinusoid at the current position
+        pos_table = nn.sinusoid_positions(cache["k"].shape[3], c.d_model)
+        x = x + jnp.take(pos_table, lengths, axis=0)[:, None].astype(x.dtype)
+        enc_len = cache["cross_k"].shape[3]
+
+        def body(carry, xs):
+            lp, kc, vc, ck, cv = xs
+            h = nn.rmsnorm(carry, lp["self_norm"], c.norm_eps)
+            a, kc, vc = nn.attention_decode(
+                lp["self_attn"], c.attention, h, lengths[:, None], kc, vc,
+                lengths, eps=c.norm_eps)
+            y = carry + a
+            h = nn.rmsnorm(y, lp["cross_norm"], c.norm_eps)
+            y = y + nn.cross_attention_decode(
+                lp["cross_attn"], c.attention, h, ck, cv, enc_len)
+            h = nn.rmsnorm(y, lp["mlp_norm"], c.norm_eps)
+            y = y + nn.gelu_mlp(lp["mlp"], h)
+            return y, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = nn.rmsnorm(x, params["dec_norm"], c.norm_eps)
+        logits = (x @ params["unembed"])[:, 0]
+        new_cache = dict(cache, k=k_new, v=v_new, lengths=lengths + 1)
+        return logits, new_cache
+
+    # ------------------------------------------------------------- shapes
+
+    def init_cache_abstract(self, batch: int, max_seq: int, dtype="bfloat16"):
+        c, a = self.cfg, self.cfg.attention
+        kv = jax.ShapeDtypeStruct(
+            (c.num_layers, batch, a.num_kv_heads, max_seq, a.head_dim), dtype)
+        ckv = jax.ShapeDtypeStruct(
+            (c.num_layers, batch, a.num_kv_heads, c.encoder_seq, a.head_dim),
+            dtype)
+        return {"k": kv, "v": kv, "cross_k": ckv, "cross_v": ckv,
+                "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def init_cache(self, batch: int, max_seq: int, dtype="bfloat16"):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.init_cache_abstract(batch, max_seq, dtype))
+
+    def input_specs(self, shape: ShapeConfig, *, dtype="bfloat16"):
+        c = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        feats = jax.ShapeDtypeStruct(
+            (B, c.encoder_seq, c.encoder_feature_dim), dtype)
+        tok = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        if shape.kind == "train":
+            return {"enc_feats": feats, "tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"enc_feats": feats, "tokens": tok,
+                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

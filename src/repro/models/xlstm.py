@@ -1,0 +1,366 @@
+"""xLSTM block stack: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+The mLSTM matrix-memory recurrence C_t = σ(f̃_t)·C_{t-1} + exp(ĩ_t)·v_t k_tᵀ
+is an instance of the generalized SSD primitive (g = logσ(f̃), s = exp(ĩ),
+x = v, B = k, C = q) — so training/prefill reuse the validated
+repro.kernels.ssm_scan Pallas kernel with per-head B/C, with the mLSTM
+normalizer n folded in as an extra channel of x (x_aug = [v, 1]).
+q/k/v are block-diagonal per head as in the reference implementation.
+
+sLSTM has a nonlinear recurrence (no parallel form): a lax.scan over time
+with per-head block-diagonal recurrent weights and the standard m-stabilizer.
+The block layout follows the 1.3B config: one sLSTM block every
+``slstm_every`` blocks, the rest mLSTM; we scan over "super-blocks" of
+``slstm_every`` layers so the stacked-weights trick still applies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.distributed.api import shard
+from repro.kernels.ssm_scan import ssd_scan
+from repro.kernels.ssm_scan.ref import ssd_decode_step
+from repro.models import layers as nn
+from repro.models.modules import P, abstract_params, init_params
+from repro.models.transformer import _remat
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    x = cfg.xlstm
+    d_in = int(x.mlstm_proj_factor * cfg.d_model)
+    H = x.num_heads
+    return d_in, H, d_in // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_param_tree(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d_in, H, Ph = _dims(cfg)
+    x = cfg.xlstm
+    la = ("layers",) * len(lead)
+    return {
+        "norm": P(lead + (cfg.d_model,), la + ("embed",), init="ones"),
+        "w_up": P(lead + (cfg.d_model, 2 * d_in), la + ("embed", "inner")),
+        "conv_w": P(lead + (x.conv_width, d_in), la + ("conv", "inner"),
+                    scale=0.3),
+        "conv_b": P(lead + (d_in,), la + ("inner",), init="zeros"),
+        "wq": P(lead + (H, Ph, Ph), la + ("ssm_heads", "head_in", "head_out")),
+        "wk": P(lead + (H, Ph, Ph), la + ("ssm_heads", "head_in", "head_out")),
+        "wv": P(lead + (H, Ph, Ph), la + ("ssm_heads", "head_in", "head_out")),
+        "w_i": P(lead + (d_in, H), la + ("inner", "ssm_heads"), scale=0.01),
+        "b_i": P(lead + (H,), la + ("ssm_heads",), init="zeros"),
+        "w_f": P(lead + (d_in, H), la + ("inner", "ssm_heads"), scale=0.01),
+        "b_f": P(lead + (H,), la + ("ssm_heads",), init="ones", scale=3.0),
+        "out_norm": P(lead + (d_in,), la + ("inner",), init="ones"),
+        "w_down": P(lead + (d_in, cfg.d_model), la + ("inner", "embed")),
+    }
+
+
+def _mlstm_qkv_gates(lp, cfg, xm, conv_out):
+    """xm, conv_out: (..., d_in) -> q,k,v (..., H, Ph), g, s (..., H)."""
+    d_in, H, Ph = _dims(cfg)
+    xh = conv_out.reshape(conv_out.shape[:-1] + (H, Ph))
+    vh = xm.reshape(xm.shape[:-1] + (H, Ph))
+    q = jnp.einsum("...hp,hpq->...hq", xh, lp["wq"])
+    k = jnp.einsum("...hp,hpq->...hq", xh, lp["wk"]) * (Ph ** -0.5)
+    v = jnp.einsum("...hp,hpq->...hq", vh, lp["wv"])
+    i_log = (xm @ lp["w_i"] + lp["b_i"]).astype(jnp.float32)
+    f_log = (xm @ lp["w_f"] + lp["b_f"]).astype(jnp.float32)
+    g = jax.nn.log_sigmoid(f_log)
+    s = jnp.exp(jnp.minimum(i_log, 10.0))       # clamp for safety
+    return q, k, v, g, s
+
+
+def mlstm_block(lp, cfg: ModelConfig, x):
+    """Train/prefill form via the SSD kernel.  x: (B, T, d_model)."""
+    d_in, H, Ph = _dims(cfg)
+    h = nn.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    up = h @ lp["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_out = jax.nn.silu(
+        nn.causal_depthwise_conv(xm, lp["conv_w"], lp["conv_b"]))
+    q, k, v, g, s = _mlstm_qkv_gates(lp, cfg, xm, conv_out)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    x_aug = jnp.concatenate([v, ones], axis=-1)           # normalizer channel
+    y_aug, _ = ssd_scan(x_aug, g, s, k, q,
+                        jnp.zeros((H,), jnp.float32), chunk=64)
+    num, den = y_aug[..., :Ph], y_aug[..., Ph:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(y.shape[:2] + (d_in,))
+    y = nn.rmsnorm(y, lp["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ lp["w_down"]
+
+
+def mlstm_block_decode(lp, cfg: ModelConfig, x, conv_state, mem_state):
+    """One-token decode.  conv_state: (B, K-1, d_in); mem_state:
+    (B, H, Ph+1, Ph) fp32 (the SSD state with the normalizer channel)."""
+    d_in, H, Ph = _dims(cfg)
+    h = nn.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    up = h @ lp["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([conv_state, xm.astype(conv_state.dtype)],
+                             axis=1)
+    conv_out = jax.nn.silu(nn.causal_depthwise_conv_step(
+        window, lp["conv_w"], lp["conv_b"]))[:, None]
+    q, k, v, g, s = _mlstm_qkv_gates(lp, cfg, xm, conv_out)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    x_aug = jnp.concatenate([v, ones], axis=-1)[:, 0]     # (B, H, Ph+1)
+    y_aug, mem_state = ssd_decode_step(
+        mem_state, x_aug.astype(jnp.float32), g[:, 0], s[:, 0],
+        k[:, 0].astype(jnp.float32), q[:, 0].astype(jnp.float32),
+        jnp.zeros((H,), jnp.float32))
+    num, den = y_aug[..., :Ph], y_aug[..., Ph:]
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)).astype(x.dtype)
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = nn.rmsnorm(y, lp["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ lp["w_down"], window[:, 1:], mem_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_param_tree(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d = cfg.d_model
+    x = cfg.xlstm
+    H = x.num_heads
+    Ph = d // H
+    d_ff = int(x.slstm_proj_factor * d)
+    la = ("layers",) * len(lead)
+    return {
+        "norm": P(lead + (d,), la + ("embed",), init="ones"),
+        "w_gates": P(lead + (d, 4 * d), la + ("embed", "inner"), scale=0.02),
+        "r_gates": P(lead + (H, Ph, 4 * Ph),
+                     la + ("ssm_heads", "head_in", "head_out"), scale=0.02),
+        "b_gates": P(lead + (4 * d,), la + ("inner",), init="zeros"),
+        "ffn_norm": P(lead + (d,), la + ("embed",), init="ones"),
+        "ffn": {
+            "w_in": P(lead + (d, d_ff), la + ("embed", "ff")),
+            "w_out": P(lead + (d_ff, d), la + ("ff", "embed")),
+        },
+    }
+
+
+def _slstm_step(carry, wx_t, r_gates, H, Ph):
+    """carry: (h, c, n, m) each (B, d).  wx_t: (B, 4d) precomputed Wx+b."""
+    h, c, n, m = carry
+    B, d = h.shape
+    rh = jnp.einsum("bhp,hpq->bhq", h.reshape(B, H, Ph), r_gates)
+    rh = rh.reshape(B, H, 4, Ph).swapaxes(1, 2).reshape(B, 4 * d)
+    gates = (wx_t + rh).astype(jnp.float32)
+    i_t, f_t, z_t, o_t = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(f_t + m - m_new)
+    z = jnp.tanh(z_t)
+    o = jax.nn.sigmoid(o_t)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (h_new.astype(h.dtype), c, n, m_new), h_new
+
+
+def slstm_scan(lp, cfg: ModelConfig, x, state=None):
+    """x: (B, T, d).  Returns (y, final_state).  Sequential over T."""
+    H = cfg.xlstm.num_heads
+    d = cfg.d_model
+    Ph = d // H
+    B, T, _ = x.shape
+    wx = x @ lp["w_gates"] + lp["b_gates"]                # (B, T, 4d)
+    if state is None:
+        zero = jnp.zeros((B, d), jnp.float32)
+        state = (jnp.zeros((B, d), x.dtype), zero, zero,
+                 jnp.full((B, d), -1e9, jnp.float32))
+
+    def step(carry, wx_t):
+        return _slstm_step(carry, wx_t, lp["r_gates"], H, Ph)
+
+    state, ys = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def slstm_block(lp, cfg: ModelConfig, x, state=None):
+    h = nn.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    y, state = slstm_scan(lp, cfg, h, state)
+    x = x + y
+    h = nn.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    return x + nn.gelu_mlp(lp["ffn"], h), state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+class XLSTM:
+    """Super-blocks of (1 sLSTM + (slstm_every-1) mLSTM), scanned."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        every = cfg.xlstm.slstm_every
+        assert cfg.num_layers % every == 0, (cfg.num_layers, every)
+        self.n_super = cfg.num_layers // every
+        self.n_mlstm = every - 1
+
+    def param_tree(self) -> Dict[str, Any]:
+        c = self.cfg
+        return {
+            "embed": P((c.vocab_size, c.d_model), ("vocab", "embed"),
+                       init="embed"),
+            "slstm": slstm_param_tree(c, (self.n_super,)),
+            "mlstm": mlstm_param_tree(c, (self.n_super, self.n_mlstm)),
+            "final_norm": P((c.d_model,), ("embed",), init="ones"),
+            "unembed": P((c.d_model, c.vocab_size), ("embed", "vocab")),
+        }
+
+    def init(self, rng, dtype="float32"):
+        return init_params(self.param_tree(), rng, dtype)
+
+    def abstract(self, dtype="bfloat16"):
+        return abstract_params(self.param_tree(), dtype)
+
+    # ------------------------------------------------------------ forward
+
+    def hidden_states(self, params, batch, *, remat="none"):
+        c = self.cfg
+        x = nn.embed_tokens(params["embed"], batch["tokens"])
+
+        def super_body(carry, xs):
+            slp, mlp_stack = xs
+            y, _ = slstm_block(slp, c, carry)
+
+            def inner(ic, ilp):
+                return mlstm_block(ilp, c, ic), None
+
+            y, _ = jax.lax.scan(_remat(inner, remat), y, mlp_stack)
+            return shard(y, "batch", "act_seq", "act_embed"), None
+
+        x, _ = jax.lax.scan(super_body, x,
+                            (params["slstm"], params["mlstm"]))
+        return nn.rmsnorm(x, params["final_norm"], c.norm_eps), 0.0
+
+    def loss(self, params, batch, *, remat="full"):
+        x, _ = self.hidden_states(params, batch, remat=remat)
+        logits = nn.logits_from(x, params["unembed"], tied=False)
+        return nn.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+
+    def init_cache_abstract(self, batch: int, max_seq: int, dtype="bfloat16"):
+        c = self.cfg
+        d_in, H, Ph = _dims(c)
+        K = c.xlstm.conv_width
+        d = c.d_model
+        f32 = jnp.float32
+        return {
+            "s_h": jax.ShapeDtypeStruct((self.n_super, batch, d), dtype),
+            "s_c": jax.ShapeDtypeStruct((self.n_super, batch, d), f32),
+            "s_n": jax.ShapeDtypeStruct((self.n_super, batch, d), f32),
+            "s_m": jax.ShapeDtypeStruct((self.n_super, batch, d), f32),
+            "m_conv": jax.ShapeDtypeStruct(
+                (self.n_super, self.n_mlstm, batch, K - 1, d_in), dtype),
+            "m_mem": jax.ShapeDtypeStruct(
+                (self.n_super, self.n_mlstm, batch, H, Ph + 1, Ph), f32),
+            "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+
+    def init_cache(self, batch: int, max_seq: int, dtype="bfloat16"):
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             self.init_cache_abstract(batch, max_seq, dtype))
+        cache["s_m"] = jnp.full(cache["s_m"].shape, -1e9, jnp.float32)
+        return cache
+
+    def prefill(self, params, batch, max_seq: int):
+        """Prefill by running the chunked forward and extracting states."""
+        c = self.cfg
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        lengths = batch.get("lengths")
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        x = nn.embed_tokens(params["embed"], tokens)
+        d_in, H, Ph = _dims(c)
+        K = c.xlstm.conv_width
+
+        def mlstm_prefill(ic, ilp):
+            h = nn.rmsnorm(ic, ilp["norm"], c.norm_eps)
+            up = h @ ilp["w_up"]
+            xm, z = jnp.split(up, 2, axis=-1)
+            conv_out = jax.nn.silu(nn.causal_depthwise_conv(
+                xm, ilp["conv_w"], ilp["conv_b"]))
+            q, k, v, g, s = _mlstm_qkv_gates(ilp, c, xm, conv_out)
+            ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+            x_aug = jnp.concatenate([v, ones], axis=-1)
+            y_aug, hf = ssd_scan(x_aug, g, s, k, q,
+                                 jnp.zeros((H,), jnp.float32), chunk=64)
+            num, den = y_aug[..., :Ph], y_aug[..., Ph:]
+            y = num / jnp.maximum(jnp.abs(den), 1.0)
+            y = y.reshape(y.shape[:2] + (d_in,))
+            y = nn.rmsnorm(y, ilp["out_norm"], c.norm_eps) * jax.nn.silu(z)
+            conv_state = xm[:, -(K - 1):].astype(ic.dtype) if T >= K - 1 else \
+                jnp.pad(xm, ((0, 0), (K - 1 - T, 0), (0, 0))).astype(ic.dtype)
+            return ic + y @ ilp["w_down"], (conv_state, hf)
+
+        def super_body(carry, xs):
+            slp, mlp_stack = xs
+            y, (sh, sc, sn, sm) = slstm_block(slp, c, carry)
+            y, (convs, mems) = jax.lax.scan(mlstm_prefill, y, mlp_stack)
+            return y, (sh, sc, sn, sm, convs, mems)
+
+        x, (sh, sc, sn, sm, convs, mems) = jax.lax.scan(
+            super_body, x, (params["slstm"], params["mlstm"]))
+        x = nn.rmsnorm(x, params["final_norm"], c.norm_eps)
+        x_last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        cache = {"s_h": sh, "s_c": sc, "s_n": sn, "s_m": sm,
+                 "m_conv": convs, "m_mem": mems, "lengths": lengths}
+        return x_last @ params["unembed"], cache
+
+    def decode_step(self, params, cache, batch):
+        c = self.cfg
+        x = nn.embed_tokens(params["embed"], batch["tokens"])   # (B, 1, d)
+
+        def mlstm_dec(carry, xs):
+            ilp, conv_s, mem_s = xs
+            y, conv_s, mem_s = mlstm_block_decode(ilp, c, carry, conv_s,
+                                                  mem_s)
+            return y, (conv_s, mem_s)
+
+        def super_dec(carry, xs):
+            slp, mlp_stack, sh, sc, sn, sm, conv_s, mem_s = xs
+            h = nn.rmsnorm(carry, slp["norm"], c.norm_eps)
+            y1, (sh, sc, sn, sm) = slstm_scan(slp, c, h, (sh, sc, sn, sm))
+            y = carry + y1
+            h = nn.rmsnorm(y, slp["ffn_norm"], c.norm_eps)
+            y = y + nn.gelu_mlp(slp["ffn"], h)
+            y, (conv_s, mem_s) = jax.lax.scan(mlstm_dec, y,
+                                              (mlp_stack, conv_s, mem_s))
+            return y, (sh, sc, sn, sm, conv_s, mem_s)
+
+        x, (sh, sc, sn, sm, convs, mems) = jax.lax.scan(
+            super_dec, x,
+            (params["slstm"], params["mlstm"], cache["s_h"], cache["s_c"],
+             cache["s_n"], cache["s_m"], cache["m_conv"], cache["m_mem"]))
+        x = nn.rmsnorm(x, params["final_norm"], c.norm_eps)
+        new_cache = {"s_h": sh, "s_c": sc, "s_n": sn, "s_m": sm,
+                     "m_conv": convs, "m_mem": mems,
+                     "lengths": cache["lengths"] + 1}
+        return (x @ params["unembed"])[:, 0], new_cache
+
+    def input_specs(self, shape: ShapeConfig, *, dtype="bfloat16"):
+        B, T = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok,
+                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,74 @@
+"""Sharded AdamW (no optax in this container — built from scratch).
+
+Moments are fp32 and inherit the parameter sharding (params are already 2D
+ZeRO/TP sharded by the rules engine, so optimizer state is ZeRO-sharded for
+free).  Update math runs in fp32 regardless of param dtype; global-norm
+clipping and decoupled weight decay included.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () int32
+    mu: Any                  # pytree like params (fp32)
+    nu: Any                  # pytree like params (fp32)
+
+
+class AdamW:
+    def __init__(self, tc: TrainConfig):
+        self.tc = tc
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.tc.opt_state_dtype)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree.map(jnp.copy, zeros))
+
+    def init_abstract(self, params) -> OptState:
+        dt = jnp.dtype(self.tc.opt_state_dtype)
+        z = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, dt), params)
+        return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z, nu=z)
+
+    def update(self, grads, state: OptState, params, lr):
+        tc = self.tc
+        step = state.step + 1
+        # global-norm clip in fp32
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9)) \
+            if tc.grad_clip else 1.0
+
+        b1, b2 = tc.beta1, tc.beta2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        sdt = jnp.dtype(tc.opt_state_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + tc.eps)
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m.astype(sdt), v.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step=step, mu=mu, nu=nu), gnorm

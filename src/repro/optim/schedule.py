@@ -1,0 +1,40 @@
+"""Learning-rate schedules: cosine, constant, and MiniCPM's WSD.
+
+WSD (warmup-stable-decay, arXiv:2404.06395): linear warmup -> long stable
+plateau -> short (10-20%) sharp decay.  MiniCPM is one of the assigned
+architectures, so WSD is a first-class schedule here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    peak = tc.learning_rate
+    warm = max(tc.warmup_steps, 1)
+
+    def cosine(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * s / warm
+        frac = jnp.clip((s - warm) / max(tc.decay_steps - warm, 1), 0.0, 1.0)
+        cos_lr = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warm, warm_lr, cos_lr)
+
+    def wsd(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * s / warm
+        decay_start = tc.stable_steps
+        decay_len = max(tc.decay_steps - tc.stable_steps, 1)
+        frac = jnp.clip((s - decay_start) / decay_len, 0.0, 1.0)
+        # exponential-style sharp decay to 10% of peak
+        decay_lr = peak * jnp.power(0.1, frac)
+        return jnp.where(s < warm, warm_lr,
+                         jnp.where(s < decay_start, peak, decay_lr))
+
+    def const(step):
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < warm, peak * s / warm, peak)
+
+    return {"cosine": cosine, "wsd": wsd, "const": const}[tc.schedule]

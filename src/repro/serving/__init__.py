@@ -1,0 +1,2 @@
+"""Serving substrate: jitted engines with continuous batching + sessions."""
+from repro.serving.engine import ServeEngine  # noqa: F401

@@ -1,0 +1,61 @@
+"""Continuous-batching scheduler: slot assignment over a fixed decode batch.
+
+Invariants (property-tested in tests/test_serving.py):
+* a slot serves at most one request at a time
+* every admitted request eventually maps to exactly one slot
+* per-slot cache length == prompt length + tokens generated so far
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class GenRequest:
+    request_id: str
+    prompt: List[int]
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+    session_id: Optional[str] = None        # Cargo-backed session (failover)
+
+
+class SlotScheduler:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.queue: List[GenRequest] = []
+        self.slots: List[Optional[GenRequest]] = [None] * max_batch
+        self.finished: List[GenRequest] = []
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self) -> List[tuple]:
+        """Assign queued requests to free slots; returns [(slot, request)]."""
+        placed = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            req.slot = slot
+            self.slots[slot] = req
+            placed.append((slot, req))
+        return placed
+
+    def active(self) -> List[GenRequest]:
+        return [r for r in self.slots if r is not None]
+
+    def complete(self, req: GenRequest):
+        req.done = True
+        self.finished.append(req)
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+
+    def drain(self) -> bool:
+        return not self.queue and not any(self.slots)

@@ -1,0 +1,57 @@
+"""Cargo-backed sessions: extract/attach one slot's generation state.
+
+Armada forbids hard client state on (volatile) serving nodes — §2.4.  A
+session blob holds the request's prompt, generated tokens, and its slice of
+the KV/recurrent cache; it can be written to the Cargo layer and re-attached
+on ANY other replica of the same architecture, making mid-generation
+failover lossless.  For SSM/hybrid archs the blob carries O(1) recurrent
+state instead of KV pages (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batching import GenRequest
+
+
+def export_slot(engine, req: GenRequest) -> bytes:
+    """Serialize one slot's cache slice + request progress."""
+    slot = req.slot
+    assert slot is not None
+
+    cache = {
+        key: np.asarray(jax.lax.dynamic_slice_in_dim(
+            c, slot, 1, axis=engine.cache_batch_axis[key]))
+        for key, c in engine.cache.items()
+    }
+    blob = {
+        "cache": cache,
+        "request_id": req.request_id,
+        "prompt": req.prompt,
+        "generated": req.generated,
+        "max_new_tokens": req.max_new_tokens,
+        "arch": engine.cfg.name,
+    }
+    return pickle.dumps(blob)
+
+
+def import_session(engine, data: bytes) -> GenRequest:
+    """Attach a session blob to a free slot of another engine replica."""
+    blob = pickle.loads(data)
+    assert blob["arch"] == engine.cfg.name, "cross-arch session"
+    free = engine.scheduler.free_slots()
+    if not free:
+        raise RuntimeError("no free slot")
+    slot = free[0]
+    sub = jax.tree.map(jnp.asarray, blob["cache"])
+    engine.cache = engine._splice(engine.cache, sub, slot)
+    req = GenRequest(blob["request_id"], blob["prompt"],
+                     blob["max_new_tokens"],
+                     generated=list(blob["generated"]), slot=slot)
+    engine.scheduler.slots[slot] = req
+    return req

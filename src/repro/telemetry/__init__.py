@@ -1,0 +1,1 @@
+"""Telemetry: roofline terms from compiled artifacts, HLO collective parsing."""

@@ -1,0 +1,343 @@
+"""While-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring
+the trip count — which undercounts every scanned-layer model by ~num_layers
+(verified in tests/test_telemetry.py).  Since all our models scan over
+layers and microbatches, we walk the compiled per-device HLO ourselves:
+
+* dot flops = 2 · |out| · |contracting dims|, via a per-computation symbol
+  table (operands in compiled HLO are bare ``%names``)
+* HBM traffic model: every materialized op reads its operands and writes its
+  outputs (post-fusion HLO, so this matches what fusions actually do);
+  fusion call sites count their parameters+root only
+* ``while``: trip count from ``backend_config={"known_trip_count":...}``,
+  body cost multiplied through (nested whiles compose)
+* collectives: per-kind wire bytes = max(in, out) · ring multiplier,
+  trip-count aware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all", "iota",
+               "rng-bit-generator",
+               # while-carry copies: elided by buffer aliasing on TPU; the
+               # CPU backend materializes them, which would dominate and
+               # misrepresent the TPU roofline (see DESIGN.md §6)
+               "copy", "copy-start", "copy-done"}
+# ops that touch only a slice of their big operand: traffic = 2·slice
+_SLICE_READS = {"dynamic-slice", "gather", "slice"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_text: str
+    kind: str
+    rest: str           # everything after the opening paren
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.out_text)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_bytes(self, kind: str, n: float):
+        self.bytes += n
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + n
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll.items():
+            s = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            s["count"] += v["count"] * mult
+            s["bytes"] += v["bytes"] * mult
+        for k, v in other.bytes_by_kind.items():
+            self.bytes_by_kind[k] = self.bytes_by_kind.get(k, 0.0) + v * mult
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        # strip metadata/backend_config payloads except trip counts
+        work = line
+        m = _INSTR_RE.match(work)
+        if not m:
+            continue
+        name, out_text, kind, rest = m.groups()
+        comps[cur].append(Instr(name, out_text, kind, rest))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry        # type: ignore
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
+    out = _shape_dims(instr.out_text)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    lhs_m = _OPERAND_RE.search(instr.rest)
+    k = 1
+    mc = _LHS_C_RE.search(instr.rest)
+    if lhs_m and mc:
+        lhs_shape = symtab.get(lhs_m.group(1))
+        if lhs_shape:
+            sd = _shape_dims(lhs_shape)
+            if sd:
+                dims = sd[1]
+                for ix in (int(x) for x in mc.group(1).split(",") if x):
+                    if ix < len(dims):
+                        k *= dims[ix]
+    return 2.0 * n_out * k
+
+
+def _operand_names(instr: Instr) -> List[str]:
+    # operands only appear up to the closing paren of the op call
+    call = instr.rest.split("),")[0]
+    return _OPERAND_RE.findall(call)
+
+
+def _operand_bytes(instr: Instr, symtab: Dict[str, str],
+                   skip_first: int = 0) -> int:
+    total = 0
+    for nm in _operand_names(instr)[skip_first:]:
+        if nm in symtab:
+            total += _shape_bytes(symtab[nm])
+    return total
+
+
+def _fusion_traffic(fused_name: str,
+                    comps: Dict[str, List["Instr"]],
+                    operands: List[str],
+                    symtab: Dict[str, str]) -> Tuple[int, int]:
+    """(read, write) HBM traffic of a fusion call site.
+
+    Read: a parameter consumed ONLY by slice-type ops contributes the slice
+    bytes, not the full buffer (per-layer weight slices under scan).
+    Write: a root that is a dynamic-update-slice aliases its big operand on
+    TPU — it writes only the update slice (KV-cache append pattern).
+    """
+    instrs = comps.get(fused_name, [])
+    by_name = {i.name: i for i in instrs}
+    inner_tab = {i.name: i.out_text for i in instrs}
+    param_vars: Dict[int, str] = {}
+    for ins in instrs:
+        if ins.kind == "parameter":
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                param_vars[int(m.group(1))] = ins.name
+
+    read = 0
+    for idx, op_name in enumerate(operands):
+        full = _shape_bytes(symtab.get(op_name, ""))
+        pvar = param_vars.get(idx)
+        if pvar is None:
+            read += full
+            continue
+        consumers = [i for i in instrs if pvar in _operand_names(i)]
+        if consumers and all(
+                i.kind in _SLICE_READS or
+                (i.kind in _SLICE_WRITES and
+                 _operand_names(i) and _operand_names(i)[0] == pvar)
+                for i in consumers):
+            sl = 0
+            for i in consumers:
+                if i.kind in _SLICE_READS:
+                    sl += i.out_bytes
+                else:                     # DUS: writes update-sized slice
+                    sl += _operand_bytes(i, inner_tab, skip_first=1)
+            read += min(sl, full)
+        else:
+            read += full
+
+    def write_of(var: str) -> int:
+        ins = by_name.get(var)
+        if ins is None:                   # parameter passthrough
+            return 0
+        if ins.kind in _SLICE_WRITES:
+            return _operand_bytes(ins, inner_tab, skip_first=1)
+        return ins.out_bytes
+
+    write = 0
+    if instrs:
+        root = instrs[-1]                 # HLO prints ROOT last
+        if root.kind == "tuple":
+            for nm in _operand_names(root):
+                write += write_of(nm)
+        else:
+            write = write_of(root.name)
+    return read, write
+
+
+def analyze(hlo: str) -> Cost:
+    comps = parse_computations(hlo)
+    entry_name = comps.pop("__entry_name__", None)   # type: ignore
+    comps.pop("__entry__", None)
+
+    # symbol tables per computation
+    symtabs: Dict[str, Dict[str, str]] = {}
+    for cname, instrs in comps.items():
+        tab: Dict[str, str] = {}
+        for i in instrs:
+            tab[i.name] = i.out_text
+        symtabs[cname] = tab
+
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Cost()                     # break cycles defensively
+        c = Cost()
+        tab = symtabs.get(cname, {})
+        for ins in comps.get(cname, []):
+            kind = ins.kind
+            if kind == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = _BODY_RE.search(ins.rest)
+                if mb:
+                    c.add(cost_of(mb.group(1)), trip)
+                mcond = _COND_RE.search(ins.rest)
+                if mcond:
+                    c.add(cost_of(mcond.group(1)), trip)
+                continue
+            if kind in ("fusion", "call", "async-start"):
+                mcall = _CALLS_RE.search(ins.rest)
+                read, write = _operand_bytes(ins, tab), ins.out_bytes
+                if mcall:
+                    inner = cost_of(mcall.group(1))
+                    c.flops += inner.flops
+                    c.coll_bytes += inner.coll_bytes
+                    for k, v in inner.coll.items():
+                        s = c.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
+                        s["count"] += v["count"]
+                        s["bytes"] += v["bytes"]
+                    read, write = _fusion_traffic(
+                        mcall.group(1), comps, _operand_names(ins), tab)
+                c.add_bytes(kind, read + write)
+                continue
+            if kind == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}",
+                                     ins.rest)
+                if branches:
+                    subs = [cost_of(b.strip().lstrip("%"))
+                            for b in branches.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops + s.bytes)
+                        c.add(best)
+                continue
+            base = kind.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if kind.endswith("-done"):
+                    continue
+                moved = max(ins.out_bytes, _operand_bytes(ins, tab))
+                moved *= _WIRE_MULT[base]
+                c.coll_bytes += moved
+                s = c.coll.setdefault(base, {"count": 0.0, "bytes": 0.0})
+                s["count"] += 1
+                s["bytes"] += moved
+                c.add_bytes(base, ins.out_bytes + _operand_bytes(ins, tab))
+                continue
+            if kind == "dot":
+                c.flops += _dot_flops(ins, tab)
+            if kind in _SLICE_READS:
+                # reads+writes only the slice, not the source buffer
+                c.add_bytes(kind, 2 * ins.out_bytes)
+                continue
+            if kind in _SLICE_WRITES:
+                # in-place on TPU: reads+writes only the update slice
+                upd = _operand_bytes(ins, tab, skip_first=1)
+                c.add_bytes(kind, 2 * upd)
+                continue
+            if kind not in _SKIP_BYTES:
+                c.add_bytes(kind, ins.out_bytes + _operand_bytes(ins, tab))
+        memo[cname] = c
+        return c
+
+    if entry_name is None:
+        return Cost()
+    # fusions/bodies are reachable only via call sites; cost_of(entry)
+    # rolls everything up exactly once.
+    return cost_of(entry_name)
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze(compiled.as_text())

@@ -1,0 +1,166 @@
+"""Roofline terms from the compiled dry-run artifact (no real hardware).
+
+Three terms, per (arch × shape × mesh) cell — see system DESIGN.md §6:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw × links)
+
+``cost_analysis()`` supplies FLOPs and bytes (per-device, post-SPMD).
+collective_bytes comes from parsing the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op contributes max(operand, output) bytes, scaled by an op-specific wire
+multiplier (all-reduce rides the wire twice: reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.config import HardwareConfig, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^=]*?\)|[a-z0-9\[\],{}\s]*?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+# wire-traffic multiplier per output byte (ring algorithms, large-n limit)
+_WIRE_MULT = {
+    "all-gather": 1.0,        # each chip receives (n-1)/n of the output
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, bytes} from (post-SPMD, per-device) HLO text."""
+    stats: Dict[str, Dict[str, float]] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        out_text, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=", 1)[-1][:120] and kind in line:
+            # -done ops re-state the shape of the matching -start; count once
+            key = line.strip().split(" = ")[0]
+            if key in seen_done:
+                continue
+        if f"{kind}-done" in line:
+            continue
+        out_bytes = _shape_bytes(out_text)
+        # operands appear inside the (...) call — parse the rest of the line
+        rest = line[m.end():]
+        in_bytes = _shape_bytes(rest.split("),")[0] if ")," in rest else rest)
+        moved = max(out_bytes, in_bytes) * _WIRE_MULT[kind]
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += moved
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return sum(s["bytes"] for s in collective_stats(hlo_text).values())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective wire bytes
+    chips: int
+    hw: HardwareConfig = V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.hw.ici_bw * self.hw.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def compute_fraction(self) -> float:
+        """How roofline-limited compute is: 1.0 = perfectly compute-bound."""
+        if self.bound_time == 0:
+            return 0.0
+        return self.t_compute / self.bound_time
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "compute_fraction": self.compute_fraction(),
+        }
+
+
+def from_compiled(compiled, lowered_text: Optional[str], chips: int,
+                  hw: HardwareConfig = V5E) -> Tuple[Roofline, Dict]:
+    """Build a Roofline from a jax compiled object.
+
+    Primary source: the while-aware HLO walker (telemetry.hlo_cost) — XLA's
+    own cost_analysis counts scan bodies once, undercounting every
+    scanned-layer model by ~num_layers.  The raw cost_analysis dict is
+    returned alongside for reference.
+    """
+    from repro.telemetry import hlo_cost
+
+    ca = dict(compiled.cost_analysis() or {})
+    cost = hlo_cost.analyze_compiled(compiled)
+    roof = Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=cost.coll_bytes, chips=chips, hw=hw)
+    ca["_walker_coll_by_kind"] = cost.coll
+    return roof, ca
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), D = tokens."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.tokens
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

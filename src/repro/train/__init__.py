@@ -1,0 +1,1 @@
+"""Training substrate: step function, trainer loop, fault tolerance."""

@@ -1,0 +1,130 @@
+"""Trainer: the fault-tolerant training loop.
+
+Production behaviors, all exercised by tests/examples on CPU:
+
+* checkpoint/restart — async sharded checkpoints every N steps; on (re)start
+  the trainer restores the newest complete checkpoint and the data pipeline
+  replays deterministically from that step
+* preemption safety — ``SIGTERM``-style interruption between steps triggers
+  a final synchronous checkpoint (``trainer.interrupt()`` in tests)
+* straggler mitigation — per-step wall times feed an EMA; steps slower than
+  ``straggler_factor``× the EMA are counted and surfaced; the Armada layer
+  uses the same signal to demote slow serving replicas (probe-driven), and
+  at cluster scale the hook is where over-dispatch would engage
+* NaN/divergence guard — non-finite loss skips the update (grads dropped),
+  counts toward ``skipped_steps``
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.config import ModelConfig, TrainConfig
+from repro.data import TokenPipeline
+from repro.optim import AdamW
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainMetrics:
+    steps: List[dict] = field(default_factory=list)
+    skipped_steps: int = 0
+    straggler_steps: int = 0
+    restarts: int = 0
+
+
+class Trainer:
+    def __init__(self, model, cfg: ModelConfig, tc: TrainConfig, *,
+                 batch: int, seq: int, ckpt_dir: str,
+                 straggler_factor: float = 3.0, dtype: str = "float32"):
+        self.model = model
+        self.cfg = cfg
+        self.tc = tc
+        self.batch = batch
+        self.seq = seq
+        self.ckpt = Checkpointer(ckpt_dir,
+                                 async_write=tc.async_checkpoint)
+        self.pipeline = TokenPipeline(cfg, batch=batch, seq=seq,
+                                      seed=tc.seed)
+        self.opt = AdamW(tc)
+        self.step_fn = jax.jit(make_train_step(model, tc),
+                               donate_argnums=(0, 1))
+        self.metrics = TrainMetrics()
+        self.straggler_factor = straggler_factor
+        self._ema_ms: Optional[float] = None
+        self._interrupted = False
+        self.dtype = dtype
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def init_or_restore(self, rng=None):
+        rng = rng if rng is not None else jax.random.key(self.tc.seed)
+        self.params = self.model.init(rng, self.dtype)
+        self.opt_state = self.opt.init(self.params)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = {"params": self.params,
+                     "opt": self.opt_state._asdict()}
+            restored, step = self.ckpt.restore(latest, state)
+            self.params = restored["params"]
+            from repro.optim.adamw import OptState
+            self.opt_state = OptState(**restored["opt"])
+            self.step = step
+            self.metrics.restarts += 1
+        return self.step
+
+    def interrupt(self):
+        """Preemption signal: checkpoint at the next step boundary."""
+        self._interrupted = True
+
+    # ---------------------------------------------------------------- train
+
+    def train(self, num_steps: int, log_every: int = 10) -> TrainMetrics:
+        assert self.params is not None, "call init_or_restore() first"
+        self.pipeline.start(from_step=self.step)
+        try:
+            end = self.step + num_steps
+            while self.step < end:
+                batch = next(self.pipeline)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.perf_counter()
+                self.params, self.opt_state, m = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(m["loss"])
+                dt = (time.perf_counter() - t0) * 1e3
+                # divergence guard ran in-graph (donation-safe)
+                self.metrics.skipped_steps += int(m["skipped"])
+
+                if self._ema_ms is not None and \
+                        dt > self.straggler_factor * self._ema_ms:
+                    self.metrics.straggler_steps += 1
+                self._ema_ms = dt if self._ema_ms is None else \
+                    0.2 * dt + 0.8 * self._ema_ms
+
+                self.step += 1
+                self.metrics.steps.append(
+                    {"step": self.step, "loss": loss, "ms": dt,
+                     "grad_norm": float(m["grad_norm"]),
+                     "lr": float(m["lr"])})
+                if self.step % self.tc.checkpoint_every == 0 \
+                        or self._interrupted:
+                    self._save()
+                    if self._interrupted:
+                        break
+        finally:
+            self.pipeline.stop()
+        return self.metrics
+
+    def _save(self):
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state._asdict()})
+        if self._interrupted:
+            self.ckpt.wait()

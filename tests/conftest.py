@@ -1,0 +1,10 @@
+import os
+import sys
+import pathlib
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+for p in (str(ROOT / "src"), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,189 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus VMEM-budget sanity for the TPU tiles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_mha_reference
+from repro.kernels.flash_attention import kernel as fa_kernel
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.moe_gmm.kernel import gmm_pallas
+from repro.kernels.moe_gmm.ref import gmm_reference
+from repro.kernels.ssm_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssm_scan.kernel import vmem_bytes as ssd_vmem
+from repro.kernels.ssm_scan.ref import (ssd_chunked_reference,
+                                        ssd_decode_step, ssd_sequential)
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # B, Hq, Hkv, Tq, Tk, D, causal, offset
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 8, 8, 96, 96, 32, True, 0),
+    (1, 4, 1, 64, 256, 64, True, 192),     # chunked prefill w/ offset
+    (2, 2, 2, 50, 200, 128, False, 0),     # non-causal (encoder), ragged
+    (1, 6, 3, 33, 65, 16, True, 0),        # odd sizes -> padding path
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(case, dtype):
+    B, Hq, Hkv, Tq, Tk, D, causal, off = case
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Tq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Tk, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Tk, D)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, q_offset=off,
+                                 block_q=32, block_k=32, interpret=True)
+    ref = mha_reference(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_sliding_window():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, window=32,
+                                 block_q=32, block_k=32, interpret=True)
+    ref = mha_reference(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_flash_attention_vmem_budget():
+    # production tile sizes must fit v5e VMEM (~128 MB, use <= half)
+    assert fa_kernel.vmem_bytes(128, 128, 128) < 64 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DEC_CASES = [(2, 4, 2, 512, 64), (1, 8, 1, 300, 128), (4, 2, 2, 64, 32),
+             (3, 12, 4, 100, 16)]
+
+
+@pytest.mark.parametrize("case", DEC_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_reference(case, dtype):
+    B, Hq, Hkv, S, D = case
+    q = jnp.asarray(RNG.normal(size=(B, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    lens = jnp.asarray(RNG.integers(1, S + 1, size=(B,)), jnp.int32)
+    out = decode_attention_pallas(q, k, v, lens, block_s=128, interpret=True)
+    ref = decode_mha_reference(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_ignores_padding():
+    """Entries past ``lengths`` must not affect the result."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 32
+    q = jnp.asarray(RNG.normal(size=(B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    lens = jnp.asarray([10, 20], jnp.int32)
+    out1 = decode_attention_pallas(q, k, v, lens, interpret=True)
+    k2 = k.at[:, :, 30:].set(999.0)
+    v2 = v.at[:, :, 30:].set(-999.0)
+    out2 = decode_attention_pallas(q, k2, v2, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+GMM_CASES = [(4, 64, 128, 256), (2, 100, 96, 130), (8, 32, 64, 64),
+             (1, 17, 33, 65)]
+
+
+@pytest.mark.parametrize("case", GMM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_matches_reference(case, dtype):
+    E, C, D, F = case
+    x = jnp.asarray(RNG.normal(size=(E, C, D)), dtype)
+    w = jnp.asarray(RNG.normal(size=(E, D, F)), dtype)
+    out = gmm_pallas(x, w, block_c=32, block_f=64, block_d=64,
+                     interpret=True)
+    ref = gmm_reference(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=_tol(dtype) * np.sqrt(D), rtol=5e-2 if dtype == jnp.bfloat16
+        else 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# generalized SSD scan (Mamba2 + mLSTM styles)
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(B, T, H, P, N, style, per_head):
+    x = jnp.asarray(RNG.normal(size=(B, T, H, P)), jnp.float32)
+    if style == "mamba2":
+        dt = np.abs(RNG.normal(size=(B, T, H))) * 0.5 + 0.01
+        A = -np.abs(RNG.normal(size=(H,))) - 0.1
+        g = jnp.asarray(dt * A, jnp.float32)
+        s = jnp.asarray(dt, jnp.float32)
+    else:  # mlstm
+        f = RNG.normal(size=(B, T, H)) + 2.0
+        g = jnp.asarray(np.log(1 / (1 + np.exp(-f))), jnp.float32)
+        s = jnp.asarray(np.exp(RNG.normal(size=(B, T, H)) * 0.4 - 1),
+                        jnp.float32)
+    bc_shape = (B, T, H, N) if per_head else (B, T, N)
+    Bm = jnp.asarray(RNG.normal(size=bc_shape), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=bc_shape), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(H,)), jnp.float32)
+    return x, g, s, Bm, Cm, D
+
+
+@pytest.mark.parametrize("style", ["mamba2", "mlstm"])
+@pytest.mark.parametrize("per_head", [False, True])
+@pytest.mark.parametrize("shape", [(2, 64, 3, 16, 8, 16),
+                                   (1, 100, 2, 32, 16, 32)])
+def test_ssd_chunked_and_pallas_match_sequential(style, per_head, shape):
+    B, T, H, P, N, chunk = shape
+    x, g, s, Bm, Cm, D = _ssd_inputs(B, T, H, P, N, style, per_head)
+    y_seq, h_seq = ssd_sequential(x, g, s, Bm, Cm, D)
+    y_chk, _ = ssd_chunked_reference(x, g, s, Bm, Cm, D, chunk=chunk)
+    y_pal, h_pal = ssd_scan_pallas(x, g, s, Bm, Cm, D, chunk=chunk,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_seq),
+                               atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_seq),
+                               atol=5e-3, rtol=1e-3)
+
+
+def test_ssd_decode_chain_equals_sequential():
+    B, T, H, P, N = 2, 32, 2, 8, 8
+    x, g, s, Bm, Cm, D = _ssd_inputs(B, T, H, P, N, "mamba2", False)
+    y_seq, h_seq = ssd_sequential(x, g, s, Bm, Cm, D)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(T):
+        y, h = ssd_decode_step(h, x[:, t], g[:, t], s[:, t], Bm[:, t],
+                               Cm[:, t], D)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_seq), atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_seq), atol=5e-3)
+
+
+def test_ssd_vmem_budget():
+    assert ssd_vmem(256, 64, 128) < 64 * 2**20

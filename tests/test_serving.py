@@ -1,0 +1,129 @@
+"""Serving engine: slot-scheduler invariants (hypothesis), continuous
+batching correctness, greedy-decode equivalence, session failover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving.batching import GenRequest, SlotScheduler
+from repro.serving.engine import ServeEngine
+from repro.serving.session import export_slot, import_session
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(min_value=1, max_value=20), min_size=1,
+                max_size=30),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=100, deadline=None)
+def test_slot_scheduler_invariants(lengths, max_batch):
+    sched = SlotScheduler(max_batch)
+    for i, n in enumerate(lengths):
+        sched.submit(GenRequest(f"r{i}", [1], max_new_tokens=n))
+    served = set()
+    for _ in range(10_000):
+        sched.admit()
+        active = sched.active()
+        # invariant: no slot double-booked, occupancy <= max_batch
+        slots = [r.slot for r in active]
+        assert len(slots) == len(set(slots))
+        assert len(active) <= max_batch
+        if not active:
+            break
+        r = active[0]
+        r.generated.append(0)
+        if len(r.generated) >= r.max_new_tokens:
+            sched.complete(r)
+            served.add(r.request_id)
+        if sched.drain():
+            break
+    assert served == {f"r{i}" for i in range(len(lengths))}
+
+
+# ---------------------------------------------------------------------------
+# engine correctness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen3-1.7b"), num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, cfg, prompt, n):
+    """Generate greedily via repeated full forward (the slow oracle)."""
+    toks = list(prompt)
+    for _ in range(n):
+        h, _ = model.hidden_states(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = h[:, -1] @ w
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_full_forward_generation(tiny):
+    cfg, model, params = tiny
+    engine = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
+    prompts = [[5, 9, 13], [7, 3, 200, 41]]
+    for i, p in enumerate(prompts):
+        engine.submit(f"r{i}", p, max_new_tokens=6)
+    out = engine.run_until_drained()
+    for i, p in enumerate(prompts):
+        ref = _greedy_reference(model, params, cfg, p, 6)
+        assert out[f"r{i}"] == ref, (out[f"r{i}"], ref)
+
+
+def test_continuous_batching_interleaves(tiny):
+    cfg, model, params = tiny
+    engine = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
+    for i in range(5):                      # 5 requests > 2 slots
+        engine.submit(f"r{i}", [3 + i], max_new_tokens=4)
+    out = engine.run_until_drained()
+    assert len(out) == 5
+    # equivalence with serial execution
+    solo = ServeEngine(cfg, params, max_batch=1, max_seq=64, eos_id=-1)
+    for i in range(5):
+        solo.submit(f"r{i}", [3 + i], max_new_tokens=4)
+    ref = solo.run_until_drained()
+    assert out == ref
+
+
+def test_session_failover_preserves_generation(tiny):
+    cfg, model, params = tiny
+    e1 = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
+    e2 = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
+    prompt = [5, 9, 13]
+    n = 8
+    e1.submit("mig", prompt, max_new_tokens=n)
+    for _ in range(4):
+        e1.step()
+    blob = e1.export_session("mig")
+    import_session(e2, blob)
+    out = e2.run_until_drained()
+    ref = _greedy_reference(model, params, cfg, prompt, n)
+    assert out["mig"] == ref
+
+
+def test_session_rejects_cross_arch(tiny):
+    cfg, model, params = tiny
+    e1 = ServeEngine(cfg, params, max_batch=2, max_seq=64)
+    e1.submit("x", [5], max_new_tokens=4)
+    e1.step()
+    blob = e1.export_session("x")
+    cfg2 = reduced(get_config("minicpm-2b"), num_layers=2)
+    m2 = build_model(cfg2)
+    e2 = ServeEngine(cfg2, m2.init(jax.random.key(1)), max_batch=2,
+                     max_seq=64)
+    with pytest.raises(AssertionError):
+        import_session(e2, blob)

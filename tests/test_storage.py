@@ -1,0 +1,94 @@
+"""Cargo storage layer: replication count, consistency semantics,
+data-access-point selection, failover, and storage auto-scaling."""
+import numpy as np
+import pytest
+
+from repro.core.app_manager import ServiceSpec
+from repro.core.beacon import ArmadaSystem, facerec_image
+from repro.core.cluster import real_world
+
+
+def _system(cargo_nodes=("V1", "V2", "D6", "Cloud")):
+    topo = real_world()
+    return ArmadaSystem(topo, seed=9, compute_nodes=["V3", "V4", "V5"],
+                        cargo_nodes=list(cargo_nodes))
+
+
+def _register(sys_, consistency="eventual"):
+    spec = ServiceSpec("face", facerec_image(), need_storage=True,
+                       consistency=consistency,
+                       locations=[sys_.topo.nodes["V3"].loc])
+    chosen = sys_.cargo_manager.store_register(
+        spec, initial={"k0": b"v0"})
+    return spec, chosen
+
+
+def test_store_register_allocates_three_replicas():
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    assert len(chosen) == 3
+    for c in chosen:
+        assert c.stores["face"]["k0"] == b"v0"
+        assert len(c.peers["face"]) == 2
+
+
+def test_eventual_write_acks_fast_then_converges():
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    lat = []
+    chosen[0].write("face", "k1", b"v1", "V3", "eventual", lat.append)
+    sys_.sim.run(until=60.0)                 # local ack: ~rtt + write
+    assert lat and lat[0] < 60.0
+    sys_.sim.run(until=2_000.0)              # cascade completes
+    for c in chosen:
+        assert c.stores["face"]["k1"] == b"v1"
+
+
+def test_strong_write_waits_for_all_replicas():
+    sys_ = _system()
+    spec, chosen = _register(sys_, "strong")
+    strong, eventual = [], []
+    chosen[0].write("face", "ks", b"v", "V3", "strong", strong.append)
+    sys_.sim.run(until=5_000.0)
+    # all replicas have it at ack time recorded; latency >= slowest hop
+    assert strong
+    chosen[0].write("face", "ke", b"v", "V3", "eventual", eventual.append)
+    sys_.sim.run(until=10_000.0)
+    assert eventual[0] < strong[0]
+
+
+def test_cargo_discover_ranks_by_proximity():
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    cands = sys_.cargo_manager.cargo_discover("face",
+                                              sys_.topo.nodes["V5"].loc)
+    assert 1 <= len(cands) <= 3
+    assert all(c.alive for c in cands)
+
+
+def test_dead_replica_skipped_not_blocking():
+    sys_ = _system()
+    spec, chosen = _register(sys_, "strong")
+    chosen[1].fail()
+    lat = []
+    chosen[0].write("face", "k2", b"v2", "V3", "strong", lat.append)
+    sys_.sim.run(until=5_000.0)
+    assert lat, "strong write must still ack when a replica is dead"
+    alive = [c for c in chosen if c.alive]
+    for c in alive:
+        assert c.stores["face"].get("k2") == b"v2"
+
+
+def test_storage_autoscaling_follows_compute():
+    """A service replica placed far from all data replicas triggers a new
+    data replica nearby (paper §3.4 storage auto-scaling)."""
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=9,
+                        compute_nodes=["V3", "V4", "V5", "Cloud"],
+                        cargo_nodes=["V1", "V2", "D6", "Cloud"])
+    spec = ServiceSpec("face", facerec_image(), need_storage=True,
+                       locations=[topo.nodes["V3"].loc])
+    sys_.beacon.deploy_application(spec)
+    sys_.sim.run(until=30_000.0)
+    placements = sys_.cargo_manager.placements["face"]
+    assert len(placements) >= 3
