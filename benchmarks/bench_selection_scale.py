@@ -1,0 +1,129 @@
+"""Selection-engine scaling: scalar vs vectorized vs fused-kernel oracle.
+
+The paper runs Algorithm 1 over 5-15 users; the ROADMAP north star is
+millions.  This bench sweeps U users x N replica nodes and times three
+implementations of the same selection semantics:
+
+* ``scalar``        — the seed repo's per-(user, replica) Python loop
+                      (``candidate_list_scalar``), measured on a capped
+                      user subsample and extrapolated (at 10k+ users the
+                      full scalar sweep would take minutes);
+* ``vectorized``    — ``SelectionEngine.candidate_lists`` (numpy batched,
+                      including the Task-object materialization);
+* ``kernel_oracle`` — the fused ``geo_topk`` op (jnp oracle on CPU, the
+                      Pallas kernel's exact algorithm), scoring only.
+
+Acceptance target: >= 10x vectorized-over-scalar at 10k users x 1k nodes.
+Set ARMADA_SCALE_FULL=1 to add the 100k-user x 1k-node row.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.captain import Captain
+from repro.core.cluster import NodeSpec, Topology
+from repro.core.selection import (NET_TYPES, SelectionEngine,
+                                  candidate_list_scalar)
+from repro.core.sim import Simulator
+
+_METRO = (44.97, -93.22)
+SCALAR_SAMPLE_CAP = 200
+
+
+class _BenchTask:
+    """Stand-in for app_manager.Task: just the fields selection reads."""
+
+    __slots__ = ("task_id", "service_id", "captain", "status")
+
+    def __init__(self, task_id, captain):
+        self.task_id = task_id
+        self.service_id = "bench"
+        self.captain = captain
+        self.status = "running"
+
+
+def _fleet(n_nodes: int, seed: int):
+    rng = np.random.default_rng(seed)
+    sim = Simulator(seed=seed, trace_enabled=False)
+    nodes = {}
+    tasks = []
+    nets = [t for t in NET_TYPES if t != "other"]
+    for i in range(n_nodes):
+        spec = NodeSpec(
+            f"N{i}",
+            (_METRO[0] + float(rng.uniform(-0.5, 0.5)),
+             _METRO[1] + float(rng.uniform(-0.5, 0.5))),
+            proc_ms=float(rng.uniform(20, 60)),
+            slots=int(rng.integers(1, 5)),
+            net_type=nets[int(rng.integers(len(nets)))])
+        nodes[spec.node_id] = spec
+    topo = Topology(nodes, {})
+    for i, spec in enumerate(nodes.values()):
+        cap = Captain(sim, topo, spec)
+        cap.busy = int(rng.integers(0, spec.slots + 1))  # vary free fractions
+        tasks.append(_BenchTask(f"bench/t{i}", cap))
+    return tasks
+
+
+def _users(n_users: int, seed: int):
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack([_METRO[0] + rng.uniform(-0.5, 0.5, n_users),
+                     _METRO[1] + rng.uniform(-0.5, 0.5, n_users)], axis=1)
+    nets = [("wifi", "ethernet", "lte")[i]
+            for i in rng.integers(0, 3, n_users)]
+    return locs, nets
+
+
+def _bench_case(n_users: int, n_nodes: int, seed: int = 0):
+    tasks = _fleet(n_nodes, seed)
+    locs, nets = _users(n_users, seed)
+    rows = []
+    tag = f"selection_scale/u{n_users}_n{n_nodes}"
+
+    # scalar baseline (subsampled + extrapolated beyond the cap)
+    sample = min(n_users, SCALAR_SAMPLE_CAP)
+    t0 = time.perf_counter()
+    for i in range(sample):
+        candidate_list_scalar(tasks, tuple(locs[i]), nets[i], 3)
+    scalar_per_user = (time.perf_counter() - t0) / sample * 1e3   # ms
+    rows.append((f"{tag}/scalar", scalar_per_user,
+                 f"sampled={sample};est_total_ms="
+                 f"{scalar_per_user * n_users:.0f}"))
+
+    # vectorized engine (full batch, Task materialization included)
+    eng = SelectionEngine(top_n=3)
+    eng.candidate_lists("bench", tasks, locs[:8], nets[:8])       # warm cache
+    t0 = time.perf_counter()
+    out = eng.candidate_lists("bench", tasks, locs, nets)
+    vec_total = (time.perf_counter() - t0) * 1e3
+    assert len(out) == n_users and out[0]
+    vec_speedup = scalar_per_user * n_users / vec_total
+    rows.append((f"{tag}/vectorized", vec_total / n_users,
+                 f"total_ms={vec_total:.1f};speedup={vec_speedup:.0f}x"))
+
+    # fused-kernel oracle (jnp; scoring only, jit warm)
+    import jax
+    from repro.kernels.geo_topk.ops import geo_topk
+    run_ix, packed = eng.prepare_kernel_inputs("bench", tasks, locs, nets)
+    jax.block_until_ready(geo_topk(packed, k=3))                  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(geo_topk(packed, k=3))
+    ker_total = (time.perf_counter() - t0) * 1e3
+    ker_speedup = scalar_per_user * n_users / ker_total
+    rows.append((f"{tag}/kernel_oracle", ker_total / n_users,
+                 f"total_ms={ker_total:.1f};speedup={ker_speedup:.0f}x"))
+    return rows
+
+
+def run():
+    sweep = [(1_000, 100), (1_000, 1_000), (10_000, 100), (10_000, 1_000),
+             (100_000, 100)]
+    if os.environ.get("ARMADA_SCALE_FULL"):
+        sweep.append((100_000, 1_000))
+    rows = []
+    for n_users, n_nodes in sweep:
+        rows.extend(_bench_case(n_users, n_nodes))
+    return rows

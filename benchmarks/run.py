@@ -16,6 +16,7 @@ import time
 MODULES = [
     "benchmarks.bench_heterogeneity",      # Table 5
     "benchmarks.bench_selection",          # Table 6
+    "benchmarks.bench_selection_scale",    # engine scaling (beyond paper)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7
     "benchmarks.bench_node_scaling",       # Fig 8

@@ -1,9 +1,15 @@
 """Application Manager (paper §3.2): service lifecycle, the candidate-list
 half of 2-step selection (Algorithm 1), and demand-driven auto-scaling.
 
+Selection runs through the batched ``SelectionEngine``
+(``repro.core.selection``): ``candidate_list`` keeps the single-user API,
+``candidate_lists`` scores a whole user batch against the replica set in
+one vectorized pass (exposed as ``Beacon.query_service_batch``).
+
 Auto-scaling: 3 replicas at deploy time (fault-tolerance floor), then more
 wherever real users concentrate — the AM groups active users by reduced-
-precision geohash and asks Spinner for capacity in overloaded regions.
+precision geohash (batch Morton encoding, one pass over all users) and
+asks Spinner for capacity in overloaded regions.
 """
 from __future__ import annotations
 
@@ -11,17 +17,15 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core import geohash
 from repro.core.cluster import Topology
+from repro.core.selection import SelectionEngine
 from repro.core.sim import Simulator
 from repro.core.spinner import Image, Spinner
 
-_NET_AFFINITY = {
-    ("ethernet", "ethernet"): 1.0, ("ethernet", "wifi"): 0.7,
-    ("wifi", "ethernet"): 0.7, ("wifi", "wifi"): 0.6,
-    ("lte", "lte"): 0.5, ("lte", "wifi"): 0.4, ("wifi", "lte"): 0.4,
-    ("lte", "ethernet"): 0.5, ("ethernet", "lte"): 0.5,
-}
+REGION_PRECISION = 3            # coarse geohash cells for autoscale grouping
 
 
 @dataclass
@@ -64,6 +68,7 @@ class ApplicationManager:
         self._ids = itertools.count()
         self.autoscale_enabled = True
         self.scale_events: List[dict] = []
+        self.engine = SelectionEngine(top_n=top_n)
 
     # ----------------------------------------------------------- deployment
 
@@ -88,6 +93,7 @@ class ApplicationManager:
         if dt is None:
             return None
         self.tasks[spec.service_id].append(task)
+        self.engine.invalidate(spec.service_id)
         return task
 
     def _task_ready(self, task: Task):
@@ -103,28 +109,17 @@ class ApplicationManager:
     def candidate_list(self, service_id: str, user_loc, user_net: str,
                        top_n: Optional[int] = None) -> List[Task]:
         """Step 1 of 2-step selection: score nearby running replicas."""
-        running = [t for t in self.tasks.get(service_id, ())
-                   if t.status == "running" and t.captain is not None
-                   and t.captain.alive]
-        if not running:
-            return []
-        items = [(t.task_id, t.captain.spec.loc) for t in running]
-        local_ids = set(geohash.proximity_search(user_loc, items,
-                                                 precision=4))
-        local = [t for t in running if t.task_id in local_ids] or running
-        w1, w2, w3 = 0.5, 0.2, 0.3
+        return self.engine.candidate_list(
+            service_id, self.tasks.get(service_id, ()), user_loc, user_net,
+            top_n=top_n)
 
-        def score(t: Task) -> float:
-            c = t.captain
-            resources = c.free_fraction()
-            aff = _NET_AFFINITY.get((c.spec.net_type, user_net), 0.5)
-            d = geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
-                                    user_loc[0], user_loc[1])
-            prox = 1.0 / (1.0 + d / 10.0)
-            return w1 * resources + w2 * aff + w3 * prox
-
-        local.sort(key=score, reverse=True)
-        return local[:top_n or self.top_n]
+    def candidate_lists(self, service_id: str, user_locs, user_nets,
+                        top_n: Optional[int] = None) -> List[List[Task]]:
+        """Batched Algorithm 1: one vectorized U×N scoring pass, per-user
+        top-k.  ``user_nets`` may be a single net-type string."""
+        return self.engine.candidate_lists(
+            service_id, self.tasks.get(service_id, ()), user_locs,
+            user_nets, top_n=top_n)
 
     # -------------------------------------------------------------- users
 
@@ -164,27 +159,48 @@ class ApplicationManager:
         clients = self.users.get(service_id, ())
         if not clients:
             return
-        # group active users by coarse geohash region
-        regions: Dict[str, List] = {}
-        for c in clients:
-            gh = geohash.encode(*c.loc, precision=3)
-            regions.setdefault(gh, []).append(c)
-        for gh, users in regions.items():
-            tasks_here = [
-                t for t in self.tasks[service_id]
-                if t.captain is not None and t.status in
-                ("running", "deploying")
-                and geohash.encode(*t.captain.spec.loc, precision=3) == gh]
-            cap = self._capacity(tasks_here) or 1e-9
-            if len(users) / cap > self.overload_ratio:
-                centroid = (
-                    sum(u.loc[0] for u in users) / len(users),
-                    sum(u.loc[1] for u in users) / len(users))
+        # group active users by coarse geohash region — one batched Morton
+        # encoding over all user locations instead of per-user strings
+        user_locs = np.asarray([c.loc for c in clients], np.float64)
+        user_codes = geohash.encode_batch(user_locs[:, 0], user_locs[:, 1],
+                                          REGION_PRECISION)
+        placed = [t for t in self.tasks[service_id]
+                  if t.captain is not None
+                  and t.status in ("running", "deploying")]
+        if placed:
+            t_locs = np.asarray([t.captain.spec.loc for t in placed],
+                                np.float64)
+            t_codes = geohash.encode_batch(t_locs[:, 0], t_locs[:, 1],
+                                           REGION_PRECISION)
+        else:
+            t_codes = np.empty(0, np.int64)
+        region_codes, first_seen, inverse, counts = np.unique(
+            user_codes, return_index=True, return_inverse=True,
+            return_counts=True)
+        n_regions = len(region_codes)
+        loc_sums = np.zeros((n_regions, 2))
+        np.add.at(loc_sums, inverse, user_locs)
+        code_to_region = {int(c): r for r, c in enumerate(region_codes)}
+        task_buckets: List[List[Task]] = [[] for _ in region_codes]
+        for t, tc in zip(placed, t_codes):
+            r = code_to_region.get(int(tc))
+            if r is not None:
+                task_buckets[r].append(t)
+        # visit regions in first-user order (the pre-refactor dict grouping
+        # order), so spawn contention resolves exactly as before
+        for r in np.argsort(first_seen, kind="stable"):
+            code = region_codes[r]
+            n_users = int(counts[r])
+            cap = self._capacity(task_buckets[r]) or 1e-9
+            if n_users / cap > self.overload_ratio:
+                centroid = (float(loc_sums[r, 0]) / n_users,
+                            float(loc_sums[r, 1]) / n_users)
                 t = self._spawn_task(spec, centroid)
                 if t is not None:
+                    gh = geohash.code_to_str(int(code), REGION_PRECISION)
                     self.scale_events.append(
                         {"t": self.sim.now, "service": service_id,
-                         "region": gh, "users": len(users), "cap": cap})
+                         "region": gh, "users": n_users, "cap": cap})
                     self.sim.log("autoscale_up", service=service_id,
                                  region=gh)
 
@@ -195,8 +211,13 @@ class ApplicationManager:
         tasks = [t for t in self.tasks[service_id] if t.status == "running"]
         if len(tasks) <= spec.min_replicas:
             return
-        idle = [t for t in tasks if t.captain.load() == 0]
+        # only probe captains that are still alive — a failed captain's
+        # queue is gone, so load() would report a bogus idle node
+        idle = [t for t in tasks
+                if t.captain is not None and t.captain.alive
+                and t.captain.load() == 0]
         if idle:
             victim = idle[-1]
             self.spinner.cancel_task(victim)
+            self.engine.invalidate(service_id)
             self.sim.log("autoscale_down", task=victim.task_id)

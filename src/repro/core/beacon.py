@@ -35,6 +35,11 @@ class Beacon:
     def query_service(self, service_id: str, user_loc, user_net: str):
         return self.am.candidate_list(service_id, user_loc, user_net)
 
+    def query_service_batch(self, service_id: str, user_locs, user_nets):
+        """Batched service discovery: one vectorized selection pass over a
+        whole user population; returns one ranked Task list per user."""
+        return self.am.candidate_lists(service_id, user_locs, user_nets)
+
     def register_node(self, captain: Captain, runtime: str = "armada"):
         return self.spinner.captain_join(captain, runtime)
 
@@ -48,8 +53,9 @@ class ArmadaSystem:
     def __init__(self, topo: Topology, *, seed: int = 0,
                  compute_nodes: Optional[List[str]] = None,
                  cargo_nodes: Optional[List[str]] = None,
-                 include_cloud_compute: bool = True):
-        self.sim = Simulator(seed=seed)
+                 include_cloud_compute: bool = True,
+                 trace_enabled: bool = True):
+        self.sim = Simulator(seed=seed, trace_enabled=trace_enabled)
         self.topo = topo
         self.spinner = Spinner(self.sim, topo)
         self.cargo_manager = CargoManager(self.sim, topo)

@@ -1,0 +1,288 @@
+"""Batched performance-aware edge selection (paper §3.2, Algorithm 1).
+
+The paper's 2-step selection scores each running replica per user:
+
+    score = w1 * free_resources + w2 * net_affinity + w3 * proximity
+
+after an adaptive-precision geohash proximity filter.  The seed repo ran
+this as scalar Python per (user, replica) pair — fine for 5-15 users,
+hostile to millions.  ``SelectionEngine`` keeps the exact semantics but
+runs it on arrays:
+
+* per-service node arrays (lat/lon, Morton geohash codes, net-type index,
+  slot counts) are cached and rebuilt only when the replica set changes
+  (captain join / task spawn / cancel — detected by fingerprint and by
+  explicit ``invalidate`` calls from the ApplicationManager);
+* per-query dynamic state (alive/running mask, free-slot fractions) is
+  one O(N) sweep, amortized over the whole user batch;
+* ``candidate_list`` serves the existing single-user API;
+  ``candidate_lists`` scores a U×N matrix and returns per-user top-k in
+  one shot (used by ``Beacon.query_service_batch`` and the autoscaler);
+* the U×N scoring can optionally run through the fused
+  ``repro.kernels.geo_topk`` op (jnp oracle on CPU, Pallas on TPU).
+
+``candidate_list_scalar`` preserves the pre-refactor scalar scorer
+verbatim; parity tests and ``benchmarks/bench_selection_scale.py`` pin
+the engine's ranking against it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import geohash
+
+# scoring weights (paper Algorithm 1): resources, network affinity, proximity
+W_RESOURCE = 0.5
+W_AFFINITY = 0.2
+W_PROXIMITY = 0.3
+
+PROXIMITY_PRECISION = 4       # max geohash chars the proximity filter uses
+MIN_PROXIMITY_HITS = 4        # widen the cell until this many replicas hit
+CODE_PRECISION = 9            # full-precision Morton codes (45 bits)
+
+# net-type affinity (same table the scalar path used); unknown types score
+# the scalar path's 0.5 default via the trailing "other" row/column.
+NET_TYPES = ("ethernet", "wifi", "lte", "other")
+NET_INDEX = {n: i for i, n in enumerate(NET_TYPES)}
+_NET_AFFINITY = {
+    ("ethernet", "ethernet"): 1.0, ("ethernet", "wifi"): 0.7,
+    ("wifi", "ethernet"): 0.7, ("wifi", "wifi"): 0.6,
+    ("lte", "lte"): 0.5, ("lte", "wifi"): 0.4, ("wifi", "lte"): 0.4,
+    ("lte", "ethernet"): 0.5, ("ethernet", "lte"): 0.5,
+}
+AFFINITY_TABLE = np.full((len(NET_TYPES), len(NET_TYPES)), 0.5)
+for (_a, _b), _v in _NET_AFFINITY.items():
+    AFFINITY_TABLE[NET_INDEX[_a], NET_INDEX[_b]] = _v
+
+
+def net_index(net_type: str) -> int:
+    return NET_INDEX.get(net_type, NET_INDEX["other"])
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor scalar scorer (reference for parity tests and benchmarks)
+# ---------------------------------------------------------------------------
+
+def candidate_list_scalar(tasks: Sequence[object], user_loc, user_net: str,
+                          top_n: int = 3) -> List[object]:
+    """The seed repo's ``ApplicationManager.candidate_list``, verbatim."""
+    running = [t for t in tasks
+               if t.status == "running" and t.captain is not None
+               and t.captain.alive]
+    if not running:
+        return []
+    items = [(t.task_id, t.captain.spec.loc) for t in running]
+    local_ids = set(geohash.proximity_search(
+        user_loc, items, precision=PROXIMITY_PRECISION))
+    local = [t for t in running if t.task_id in local_ids] or running
+
+    def score(t) -> float:
+        c = t.captain
+        resources = c.free_fraction()
+        aff = _NET_AFFINITY.get((c.spec.net_type, user_net), 0.5)
+        d = geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
+                                user_loc[0], user_loc[1])
+        prox = 1.0 / (1.0 + d / 10.0)
+        return W_RESOURCE * resources + W_AFFINITY * aff + W_PROXIMITY * prox
+
+    local.sort(key=score, reverse=True)
+    return local[:top_n]
+
+
+# ---------------------------------------------------------------------------
+# Cached per-service arrays
+# ---------------------------------------------------------------------------
+
+class _ServiceArrays:
+    """Static (between replica-set changes) arrays over one task list."""
+
+    def __init__(self, tasks: Sequence[object]):
+        self.tasks = list(tasks)
+        self.fingerprint = _fingerprint(tasks)
+        n = len(self.tasks)
+        self.lat = np.empty(n)
+        self.lon = np.empty(n)
+        self.net_idx = np.empty(n, np.int64)
+        for i, t in enumerate(self.tasks):
+            if t.captain is None:
+                self.lat[i] = self.lon[i] = 0.0
+                self.net_idx[i] = NET_INDEX["other"]
+            else:
+                self.lat[i], self.lon[i] = t.captain.spec.loc
+                self.net_idx[i] = net_index(t.captain.spec.net_type)
+        self.codes = geohash.encode_batch(self.lat, self.lon, CODE_PRECISION)
+
+    def dynamic_state(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(mask, free): alive+running mask and free-slot fractions."""
+        n = len(self.tasks)
+        mask = np.zeros(n, bool)
+        free = np.zeros(n)
+        for i, t in enumerate(self.tasks):
+            c = t.captain
+            if t.status == "running" and c is not None and c.alive:
+                mask[i] = True
+                free[i] = c.free_fraction()
+        return mask, free
+
+
+def _fingerprint(tasks: Sequence[object]) -> Tuple:
+    return tuple((t.task_id, None if t.captain is None
+                  else t.captain.node_id) for t in tasks)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class SelectionEngine:
+    def __init__(self, *, top_n: int = 3, user_chunk: int = 8192):
+        self.top_n = top_n
+        self.user_chunk = user_chunk        # bounds the U×N score matrices
+        self._cache: Dict[str, _ServiceArrays] = {}
+
+    # ------------------------------------------------------------- caching
+
+    def invalidate(self, service_id: Optional[str] = None):
+        """Drop cached node arrays (replica set changed)."""
+        if service_id is None:
+            self._cache.clear()
+        else:
+            self._cache.pop(service_id, None)
+
+    def _arrays(self, service_id: str,
+                tasks: Sequence[object]) -> _ServiceArrays:
+        arr = self._cache.get(service_id)
+        if arr is None or arr.fingerprint != _fingerprint(tasks):
+            arr = _ServiceArrays(tasks)
+            self._cache[service_id] = arr
+        return arr
+
+    # ------------------------------------------------------------- queries
+
+    def candidate_list(self, service_id: str, tasks: Sequence[object],
+                       user_loc, user_net: str,
+                       top_n: Optional[int] = None) -> List[object]:
+        """Single-user Algorithm 1 — same ranking as the scalar scorer."""
+        return self.candidate_lists(service_id, tasks, [user_loc],
+                                    [user_net], top_n=top_n)[0]
+
+    def candidate_lists(self, service_id: str, tasks: Sequence[object],
+                        user_locs, user_nets, top_n: Optional[int] = None,
+                        ) -> List[List[object]]:
+        """Batched Algorithm 1: per-user top-k over a U×N score matrix.
+
+        ``user_locs``: sequence of (lat, lon); ``user_nets``: sequence of
+        net-type strings (or a single string applied to every user).
+        Returns one ranked Task list per user.
+        """
+        k = top_n or self.top_n
+        users = np.asarray(user_locs, np.float64).reshape(-1, 2)
+        u_total = len(users)
+        if isinstance(user_nets, str):
+            nets = np.full(u_total, net_index(user_nets), np.int64)
+        else:
+            nets = np.asarray([net_index(n) for n in user_nets], np.int64)
+            if len(nets) != u_total:
+                raise ValueError(
+                    f"user_nets has {len(nets)} entries for "
+                    f"{u_total} users")
+        arr = self._arrays(service_id, tasks)
+        mask, free = arr.dynamic_state()
+        run_ix = np.nonzero(mask)[0]
+        if run_ix.size == 0:
+            return [[] for _ in range(u_total)]
+
+        out: List[List[object]] = []
+        for lo in range(0, u_total, self.user_chunk):
+            hi = min(lo + self.user_chunk, u_total)
+            out.extend(self._score_chunk(arr, run_ix, free[run_ix],
+                                         users[lo:hi], nets[lo:hi], k))
+        return out
+
+    def _score_chunk(self, arr: _ServiceArrays, run_ix: np.ndarray,
+                     free: np.ndarray, users: np.ndarray,
+                     nets: np.ndarray, k: int) -> List[List[object]]:
+        n = run_ix.size
+        u = len(users)
+        n_lat = arr.lat[run_ix]
+        n_lon = arr.lon[run_ix]
+        n_codes = arr.codes[run_ix]
+        n_net = arr.net_idx[run_ix]
+        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
+                                       CODE_PRECISION)
+
+        # adaptive-precision proximity filter: for p = 4..1, keep replicas
+        # sharing the first p geohash chars; accept the first p with enough
+        # hits, else no filter (exact ``proximity_search`` semantics).
+        # One (U, N) compare at a time keeps peak memory at a single tile.
+        need = min(MIN_PROXIMITY_HITS, n)
+        local = np.ones((u, n), bool)                 # fallback: no filter
+        done = np.zeros(u, bool)
+        for p in range(PROXIMITY_PRECISION, 0, -1):
+            shift = 5 * (CODE_PRECISION - p)
+            eq = (u_codes[:, None] >> shift) == (n_codes[None, :] >> shift)
+            use = (eq.sum(axis=1) >= need) & ~done
+            local = np.where(use[:, None], eq, local)
+            done |= use
+
+        d = geohash.distance_km_batch(users[:, 0:1], users[:, 1:2],
+                                      n_lat[None, :], n_lon[None, :])
+        prox = 1.0 / (1.0 + d / 10.0)
+        aff = AFFINITY_TABLE[n_net[None, :], nets[:, None]]
+        scores = (W_RESOURCE * free[None, :] + W_AFFINITY * aff
+                  + W_PROXIMITY * prox)
+        scores = np.where(local, scores, -np.inf)
+        # stable argsort matches Python's stable sort on score ties
+        order = np.argsort(-scores, axis=1, kind="stable")
+        n_local = local.sum(axis=1)
+        tasks = arr.tasks
+        return [[tasks[run_ix[j]] for j in order[i, :min(k, n_local[i])]]
+                for i in range(u)]
+
+    # --------------------------------------------------- kernel-backed path
+
+    def prepare_kernel_inputs(self, service_id: str,
+                              tasks: Sequence[object], user_locs,
+                              user_nets):
+        """Pack the current replica set + a user batch into the flat arrays
+        ``repro.kernels.geo_topk`` consumes (see its docstring for the
+        meaning of the 20-bit codes and per-user shifts)."""
+        users = np.asarray(user_locs, np.float64).reshape(-1, 2)
+        if isinstance(user_nets, str):
+            nets = np.full(len(users), net_index(user_nets), np.int64)
+        else:
+            nets = np.asarray([net_index(n) for n in user_nets], np.int64)
+        arr = self._arrays(service_id, tasks)
+        mask, free = arr.dynamic_state()
+        run_ix = np.nonzero(mask)[0]
+        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
+                                       CODE_PRECISION)
+        from repro.kernels.geo_topk.ops import pack_inputs
+        return run_ix, pack_inputs(
+            users[:, 0], users[:, 1], nets, u_codes,
+            arr.lat[run_ix], arr.lon[run_ix], free[run_ix],
+            arr.net_idx[run_ix], arr.codes[run_ix])
+
+    def candidate_lists_kernel(self, service_id: str,
+                               tasks: Sequence[object], user_locs,
+                               user_nets, top_n: Optional[int] = None,
+                               interpret: bool = False) -> List[List[object]]:
+        """Batched selection through the fused geo_topk op (jnp oracle on
+        CPU, Pallas kernel on TPU).  Same top-k semantics as
+        ``candidate_lists``."""
+        from repro.kernels.geo_topk.ops import geo_topk
+        k = top_n or self.top_n
+        run_ix, packed = self.prepare_kernel_inputs(service_id, tasks,
+                                                    user_locs, user_nets)
+        if run_ix.size == 0:
+            return [[] for _ in range(len(packed.user_lat))]
+        scores, idx = geo_topk(packed, k=min(k, run_ix.size),
+                               interpret=interpret)
+        scores = np.asarray(scores)
+        idx = np.asarray(idx)
+        arr = self._cache[service_id]
+        return [[arr.tasks[run_ix[j]] for j, s in zip(row_i, row_s)
+                 if np.isfinite(s) and s > -1e29]
+                for row_i, row_s in zip(idx, scores)]

@@ -25,11 +25,14 @@ class _Event:
 
 
 class Simulator:
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0, trace_enabled: bool = True):
         self.now = 0.0
         self._heap: List[_Event] = []
         self._seq = itertools.count()
         self.rng = np.random.default_rng(seed)
+        # large-scale runs (100k+ users) disable tracing so the trace list
+        # doesn't grow without bound; benchmarks keep the default
+        self.trace_enabled = trace_enabled
         self.trace: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------- events
@@ -64,7 +67,8 @@ class Simulator:
     # -------------------------------------------------------------- trace
 
     def log(self, kind: str, **kw):
-        self.trace.append({"t": self.now, "kind": kind, **kw})
+        if self.trace_enabled:
+            self.trace.append({"t": self.now, "kind": kind, **kw})
 
     def jitter(self, base: float, frac: float = 0.1) -> float:
         """Multiplicative noise around ``base`` (deterministic via rng)."""

@@ -9,5 +9,7 @@ Each kernel subpackage ships three files:
 * ``ref.py``    — pure-jnp oracle used by tests and as the CPU fallback
 
 Kernels: flash_attention (prefill/train), decode_attention (single-token
-serve), moe_gmm (grouped expert matmul), ssm_scan (Mamba2 chunked SSD).
+serve), moe_gmm (grouped expert matmul), ssm_scan (Mamba2 chunked SSD),
+geo_topk (fused control-plane edge selection: haversine + net affinity +
+resource scoring with per-user top-k, paper §3.2 Algorithm 1).
 """

@@ -1,0 +1,2 @@
+from repro.kernels.geo_topk.ops import (GeoTopKInputs, geo_topk,  # noqa: F401
+                                        pack_inputs)

@@ -1,0 +1,145 @@
+"""Fused geo-selection top-k as a Pallas TPU kernel.
+
+One grid step scores a (BU,)-user tile against the full replica set:
+
+* haversine + 1/(1+d/10) proximity on the VPU (fp32 elementwise over the
+  (BU, N) tile);
+* net affinity as a (BU, M) one-hot x (M, N) affinity-column matmul on
+  the MXU (M = net types padded to 8, so the K dim is tile-aligned);
+* the paper's adaptive-precision geohash filter on 20-bit Morton codes —
+  int32 compares + row reductions, no int64 on the TPU;
+* iterative max-extract top-k (k is static and small, the loop unrolls);
+  ties pick the lowest index, matching ``jax.lax.top_k``.
+
+Users are embarrassingly parallel, so the grid is 1-D over user tiles and
+every node array is broadcast to each step.  The whole (BU, N) working
+set stays in VMEM: BU=128 x N=4096 fp32 is 2 MB/matrix — see
+``vmem_bytes``.  N beyond ~16k nodes needs a node-tiled variant with a
+running top-k merge (ROADMAP: sharded selection across Beacon replicas).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.geo_topk.ref import (NEG, PREFIX_CHARS, W_AFFINITY,
+                                        W_PROXIMITY, W_RESOURCE,
+                                        haversine_km)
+
+
+def _geo_topk_kernel(ulat_ref, ulon_ref, unet_ref, ucode_ref,
+                     nlat_ref, nlon_ref, nfree_ref, naff_ref, ncode_ref,
+                     nvalid_ref, scores_ref, idx_ref, *, k, need, np_):
+    ulat = ulat_ref[:, 0:1]                       # (BU, 1)
+    ulon = ulon_ref[:, 0:1]
+    unet = unet_ref[:, 0:1]                       # (BU, 1) int32
+    ucode = ucode_ref[:, 0:1]                     # (BU, 1) int32
+    nlat = nlat_ref[0:1, :]                       # (1, N)
+    nlon = nlon_ref[0:1, :]
+    nfree = nfree_ref[0:1, :]
+    ncode = ncode_ref[0:1, :]                     # (1, N) int32
+    valid = nvalid_ref[0:1, :] > 0                # (1, N)
+
+    bu = ulat.shape[0]
+
+    # ---- proximity term (VPU, fp32): shares the oracle's exact formula
+    d = haversine_km(ulat, ulon, nlat, nlon)      # (BU,1) x (1,N)
+    prox = 1.0 / (1.0 + d / 10.0)                 # (BU, N)
+
+    # ---- affinity term (MXU): one-hot(users) @ per-node affinity columns
+    m = naff_ref.shape[0]
+    onehot = (unet == jax.lax.broadcasted_iota(jnp.int32, (bu, m), 1)
+              ).astype(jnp.float32)
+    aff = jax.lax.dot_general(onehot, naff_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    scores = W_RESOURCE * nfree + W_AFFINITY * aff + W_PROXIMITY * prox
+
+    # ---- adaptive-precision geohash filter (int32 prefix compares)
+    local = jnp.broadcast_to(valid, (bu, valid.shape[1]))
+    done = jnp.zeros((bu, 1), bool)
+    for p in range(PREFIX_CHARS, 0, -1):
+        shift = 5 * (PREFIX_CHARS - p)
+        eq = ((ucode >> shift) == (ncode >> shift)) & valid
+        use = (jnp.sum(eq.astype(jnp.int32), axis=1, keepdims=True)
+               >= need) & ~done
+        local = jnp.where(use, eq, local)
+        done = done | use
+    scores = jnp.where(local, scores, jnp.float32(NEG))
+
+    # ---- top-k by repeated max extraction (ties -> lowest index)
+    iota = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    top_s, top_i = [], []
+    for _ in range(k):
+        best = jnp.max(scores, axis=1, keepdims=True)           # (BU, 1)
+        at = jnp.where(scores >= best, iota, np_)
+        ix = jnp.min(at, axis=1, keepdims=True)                 # (BU, 1)
+        top_s.append(best)
+        top_i.append(ix)
+        scores = jnp.where(iota == ix, jnp.float32(NEG * 2), scores)
+    scores_ref[...] = jnp.concatenate(top_s, axis=1)
+    idx_ref[...] = jnp.concatenate(top_i, axis=1)
+
+
+def geo_topk_pallas(user_lat, user_lon, user_net, user_code20,
+                    node_lat, node_lon, node_free, node_aff, node_code20,
+                    node_valid, *, k: int, need: int, block_u: int = 128,
+                    interpret: bool = False):
+    """-> (scores (U, k) fp32, indices (U, k) int32).
+
+    Users: (U,) fp32 lat/lon, int32 net index + 20-bit Morton code.
+    Nodes: (N,) fp32 lat/lon/free/valid, int32 codes, (M, N) affinity
+    columns.  Pads U to ``block_u`` and N to a lane multiple internally.
+    """
+    u = user_lat.shape[0]
+    n = node_lat.shape[0]
+    bu = min(block_u, max(8, u))
+    pu = -u % bu
+    pn = -n % 128
+
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    ul = jnp.pad(f32(user_lat), (0, pu)).reshape(-1, 1)
+    uo = jnp.pad(f32(user_lon), (0, pu)).reshape(-1, 1)
+    un = jnp.pad(i32(user_net), (0, pu)).reshape(-1, 1)
+    uc = jnp.pad(i32(user_code20), (0, pu)).reshape(-1, 1)
+    nl = jnp.pad(f32(node_lat), (0, pn)).reshape(1, -1)
+    no = jnp.pad(f32(node_lon), (0, pn)).reshape(1, -1)
+    nf = jnp.pad(f32(node_free), (0, pn)).reshape(1, -1)
+    nc = jnp.pad(i32(node_code20), (0, pn)).reshape(1, -1)
+    nv = jnp.pad(f32(node_valid), (0, pn)).reshape(1, -1)
+    m = node_aff.shape[0]
+    pm = -m % 8
+    na = jnp.pad(f32(node_aff), ((0, pm), (0, pn)))
+
+    up, np_ = u + pu, n + pn
+    grid = (up // bu,)
+    user_spec = pl.BlockSpec((bu, 1), lambda i: (i, 0))
+    node_spec = pl.BlockSpec((1, np_), lambda i: (0, 0))
+
+    scores, idx = pl.pallas_call(
+        functools.partial(_geo_topk_kernel, k=k, need=need, np_=np_),
+        grid=grid,
+        in_specs=[user_spec, user_spec, user_spec, user_spec,
+                  node_spec, node_spec, node_spec,
+                  pl.BlockSpec((m + pm, np_), lambda i: (0, 0)),
+                  node_spec, node_spec],
+        out_specs=[pl.BlockSpec((bu, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bu, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((up, k), jnp.float32),
+                   jax.ShapeDtypeStruct((up, k), jnp.int32)],
+        interpret=interpret,
+    )(ul, uo, un, uc, nl, no, nf, na, nc, nv)
+    return scores[:u], idx[:u]
+
+
+def vmem_bytes(block_u: int, n: int, k: int = 8, m: int = 8) -> int:
+    """Static VMEM budget for one grid step (fp32 everywhere)."""
+    user_tiles = 4 * block_u * 4
+    node_tiles = (5 + m) * n * 4
+    work = 5 * block_u * n * 4            # d/prox/aff/scores/local+iota
+    out = 2 * block_u * k * 4
+    return 2 * (user_tiles + node_tiles + out) + work

@@ -1,0 +1,72 @@
+"""Public fused geo-selection op: Pallas on TPU, jnp oracle elsewhere.
+
+``pack_inputs`` flattens a (users, replicas) query into the dtype-correct
+arrays both backends consume; ``geo_topk`` dispatches and returns
+per-user ``(scores, indices)`` top-k.  ``SelectionEngine`` in
+``repro.core.selection`` maps indices back to Task objects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.selection import CODE_PRECISION
+from repro.kernels.geo_topk.kernel import geo_topk_pallas
+from repro.kernels.geo_topk.ref import MIN_PROXIMITY_HITS, geo_topk_reference
+
+PREFIX_SHIFT = 5 * CODE_PRECISION - 20   # keep the top 4 chars = 20 bits
+
+
+class GeoTopKInputs(NamedTuple):
+    user_lat: np.ndarray      # (U,) fp32
+    user_lon: np.ndarray      # (U,) fp32
+    user_net: np.ndarray      # (U,) int32 net-type index
+    user_code20: np.ndarray   # (U,) int32, top-4-char Morton prefix
+    node_lat: np.ndarray      # (N,) fp32
+    node_lon: np.ndarray      # (N,) fp32
+    node_free: np.ndarray     # (N,) fp32 free-slot fraction
+    node_aff: np.ndarray      # (M, N) fp32 affinity columns per node
+    node_code20: np.ndarray   # (N,) int32
+    node_valid: np.ndarray    # (N,) fp32 1.0 = schedulable
+
+
+def pack_inputs(user_lat, user_lon, user_net, user_code45,
+                node_lat, node_lon, node_free, node_net,
+                node_code45) -> GeoTopKInputs:
+    """45-bit engine codes + net indices -> kernel-ready arrays."""
+    from repro.core.selection import AFFINITY_TABLE
+    node_net = np.asarray(node_net, np.int64)
+    return GeoTopKInputs(
+        np.asarray(user_lat, np.float32),
+        np.asarray(user_lon, np.float32),
+        np.asarray(user_net, np.int32),
+        (np.asarray(user_code45, np.int64) >> PREFIX_SHIFT).astype(np.int32),
+        np.asarray(node_lat, np.float32),
+        np.asarray(node_lon, np.float32),
+        np.asarray(node_free, np.float32),
+        AFFINITY_TABLE[node_net, :].T.astype(np.float32),
+        (np.asarray(node_code45, np.int64) >> PREFIX_SHIFT).astype(np.int32),
+        np.ones(len(node_lat), np.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "need", "force_pallas",
+                                             "interpret"))
+def _dispatch(packed: GeoTopKInputs, k: int, need: int, force_pallas: bool,
+              interpret: bool):
+    if force_pallas or jax.default_backend() == "tpu":
+        return geo_topk_pallas(
+            *packed, k=k, need=need,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return geo_topk_reference(*packed, k=k, need=need)
+
+
+def geo_topk(packed: GeoTopKInputs, *, k: int, need: int = None,
+             force_pallas: bool = False, interpret: bool = False):
+    """Per-user top-k replica (scores, indices) over the packed query."""
+    if need is None:
+        need = min(MIN_PROXIMITY_HITS, len(packed.node_lat))
+    return _dispatch(packed, k, need, force_pallas, interpret)

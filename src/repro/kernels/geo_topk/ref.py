@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for fused geo-selection top-k (paper Algorithm 1).
+
+Scores every (user, replica) pair in one fused pass:
+
+    score = W_RESOURCE * free + W_AFFINITY * aff + W_PROXIMITY * prox
+    prox  = 1 / (1 + haversine_km / 10)
+
+after the paper's adaptive-precision geohash proximity filter: for
+p = 4..1, keep replicas whose first ``p`` geohash chars match the user's;
+the first ``p`` with >= min(4, N) hits wins, else no filter.  Geohash
+prefixes are compared on 20-bit Morton codes (the first 4 base32 chars of
+``repro.core.geohash.encode_batch`` codes), which keeps every integer op
+inside int32 — TPU-native.
+
+Inputs are packed by ``repro.kernels.geo_topk.ops.pack_inputs``; scores
+are fp32 (coordinates at city scale lose < 1 m to fp32, far below the
+scoring resolution).  Masked-out pairs score ``NEG``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# single source of truth for the Algorithm-1 constants lives with the
+# engine; the kernel must score exactly what the numpy path scores
+from repro.core.selection import (MIN_PROXIMITY_HITS, W_AFFINITY,
+                                  W_PROXIMITY, W_RESOURCE)
+from repro.core.selection import PROXIMITY_PRECISION as PREFIX_CHARS
+
+EARTH_KM = 6371.0
+NEG = -1e30
+
+
+def haversine_km(ulat, ulon, nlat, nlon):
+    """Broadcasted fp32 haversine: (U, 1) x (1, N) -> (U, N)."""
+    rad = jnp.float32(jnp.pi / 180.0)
+    p1 = ulat * rad
+    p2 = nlat * rad
+    dp = (nlat - ulat) * rad
+    dl = (nlon - ulon) * rad
+    a = (jnp.sin(dp / 2) ** 2
+         + jnp.cos(p1) * jnp.cos(p2) * jnp.sin(dl / 2) ** 2)
+    return 2.0 * EARTH_KM * jnp.arcsin(jnp.sqrt(jnp.clip(a, 0.0, 1.0)))
+
+
+def proximity_mask(user_code20, node_code20, node_valid, need: int):
+    """(U, N) bool: the adaptive-precision prefix filter over valid nodes."""
+    valid = node_valid[None, :] > 0
+    local = valid                                     # fallback: no filter
+    done = jnp.zeros(user_code20.shape[0], bool)
+    for p in range(PREFIX_CHARS, 0, -1):
+        shift = 5 * (PREFIX_CHARS - p)
+        eq = ((user_code20[:, None] >> shift)
+              == (node_code20[None, :] >> shift)) & valid
+        use = (eq.sum(axis=1) >= need) & ~done
+        local = jnp.where(use[:, None], eq, local)
+        done = done | use
+    return local
+
+
+def score_matrix(user_lat, user_lon, user_net, user_code20,
+                 node_lat, node_lon, node_free, node_aff, node_code20,
+                 node_valid, need: int):
+    """(U, N) fp32 scores with filtered/invalid pairs at ``NEG``."""
+    d = haversine_km(user_lat[:, None], user_lon[:, None],
+                     node_lat[None, :], node_lon[None, :])
+    prox = 1.0 / (1.0 + d / 10.0)
+    m = node_aff.shape[0]
+    onehot = (user_net[:, None]
+              == lax.broadcasted_iota(jnp.int32, (user_net.shape[0], m), 1)
+              ).astype(jnp.float32)
+    aff = onehot @ node_aff                            # (U, N)
+    scores = (W_RESOURCE * node_free[None, :] + W_AFFINITY * aff
+              + W_PROXIMITY * prox)
+    local = proximity_mask(user_code20, node_code20, node_valid, need)
+    return jnp.where(local, scores, jnp.float32(NEG))
+
+
+def geo_topk_reference(user_lat, user_lon, user_net, user_code20,
+                       node_lat, node_lon, node_free, node_aff,
+                       node_code20, node_valid, *, k: int, need: int):
+    """-> (scores (U, k), indices (U, k)): per-user top-k replicas."""
+    scores = score_matrix(user_lat, user_lon, user_net, user_code20,
+                          node_lat, node_lon, node_free, node_aff,
+                          node_code20, node_valid, need)
+    return lax.top_k(scores, k)

@@ -146,7 +146,10 @@ def from_compiled(compiled, lowered_text: Optional[str], chips: int,
     """
     from repro.telemetry import hlo_cost
 
-    ca = dict(compiled.cost_analysis() or {})
+    raw = compiled.cost_analysis() or {}
+    if isinstance(raw, (list, tuple)):    # older jax wraps it in a list
+        raw = raw[0] if raw else {}
+    ca = dict(raw)
     cost = hlo_cost.analyze_compiled(compiled)
     roof = Roofline(flops=cost.flops, hbm_bytes=cost.bytes,
                     coll_bytes=cost.coll_bytes, chips=chips, hw=hw)

@@ -1,0 +1,71 @@
+"""Minimal ``hypothesis`` stand-in so property tests run on clean envs.
+
+When the real ``hypothesis`` is installed (see requirements-dev.txt) the
+tests import it and this module is unused.  The fallback draws a fixed
+number of deterministic pseudo-random samples per test — weaker than real
+property-based shrinking, but it keeps the geohash property suite
+executing (instead of skipped) on environments without the dependency.
+"""
+from __future__ import annotations
+
+
+from types import SimpleNamespace
+
+import numpy as np
+
+_SEED = 0xA47A11
+_DEFAULT_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _floats(min_value=-1e9, max_value=1e9, allow_nan=False, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _integers(min_value=0, max_value=100, **_):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(seq, **_):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def _lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+st = SimpleNamespace(floats=_floats, integers=_integers,
+                     sampled_from=_sampled_from, lists=_lists)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES),
+                _DEFAULT_EXAMPLES)
+
+        def wrapper():
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                fn(*[s.draw(rng) for s in pos_strategies],
+                   **{k: s.draw(rng) for k, s in kw_strategies.items()})
+        # no functools.wraps: pytest would follow __wrapped__ and mistake
+        # the drawn parameters for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

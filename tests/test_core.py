@@ -3,8 +3,12 @@ determinism, scheduler policies, 2-step selection, probing/load-balancing,
 auto-scaling, and multi-connection failover."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:                              # hypothesis is a dev-only dependency —
+    from hypothesis import given, settings          # requirements-dev.txt
+    from hypothesis import strategies as st
+except ModuleNotFoundError:       # clean env: deterministic sampling shim
+    from tests._hypothesis_fallback import given, settings, st
 
 from repro.core import geohash
 from repro.core.app_manager import ServiceSpec, Task

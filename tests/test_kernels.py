@@ -5,8 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import geohash
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_mha_reference
+from repro.kernels.geo_topk.kernel import geo_topk_pallas
+from repro.kernels.geo_topk.kernel import vmem_bytes as geo_vmem
+from repro.kernels.geo_topk.ops import geo_topk, pack_inputs
+from repro.kernels.geo_topk.ref import geo_topk_reference
 from repro.kernels.flash_attention import kernel as fa_kernel
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import mha_reference
@@ -187,3 +192,73 @@ def test_ssd_decode_chain_equals_sequential():
 
 def test_ssd_vmem_budget():
     assert ssd_vmem(256, 64, 128) < 64 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# fused geo-selection top-k
+# ---------------------------------------------------------------------------
+
+def _geo_inputs(u, n, spread=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    base = (44.97, -93.22)
+    ulat = base[0] + rng.uniform(-spread, spread, u)
+    ulon = base[1] + rng.uniform(-spread, spread, u)
+    nlat = base[0] + rng.uniform(-spread, spread, n)
+    nlon = base[1] + rng.uniform(-spread, spread, n)
+    unet = rng.integers(0, 3, u)
+    nnet = rng.integers(0, 3, n)
+    nfree = rng.uniform(0, 1, n)
+    uc = geohash.encode_batch(ulat, ulon, 9)
+    nc = geohash.encode_batch(nlat, nlon, 9)
+    return pack_inputs(ulat, ulon, unet, uc, nlat, nlon, nfree, nnet, nc)
+
+
+GEO_CASES = [
+    # U, N, k, block_u — exercise padding on every axis
+    (64, 128, 3, 32),
+    (50, 37, 5, 16),       # ragged U and N
+    (8, 3, 3, 8),          # k == N: every node selected
+    (130, 257, 8, 128),
+]
+
+
+@pytest.mark.parametrize("case", GEO_CASES)
+def test_geo_topk_pallas_matches_oracle(case):
+    u, n, k, bu = case
+    packed = _geo_inputs(u, n, seed=u + n)
+    need = min(4, n)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=k, need=need)
+    s_pal, i_pal = geo_topk_pallas(*packed, k=k, need=need, block_u=bu,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_pal), np.asarray(i_ref))
+
+
+@pytest.mark.parametrize("spread", [0.02, 5.0])
+def test_geo_topk_proximity_filter_consistency(spread):
+    """Tight clusters trigger the high-precision filter path; global
+    spreads fall through to lower precisions — both must match."""
+    packed = _geo_inputs(40, 64, spread=spread, seed=3)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=4, need=4)
+    s_pal, i_pal = geo_topk_pallas(*packed, k=4, need=4, block_u=16,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_pal), np.asarray(i_ref))
+    assert np.isfinite(np.asarray(s_ref)).all()
+
+
+def test_geo_topk_op_dispatches_to_oracle_on_cpu():
+    packed = _geo_inputs(16, 24, seed=11)
+    s_op, i_op = geo_topk(packed, k=3)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=3, need=4)
+    np.testing.assert_array_equal(np.asarray(i_op), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(s_op), np.asarray(s_ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_geo_topk_vmem_budget():
+    # production tile: 128 users x 4096 nodes must fit half a v5e VMEM
+    assert geo_vmem(128, 4096) < 64 * 2**20

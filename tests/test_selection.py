@@ -1,0 +1,214 @@
+"""Parity tests for the vectorized selection path.
+
+Three layers, each pinned to its predecessor:
+
+1. ``geohash.encode_batch`` (int64 Morton codes) vs the scalar base32
+   ``encode`` across random coordinates and every precision;
+2. ``SelectionEngine`` (numpy batched) vs the pre-refactor scalar scorer
+   ``candidate_list_scalar`` on the paper topologies;
+3. the ``geo_topk`` fused op vs the engine's ranking (kernel-vs-oracle
+   parity itself lives in tests/test_kernels.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import geohash
+from repro.core.app_manager import ServiceSpec
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.cluster import campus_users, emulation, real_world
+from repro.core.selection import SelectionEngine, candidate_list_scalar
+
+RNG = np.random.default_rng(1234)
+
+
+# ---------------------------------------------------------------------------
+# encode_batch / distance_km_batch vs the scalar primitives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", [1, 2, 3, 4, 6, 9])
+def test_encode_batch_matches_scalar_encode(precision):
+    lats = RNG.uniform(-89.9, 89.9, 500)
+    lons = RNG.uniform(-179.9, 179.9, 500)
+    codes = geohash.encode_batch(lats, lons, precision)
+    for i in range(0, 500, 7):
+        s = geohash.encode(lats[i], lons[i], precision)
+        assert geohash.str_to_code(s) == int(codes[i])
+        assert geohash.code_to_str(int(codes[i]), precision) == s
+
+
+def test_shared_prefix_chars_matches_common_prefix():
+    lats = RNG.uniform(-60, 60, 200)
+    lons = RNG.uniform(-170, 170, 200)
+    # mix global pairs with near-identical pairs (long shared prefixes)
+    lats[100:] = lats[:100] + RNG.uniform(-1e-4, 1e-4, 100)
+    lons[100:] = lons[:100] + RNG.uniform(-1e-4, 1e-4, 100)
+    codes = geohash.encode_batch(lats, lons, 9)
+    pairs = np.stack([np.arange(100), np.arange(100, 200)])
+    got = geohash.shared_prefix_chars(codes[pairs[0]], codes[pairs[1]])
+    for n in range(100):
+        a = geohash.encode(lats[n], lons[n], 9)
+        b = geohash.encode(lats[100 + n], lons[100 + n], 9)
+        assert got[n] == geohash.common_prefix(a, b)
+
+
+def test_distance_km_batch_matches_scalar():
+    lats = RNG.uniform(-89, 89, 60)
+    lons = RNG.uniform(-179, 179, 60)
+    d = geohash.distance_km_batch(lats[:30, None], lons[:30, None],
+                                  lats[None, 30:], lons[None, 30:])
+    assert d.shape == (30, 30)
+    for i in range(0, 30, 5):
+        for j in range(0, 30, 5):
+            ref = geohash.distance_km(lats[i], lons[i],
+                                      lats[30 + j], lons[30 + j])
+            assert abs(d[i, j] - ref) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# SelectionEngine vs the pre-refactor scalar scorer
+# ---------------------------------------------------------------------------
+
+def _deployed_system(make_topo, seed=3, replicas=6):
+    topo = make_topo()
+    sys_ = ArmadaSystem(topo, seed=seed)
+    first = next(iter(topo.nodes.values()))
+    spec = ServiceSpec("svc", detection_image(), locations=[first.loc],
+                       min_replicas=replicas)
+    sys_.beacon.deploy_application(spec)
+    sys_.sim.run(until=20_000)
+    return sys_
+
+
+@pytest.mark.parametrize("make_topo,users", [
+    (real_world, ["C1", "C2", "C3"]),
+    (emulation, ["User_A", "User_B", "User_C"]),
+])
+def test_engine_matches_scalar_on_paper_topologies(make_topo, users):
+    sys_ = _deployed_system(make_topo)
+    tasks = sys_.am.tasks["svc"]
+    for uid in users:
+        loc = sys_.topo.nodes[uid].loc
+        net = sys_.topo.nodes[uid].net_type
+        for top_n in (1, 3, 64):
+            want = [t.task_id for t in
+                    candidate_list_scalar(tasks, loc, net, top_n)]
+            got = [t.task_id for t in
+                   sys_.am.candidate_list("svc", loc, net, top_n=top_n)]
+            assert got == want
+
+
+def test_engine_matches_scalar_on_random_fleet():
+    sys_ = _deployed_system(real_world)
+    users = campus_users(sys_.topo, 25, seed=5)
+    tasks = sys_.am.tasks["svc"]
+    eng = SelectionEngine(top_n=3)
+    for uid in users:
+        loc = sys_.topo.nodes[uid].loc
+        net = sys_.topo.nodes[uid].net_type
+        want = [t.task_id for t in candidate_list_scalar(tasks, loc, net, 3)]
+        got = [t.task_id for t in eng.candidate_list("svc", tasks, loc, net)]
+        assert got == want
+
+
+def test_batched_equals_per_user():
+    sys_ = _deployed_system(real_world)
+    users = campus_users(sys_.topo, 40, seed=9)
+    locs = [sys_.topo.nodes[u].loc for u in users]
+    nets = [sys_.topo.nodes[u].net_type for u in users]
+    batched = sys_.beacon.query_service_batch("svc", locs, nets)
+    assert len(batched) == len(users)
+    for loc, net, row in zip(locs, nets, batched):
+        want = sys_.am.candidate_list("svc", loc, net)
+        assert [t.task_id for t in row] == [t.task_id for t in want]
+
+
+def test_engine_tracks_replica_and_liveness_changes():
+    sys_ = _deployed_system(real_world)
+    loc = sys_.topo.nodes["C1"].loc
+    before = sys_.am.candidate_list("svc", loc, "wifi", top_n=64)
+    assert before
+    # kill the top node: the mask must drop it with no explicit invalidate
+    top = before[0].captain
+    top.fail()
+    after = sys_.am.candidate_list("svc", loc, "wifi", top_n=64)
+    assert all(t.captain is not top for t in after)
+    assert [t.task_id for t in after] == \
+        [t.task_id for t in candidate_list_scalar(
+            sys_.am.tasks["svc"], loc, "wifi", 64)]
+
+
+def test_engine_cache_reuse_and_invalidate():
+    sys_ = _deployed_system(real_world)
+    eng = sys_.am.engine
+    loc = sys_.topo.nodes["C1"].loc
+    sys_.am.candidate_list("svc", loc, "wifi")
+    arrays = eng._cache.get("svc")
+    assert arrays is not None
+    sys_.am.candidate_list("svc", loc, "wifi")
+    assert eng._cache.get("svc") is arrays          # cache hit, same arrays
+    eng.invalidate("svc")
+    assert "svc" not in eng._cache
+
+
+def test_kernel_path_matches_numpy_engine():
+    sys_ = _deployed_system(real_world)
+    users = campus_users(sys_.topo, 20, seed=17)
+    locs = [sys_.topo.nodes[u].loc for u in users]
+    nets = [sys_.topo.nodes[u].net_type for u in users]
+    eng = sys_.am.engine
+    tasks = sys_.am.tasks["svc"]
+    want = eng.candidate_lists("svc", tasks, locs, nets)
+    got = eng.candidate_lists_kernel("svc", tasks, locs, nets)
+    for w, g in zip(want, got):
+        assert [t.task_id for t in g] == [t.task_id for t in w]
+
+
+def test_empty_and_all_dead_services():
+    sys_ = _deployed_system(real_world)
+    eng = SelectionEngine()
+    assert eng.candidate_list("nope", [], (45.0, -93.0), "wifi") == []
+    tasks = sys_.am.tasks["svc"]
+    for t in tasks:
+        if t.captain is not None:
+            t.captain.alive = False
+    assert eng.candidate_lists("svc", tasks,
+                               [(45.0, -93.0)], "wifi") == [[]]
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_scale_down_survives_dead_captains():
+    sys_ = _deployed_system(real_world, replicas=6)
+    tasks = [t for t in sys_.am.tasks["svc"] if t.status == "running"]
+    assert len(tasks) > 3
+    tasks[0].captain.fail()             # dead captain in the running list
+    sys_.am.scale_down("svc")           # must not probe the dead captain
+    cancelled = [t for t in sys_.am.tasks["svc"] if t.status == "cancelled"]
+    assert all(t.captain.alive for t in cancelled)
+
+
+@pytest.mark.slow
+def test_engine_matches_scalar_at_scale():
+    """2k-user x 200-node parity sweep (excluded from tier-1 by marker)."""
+    from benchmarks.bench_selection_scale import _fleet, _users
+    tasks = _fleet(200, seed=2)
+    locs, nets = _users(2000, seed=2)
+    eng = SelectionEngine(top_n=3)
+    batched = eng.candidate_lists("bench", tasks, locs, nets)
+    for i in range(0, 2000, 41):
+        want = candidate_list_scalar(tasks, tuple(locs[i]), nets[i], 3)
+        assert [t.task_id for t in batched[i]] == \
+            [t.task_id for t in want]
+
+
+def test_trace_can_be_disabled_for_scale_runs():
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=0, trace_enabled=False)
+    spec = ServiceSpec("svc", detection_image(),
+                       locations=[topo.nodes["D6"].loc])
+    sys_.beacon.deploy_application(spec)
+    sys_.sim.run(until=20_000)
+    assert sys_.sim.trace == []
+    assert [t for t in sys_.am.tasks["svc"] if t.status == "running"]
