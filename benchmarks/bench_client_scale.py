@@ -1,0 +1,127 @@
+"""Client-pool scaling: 100k live users end-to-end through the simulator.
+
+``bench_selection_scale`` showed the selection control plane handles
+10k×1k batches; this bench closes the loop — the whole client data plane
+(periodic probing, per-candidate EMAs, two-round switches, failover under
+churn) runs population-scale through ``ClientPool``'s fluid transport:
+one ``candidate_indices`` call and one vectorized EMA/switch update per
+probe tick, per-node fluid queueing via ``Captain.arrive_batch``.
+
+Default sweep ends at the headline 100k users × 1k nodes run (probing +
+frames + volunteer churn); ``run(smoke=True)`` (or ``--smoke`` on the
+CLI) is a seconds-scale profile exercised by tier-1 tests.  Reported
+``derived`` fields: wall ms per tick, simulated requests/s of wall time,
+and failovers observed under churn.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.churn import ChurnModel
+from repro.core.cluster import NodeSpec, Topology
+
+_METRO = (44.97, -93.22)
+SERVICE = "detect"
+
+
+def _system(n_nodes: int, seed: int) -> ArmadaSystem:
+    """Metro-area fleet with one running replica per node.
+
+    Tasks are registered directly (the ``ensure_cloud_replica`` idiom)
+    instead of through Spinner deploys — the bench measures the client
+    data plane, not image pulls.
+    """
+    rng = np.random.default_rng(seed)
+    nets = ("wifi", "ethernet", "lte")
+    nodes = {}
+    for i in range(n_nodes):
+        nodes[f"N{i}"] = NodeSpec(
+            f"N{i}",
+            (_METRO[0] + float(rng.uniform(-0.5, 0.5)),
+             _METRO[1] + float(rng.uniform(-0.5, 0.5))),
+            proc_ms=float(rng.uniform(10, 30)),
+            slots=int(rng.integers(4, 17)),
+            dedicated=bool(rng.random() < 0.2),
+            net_type=nets[int(rng.integers(len(nets)))])
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def _bench_case(n_users: int, n_nodes: int, n_ticks: int,
+                seed: int = 0, probe_period: float = 2000.0,
+                frame_interval: float = 1000.0,
+                selection_backend: str = "geo_topk"):
+    sys_ = _system(n_nodes, seed)
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack(
+        [_METRO[0] + rng.uniform(-0.5, 0.5, n_users),
+         _METRO[1] + rng.uniform(-0.5, 0.5, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, nets="wifi", transport="fluid",
+        probe_period_ms=probe_period, frame_interval_ms=frame_interval,
+        selection_backend=selection_backend, record_samples=False)
+    sys_.sim.at(0.0, pool.start)
+    # volunteer churn: non-dedicated nodes fail/recover throughout the run
+    churn = ChurnModel(sys_.sim, sys_.captains,
+                       volunteer_mttf_ms=40 * probe_period,
+                       mttr_ms=5 * probe_period)
+    churn.start()
+
+    horizon = n_ticks * probe_period
+    t0 = time.perf_counter()
+    sys_.sim.run(until=horizon)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    assert not sys_.sim.truncated
+    assert pool.ticks_run >= n_ticks - 1, pool.ticks_run
+    per_tick = wall_ms / max(pool.ticks_run, 1)
+    req_per_s = pool.requests_sent / (wall_ms / 1e3)
+    leaves = sum(1 for e in churn.events if e["kind"] == "leave")
+    tag = f"client_scale/u{n_users}_n{n_nodes}/{selection_backend}"
+    return [(tag, per_tick,
+             f"ticks={pool.ticks_run};reqs={pool.requests_sent};"
+             f"req_per_s={req_per_s:.0f};node_failures={leaves};"
+             f"failovers={pool.failovers};"
+             f"mean_frame_ms={pool.mean_latency():.1f}")]
+
+
+def run(smoke: bool = False):
+    if smoke:
+        sweep = [(2_000, 100, 5, "numpy")]
+    else:
+        # numpy wins at small N (no jit round-trip); the fused geo_topk
+        # oracle takes over once U x N scoring dominates the tick
+        sweep = [(10_000, 100, 10, "numpy"),
+                 (10_000, 1_000, 10, "numpy"),
+                 (10_000, 1_000, 10, "geo_topk"),
+                 (100_000, 1_000, 15, "geo_topk")]
+    rows = []
+    for n_users, n_nodes, n_ticks, backend in sweep:
+        rows.extend(_bench_case(n_users, n_nodes, n_ticks,
+                                selection_backend=backend))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale profile (small U/N)")
+    args = ap.parse_args()
+    print("name,ms_per_tick,derived")
+    for name, ms, derived in run(smoke=args.smoke):
+        print(f"{name},{ms:.1f},{derived}")

@@ -9,7 +9,15 @@ one vectorized pass (exposed as ``Beacon.query_service_batch``).
 Auto-scaling: 3 replicas at deploy time (fault-tolerance floor), then more
 wherever real users concentrate — the AM groups active users by reduced-
 precision geohash (batch Morton encoding, one pass over all users) and
-asks Spinner for capacity in overloaded regions.
+asks Spinner for capacity in overloaded regions.  One *global* autoscale
+tick batches the capacity probe across every deployed service (a single
+Morton pass over all users of all services) and plans multi-replica
+spawns per overloaded region in one pass, instead of one task per tick
+per region per service.
+
+User tracking accepts both scalar ``Client`` objects and vectorized
+``ClientPool``s: anything exposing ``active_locs() -> (k, 2) ndarray``
+contributes its whole population to the demand grouping.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ from repro.core.sim import Simulator
 from repro.core.spinner import Image, Spinner
 
 REGION_PRECISION = 3            # coarse geohash cells for autoscale grouping
+MAX_SPAWN_PER_REGION = 3        # multi-replica planning cap per tick
 
 
 @dataclass
@@ -69,6 +78,7 @@ class ApplicationManager:
         self.autoscale_enabled = True
         self.scale_events: List[dict] = []
         self.engine = SelectionEngine(top_n=top_n)
+        self._autoscale_scheduled = False
 
     # ----------------------------------------------------------- deployment
 
@@ -121,6 +131,15 @@ class ApplicationManager:
             service_id, self.tasks.get(service_id, ()), user_locs,
             user_nets, top_n=top_n)
 
+    def candidate_indices(self, service_id: str, user_locs, user_nets,
+                          top_n: Optional[int] = None):
+        """Index-space batched Algorithm 1: ``(U, k)`` int32 positions into
+        ``self.tasks[service_id]``, padded with -1 (the ClientPool path —
+        no Task-list materialization)."""
+        return self.engine.candidate_indices(
+            service_id, self.tasks.get(service_id, ()), user_locs,
+            user_nets, top_n=top_n)
+
     # -------------------------------------------------------------- users
 
     def user_join(self, service_id: str, client):
@@ -132,16 +151,21 @@ class ApplicationManager:
 
     # ---------------------------------------------------------- auto-scaling
 
-    def _schedule_autoscale(self, service_id: str):
-        self.sim.after(self.scale_check_s * 1000.0, self._autoscale_tick,
-                       service_id)
+    def _schedule_autoscale(self, service_id: Optional[str] = None):
+        """One global tick covers every service (``service_id`` kept for
+        API compatibility; the first deployment arms the loop)."""
+        if self._autoscale_scheduled:
+            return
+        self._autoscale_scheduled = True
+        self.sim.after(self.scale_check_s * 1000.0, self._autoscale_tick)
 
-    def _autoscale_tick(self, service_id: str):
-        if service_id not in self.services:
+    def _autoscale_tick(self):
+        self._autoscale_scheduled = False
+        if not self.services:
             return
         if self.autoscale_enabled:
-            self._autoscale(service_id)
-        self._schedule_autoscale(service_id)
+            self._autoscale_all()
+        self._schedule_autoscale()
 
     def _capacity(self, tasks: List[Task]) -> int:
         seen, cap = set(), 0
@@ -154,26 +178,66 @@ class ApplicationManager:
                 cap += 1                      # in-flight capacity
         return cap
 
-    def _autoscale(self, service_id: str):
-        spec = self.services[service_id]
-        clients = self.users.get(service_id, ())
-        if not clients:
+    def _service_user_locs(self, service_id: str) -> np.ndarray:
+        """(k, 2) locations of every active user of a service — scalar
+        clients contribute one row, ClientPools their whole population."""
+        parts = []
+        for c in self.users.get(service_id, ()):
+            if hasattr(c, "active_locs"):
+                locs = c.active_locs()
+                if len(locs):
+                    parts.append(np.asarray(locs, np.float64))
+            else:
+                parts.append(np.asarray([c.loc], np.float64))
+        if not parts:
+            return np.empty((0, 2))
+        return np.concatenate(parts, axis=0)
+
+    def _autoscale_all(self):
+        """Demand-driven scaling for ALL services in one batched pass.
+
+        The capacity probe is batched across services: user locations of
+        every service are Morton-encoded in one ``encode_batch`` call
+        (likewise for placed tasks), then each overloaded (service,
+        region) cell gets a multi-replica spawn plan — enough capacity to
+        clear the overload ratio, capped at ``MAX_SPAWN_PER_REGION`` per
+        tick so demand spikes can't stampede the scheduler.
+        """
+        sids, u_parts, t_parts, placed_by_sid = [], [], [], {}
+        for sid in self.services:
+            locs = self._service_user_locs(sid)
+            if not len(locs):
+                continue
+            placed = [t for t in self.tasks[sid]
+                      if t.captain is not None
+                      and t.status in ("running", "deploying")]
+            sids.append(sid)
+            u_parts.append(locs)
+            placed_by_sid[sid] = placed
+            t_parts.append(np.asarray(
+                [t.captain.spec.loc for t in placed], np.float64)
+                if placed else np.empty((0, 2)))
+        if not sids:
             return
-        # group active users by coarse geohash region — one batched Morton
-        # encoding over all user locations instead of per-user strings
-        user_locs = np.asarray([c.loc for c in clients], np.float64)
-        user_codes = geohash.encode_batch(user_locs[:, 0], user_locs[:, 1],
-                                          REGION_PRECISION)
-        placed = [t for t in self.tasks[service_id]
-                  if t.captain is not None
-                  and t.status in ("running", "deploying")]
-        if placed:
-            t_locs = np.asarray([t.captain.spec.loc for t in placed],
-                                np.float64)
-            t_codes = geohash.encode_batch(t_locs[:, 0], t_locs[:, 1],
+        # ONE Morton pass over all users / all placed tasks of all services
+        all_users = np.concatenate(u_parts, axis=0)
+        all_tasks = np.concatenate(t_parts, axis=0)
+        u_codes_all = geohash.encode_batch(all_users[:, 0], all_users[:, 1],
                                            REGION_PRECISION)
-        else:
-            t_codes = np.empty(0, np.int64)
+        t_codes_all = geohash.encode_batch(all_tasks[:, 0], all_tasks[:, 1],
+                                           REGION_PRECISION)
+        u_bounds = np.cumsum([0] + [len(p) for p in u_parts])
+        t_bounds = np.cumsum([0] + [len(p) for p in t_parts])
+        for i, sid in enumerate(sids):
+            self._autoscale_service(
+                sid, u_parts[i], u_codes_all[u_bounds[i]:u_bounds[i + 1]],
+                placed_by_sid[sid],
+                t_codes_all[t_bounds[i]:t_bounds[i + 1]])
+
+    def _autoscale_service(self, service_id: str, user_locs: np.ndarray,
+                           user_codes: np.ndarray, placed: List[Task],
+                           t_codes: np.ndarray):
+        spec = self.services[service_id]
         region_codes, first_seen, inverse, counts = np.unique(
             user_codes, return_index=True, return_inverse=True,
             return_counts=True)
@@ -192,17 +256,28 @@ class ApplicationManager:
             code = region_codes[r]
             n_users = int(counts[r])
             cap = self._capacity(task_buckets[r]) or 1e-9
-            if n_users / cap > self.overload_ratio:
-                centroid = (float(loc_sums[r, 0]) / n_users,
-                            float(loc_sums[r, 1]) / n_users)
-                t = self._spawn_task(spec, centroid)
-                if t is not None:
-                    gh = geohash.code_to_str(int(code), REGION_PRECISION)
-                    self.scale_events.append(
-                        {"t": self.sim.now, "service": service_id,
-                         "region": gh, "users": n_users, "cap": cap})
-                    self.sim.log("autoscale_up", service=service_id,
-                                 region=gh)
+            if n_users / cap <= self.overload_ratio:
+                continue
+            # multi-replica plan: close the whole capacity deficit in one
+            # pass (each spawned replica claims its node slot immediately,
+            # so consecutive spawns spread across captains)
+            deficit = int(np.ceil(n_users / self.overload_ratio - cap))
+            n_spawn = max(1, min(deficit, MAX_SPAWN_PER_REGION))
+            centroid = (float(loc_sums[r, 0]) / n_users,
+                        float(loc_sums[r, 1]) / n_users)
+            spawned = 0
+            for _ in range(n_spawn):
+                if self._spawn_task(spec, centroid) is None:
+                    break
+                spawned += 1
+            if spawned:
+                gh = geohash.code_to_str(int(code), REGION_PRECISION)
+                self.scale_events.append(
+                    {"t": self.sim.now, "service": service_id,
+                     "region": gh, "users": n_users, "cap": cap,
+                     "spawned": spawned})
+                self.sim.log("autoscale_up", service=service_id,
+                             region=gh, n=spawned)
 
     # ------------------------------------------------------------ shrink
 

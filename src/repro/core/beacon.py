@@ -12,6 +12,7 @@ from typing import Dict, List, Optional
 from repro.core.app_manager import ApplicationManager, ServiceSpec
 from repro.core.captain import Captain
 from repro.core.client import Client
+from repro.core.client_pool import ClientPool
 from repro.core.cluster import Topology
 from repro.core.sim import Simulator
 from repro.core.spinner import Image, Spinner
@@ -39,6 +40,11 @@ class Beacon:
         """Batched service discovery: one vectorized selection pass over a
         whole user population; returns one ranked Task list per user."""
         return self.am.candidate_lists(service_id, user_locs, user_nets)
+
+    def query_service_indices(self, service_id: str, user_locs, user_nets):
+        """Index-space batched discovery for pools: (U, k) int32 positions
+        into the service's task list, padded with -1."""
+        return self.am.candidate_indices(service_id, user_locs, user_nets)
 
     def register_node(self, captain: Captain, runtime: str = "armada"):
         return self.spinner.captain_join(captain, runtime)
@@ -84,6 +90,12 @@ class ArmadaSystem:
     def make_client(self, client_id: str, service_id: str, **kw) -> Client:
         return Client(self.sim, self.topo, self.am, client_id, service_id,
                       **kw)
+
+    def make_client_pool(self, service_id: str, **kw) -> ClientPool:
+        """Vectorized population: pass ``client_ids=[...]`` for Topology
+        endpoints (scalar-parity events transport) or ``locs=(U, 2)`` for
+        synthetic users (fluid transport at scale)."""
+        return ClientPool(self.sim, self.topo, self.am, service_id, **kw)
 
     def ensure_cloud_replica(self, service_id: str):
         """The paper's cloud baseline assumes an always-available cloud

@@ -10,7 +10,7 @@ benchmarks/bench_heterogeneity.py.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import NodeSpec, Topology
 from repro.core.sim import Simulator
@@ -18,7 +18,7 @@ from repro.core.sim import Simulator
 
 @dataclass
 class Request:
-    client: "object"              # repro.core.client.Client
+    client: "object"              # repro.core.client.Client / ClientPool
     task_id: str
     sent_at: float
     rtt: float
@@ -27,6 +27,40 @@ class Request:
     is_probe: bool = False
     on_done: Optional[Callable] = None
     storage_ops: int = 0          # cargo reads/writes piggybacked (facerec)
+    user_ix: int = -1             # pool user index (events transport)
+
+
+class ConnectionSet:
+    """Insertion-ordered set of warm connections.
+
+    Failure notifications draw RNG (the failover frame's jitter), so their
+    order must be deterministic and reproducible across processes — a plain
+    ``set`` of client objects iterates in id()-hash order, which varies
+    run to run.  Backing the set with a dict preserves the order clients
+    opened their connections, which is also the order the vectorized
+    ``ClientPool`` replays them in.
+    """
+
+    def __init__(self):
+        self._d: Dict[object, None] = {}
+
+    def add(self, obj):
+        self._d[obj] = None
+
+    def discard(self, obj):
+        self._d.pop(obj, None)
+
+    def clear(self):
+        self._d.clear()
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self):
+        return len(self._d)
+
+    def __contains__(self, obj):
+        return obj in self._d
 
 
 class Captain:
@@ -37,16 +71,21 @@ class Captain:
         self.node_id = spec.node_id
         self.alive = True
         self.tasks: Dict[str, "object"] = {}         # task_id -> Task
-        self.connections: Set[object] = set()
+        self.connections = ConnectionSet()
         self.queue: List[Request] = []
         self.busy = 0
         self.processed = 0
         self.registered_at: Optional[float] = None
+        # fluid data plane (ClientPool batched transport): pending work in
+        # proc-milliseconds, drained at ``slots`` work-ms per wall-ms
+        self.fluid_work = 0.0
+        self.fluid_updated = 0.0
 
     # ------------------------------------------------------------- status
 
     def load(self) -> float:
-        return (self.busy + len(self.queue)) / max(self.spec.slots, 1)
+        return (self.busy + len(self.queue) + self._fluid_requests()) \
+            / max(self.spec.slots, 1)
 
     def free_fraction(self) -> float:
         return max(0.0, 1.0 - self.load())
@@ -82,6 +121,62 @@ class Captain:
         if req.on_done is not None:
             self.sim.after(back, req.on_done, req)
 
+    # ----------------------------------------------- fluid batched serving
+
+    def _fluid_requests(self) -> float:
+        """Fluid backlog expressed in request-equivalents (for ``load``).
+
+        Read-only lazy drain: a node that stopped receiving batches must
+        not report its last committed backlog forever (selection would
+        deprioritize it permanently and ``scale_down`` could never reclaim
+        it)."""
+        if self.fluid_work <= 0.0:
+            return 0.0
+        dt = self.sim.now - self.fluid_updated
+        work = self.fluid_work - self.spec.slots * dt if dt > 0 \
+            else self.fluid_work
+        return max(0.0, work) / max(self.spec.proc_ms, 1e-9)
+
+    def drain_fluid(self, now: float):
+        """Lazily drain the fluid backlog up to ``now`` (capacity =
+        ``slots`` work-ms per wall-ms).  ``fluid_updated`` never moves
+        backwards — capacity already credited to a committed window must
+        not be credited again by a second batch in the same window."""
+        dt = now - self.fluid_updated
+        if dt > 0:
+            self.fluid_work = max(
+                0.0, self.fluid_work - self.spec.slots * dt)
+            self.fluid_updated = now
+
+    def arrive_batch(self, n_requests: float, proc_scale: float,
+                     window_ms: float, now: float
+                     ) -> Tuple[float, float, float]:
+        """Admit a tick's worth of pool traffic as fluid work.
+
+        ``n_requests`` requests of ``proc_ms * proc_scale`` work each,
+        uniformly spread over ``[now, now + window_ms)``.  Returns
+        ``(work0, in_rate, cap_rate)`` — the backlog at window start (ms of
+        work), the arrival work rate, and the drain rate — from which the
+        caller computes per-request queueing delays vectorized:
+        ``wait(tau) = max(0, work0 + (in_rate - cap_rate) * tau) / slots``.
+
+        The terminal backlog is committed immediately, and drain capacity
+        is credited only for wall-time not yet accounted — overlapping
+        batches from several pools stack their work without double-counting
+        the node's capacity over the shared window.
+        """
+        self.drain_fluid(now)
+        work0 = self.fluid_work
+        work_in = n_requests * self.spec.proc_ms * proc_scale
+        cap_rate = float(self.spec.slots)
+        in_rate = work_in / max(window_ms, 1e-9)
+        end = now + window_ms
+        credit = max(0.0, end - max(self.fluid_updated, now))
+        self.fluid_work = max(0.0, work0 + work_in - cap_rate * credit)
+        self.fluid_updated = max(self.fluid_updated, end)
+        self.processed += int(n_requests)
+        return work0, in_rate, cap_rate
+
     # ------------------------------------------------------------ failure
 
     def fail(self):
@@ -92,6 +187,7 @@ class Captain:
         self.alive = False
         self.queue.clear()
         self.busy = 0
+        self.fluid_work = 0.0
         self.sim.log("node_fail", node=self.node_id)
         for client in list(self.connections):
             self.sim.after(0.1, client.on_connection_break, self.node_id)

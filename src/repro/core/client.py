@@ -14,27 +14,44 @@ break the client flips to the second-best candidate with zero downtime.
   cloud       cloud only
   reconnect   armada selection, but on failure waits + re-queries (Fig 10a)
   edge2cloud  armada selection, but fails over to cloud (Fig 10b)
+
+Scalar-vs-pool responsibility map
+---------------------------------
+This class drives ONE user through per-request simulator events; the
+population-scale path is ``repro.core.client_pool.ClientPool`` (SoA
+arrays, one selection call + one vectorized EMA/switch update per tick).
+The *policy* — what to probe, when to switch, where to fail over — lives
+in ``client_pool``'s pure array functions and is shared by both:
+
+  =====================  ==========================  ====================
+  concern                scalar ``Client``           ``ClientPool``
+  =====================  ==========================  ====================
+  event loop             per-user heap events        pool-level tick
+  wide-list size         ``WIDE_TOP_N`` (shared)     ``WIDE_TOP_N``
+  baseline filters       ``mode_filter`` (U=1 row)   ``mode_filter``
+  latency EMAs           ``ema_fold`` (U=1 row)      ``ema_fold`` batched
+  two-round switches     ``switch_decide`` (U=1)     ``switch_decide``
+  break failover         inline (this file)          ``failover_pick``
+  transport              ``Captain.arrive``          events | fluid batch
+  =====================  ==========================  ====================
+
+A pool with ``transport="events"`` reproduces U scalar Clients
+bit-for-bit (tests/test_client_pool.py); keep this class as the readable
+reference and parity oracle.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.core import geohash
+import numpy as np
+
 from repro.core.app_manager import ApplicationManager, Task
 from repro.core.captain import Request
+from repro.core.client_pool import (LatencySample, MODE_INDEX,
+                                    RECONNECT_DELAY_MS, WIDE_TOP_N,
+                                    ema_fold, mode_filter, switch_decide)
 from repro.core.cluster import Topology
 from repro.core.sim import Simulator
-
-RECONNECT_DELAY_MS = 2000.0
-
-
-@dataclass
-class LatencySample:
-    t: float
-    ms: float
-    node: str
-    is_probe: bool = False
 
 
 class Client:
@@ -92,7 +109,7 @@ class Client:
         # mode baselines filter the WIDE list, then trim to TopN — otherwise
         # a "dedicated-only" client would leak onto volunteer nodes
         wide = self.am.candidate_list(self.service_id, self.loc, self.net,
-                                      top_n=64)
+                                      top_n=WIDE_TOP_N)
         cands = self._apply_mode_filter(wide)[:self.am.top_n]
         # keep warm connections to every candidate
         for t in self.candidates:
@@ -117,20 +134,21 @@ class Client:
             self.sim.after(self.probe_period, self._probe_tick)
 
     def _apply_mode_filter(self, cands: List[Task]) -> List[Task]:
-        if self.mode == "geo":
-            if not cands:
-                return cands
-            best = min(cands, key=lambda t: geohash.distance_km(
-                *t.captain.spec.loc, *self.loc))
-            return [best]
-        if self.mode == "dedicated":
-            ded = [t for t in cands if t.captain.spec.dedicated
-                   and not t.captain.spec.is_cloud]
-            return ded or cands
-        if self.mode == "cloud":
-            cl = [t for t in cands if t.captain.spec.is_cloud]
-            return cl
-        return cands
+        """Baseline filter over the wide list — the shared ``mode_filter``
+        array policy applied to a single-user row."""
+        if not cands:
+            return list(cands)
+        out = mode_filter(
+            np.arange(len(cands), dtype=np.int32)[None, :],
+            np.array([MODE_INDEX.get(self.mode, MODE_INDEX["armada"])],
+                     np.int8),
+            len(cands),
+            np.array([t.captain.spec.is_cloud for t in cands]),
+            np.array([t.captain.spec.dedicated for t in cands]),
+            np.array([t.captain.spec.loc[0] for t in cands]),
+            np.array([t.captain.spec.loc[1] for t in cands]),
+            np.array([self.loc[0]]), np.array([self.loc[1]]))
+        return [cands[j] for j in out[0] if j >= 0]
 
     def _probe_tick(self):
         if not self.running:
@@ -142,28 +160,39 @@ class Client:
     def _maybe_switch(self):
         """Switch to a better candidate only when it beats the active EMA
         by the margin on TWO consecutive probe rounds — damps the herd
-        oscillation naive probing causes after mass failures."""
+        oscillation naive probing causes after mass failures.  Decision
+        logic is the shared ``switch_decide`` array policy on a U=1 row."""
         if not self.candidates:
             return
-        known = [t for t in self.candidates
-                 if self._task_node(t) in self.ema]
-        if not known or self.active is None:
-            return
-        best = min(known, key=lambda t: self.ema[self._task_node(t)])
-        cur = self._task_node(self.active)
-        better = (best is not self.active and cur in self.ema
-                  and self.ema[self._task_node(best)]
-                  < self.switch_margin * self.ema[cur])
-        if not better:
-            self._pending_switch = None
-            return
-        if self._pending_switch != self._task_node(best):
-            self._pending_switch = self._task_node(best)
-            return
-        self.switches.append({"t": self.sim.now, "from": cur,
-                              "to": self._task_node(best)})
-        self.active = best
-        self._pending_switch = None
+        nodes = [self._task_node(t) for t in self.candidates]
+        cur = None if self.active is None else self._task_node(self.active)
+        names = list(dict.fromkeys(
+            nodes + ([cur] if cur else [])
+            + ([self._pending_switch] if self._pending_switch else [])))
+        nid = {n: i for i, n in enumerate(names)}
+        # slot ids stand in for task identity; an active task outside the
+        # candidate list gets a sentinel id no slot can equal
+        try:
+            a_ix = next(i for i, t in enumerate(self.candidates)
+                        if t is self.active)
+        except StopIteration:
+            a_ix = -1 if self.active is None else len(self.candidates)
+        confirm, best_slot, new_pending = switch_decide(
+            np.arange(len(nodes), dtype=np.int64)[None, :],
+            np.array([[self.ema.get(n, np.nan) for n in nodes]]),
+            np.array([[nid[n] for n in nodes]]),
+            np.array([a_ix]),
+            np.array([np.nan if cur is None
+                      else self.ema.get(cur, np.nan)]),
+            np.array([nid.get(self._pending_switch, -1)]),
+            self.switch_margin)
+        p = int(new_pending[0])
+        self._pending_switch = None if p < 0 else names[p]
+        if confirm[0]:
+            best = self.candidates[int(best_slot[0])]
+            self.switches.append({"t": self.sim.now, "from": cur,
+                                  "to": self._task_node(best)})
+            self.active = best
 
     # ------------------------------------------------------------ traffic
 
@@ -188,9 +217,9 @@ class Client:
             return
         ms = self.sim.now - req.sent_at
         node = req.node_id
-        prev = self.ema.get(node)
-        self.ema[node] = ms if prev is None else \
-            self.alpha * ms + (1 - self.alpha) * prev
+        prev = self.ema.get(node, np.nan)
+        self.ema[node] = float(ema_fold(
+            np.array([prev]), np.array([ms]), self.alpha)[0])
         if req.is_probe:
             self.samples.append(LatencySample(self.sim.now, ms, node, True))
             return

@@ -61,6 +61,23 @@ def net_index(net_type: str) -> int:
     return NET_INDEX.get(net_type, NET_INDEX["other"])
 
 
+def parse_nets(user_nets, n_users: int) -> np.ndarray:
+    """Coerce a net-type spec to an (U,) int64 index array: a single
+    string (applied to every user), a pre-mapped integer array, or a
+    sequence of net-type strings."""
+    if isinstance(user_nets, str):
+        return np.full(n_users, net_index(user_nets), np.int64)
+    if isinstance(user_nets, np.ndarray) and \
+            np.issubdtype(user_nets.dtype, np.integer):
+        nets = user_nets.astype(np.int64)
+    else:
+        nets = np.asarray([net_index(n) for n in user_nets], np.int64)
+    if len(nets) != n_users:
+        raise ValueError(
+            f"user_nets has {len(nets)} entries for {n_users} users")
+    return nets
+
+
 # ---------------------------------------------------------------------------
 # Pre-refactor scalar scorer (reference for parity tests and benchmarks)
 # ---------------------------------------------------------------------------
@@ -105,6 +122,9 @@ class _ServiceArrays:
         self.lat = np.empty(n)
         self.lon = np.empty(n)
         self.net_idx = np.empty(n, np.int64)
+        self.cloud = np.zeros(n, bool)
+        self.dedicated = np.zeros(n, bool)
+        self.node_ids: List[Optional[str]] = [None] * n
         for i, t in enumerate(self.tasks):
             if t.captain is None:
                 self.lat[i] = self.lon[i] = 0.0
@@ -112,7 +132,17 @@ class _ServiceArrays:
             else:
                 self.lat[i], self.lon[i] = t.captain.spec.loc
                 self.net_idx[i] = net_index(t.captain.spec.net_type)
+                self.cloud[i] = t.captain.spec.is_cloud
+                self.dedicated[i] = t.captain.spec.dedicated
+                self.node_ids[i] = t.captain.node_id
         self.codes = geohash.encode_batch(self.lat, self.lon, CODE_PRECISION)
+
+    def alive_mask(self) -> np.ndarray:
+        """(T,) bool: task has a live captain (status ignored — matches the
+        scalar client's connection-break liveness check)."""
+        return np.fromiter(
+            (t.captain is not None and t.captain.alive for t in self.tasks),
+            bool, count=len(self.tasks))
 
     def dynamic_state(self) -> Tuple[np.ndarray, np.ndarray]:
         """(mask, free): alive+running mask and free-slot fractions."""
@@ -175,35 +205,42 @@ class SelectionEngine:
 
         ``user_locs``: sequence of (lat, lon); ``user_nets``: sequence of
         net-type strings (or a single string applied to every user).
-        Returns one ranked Task list per user.
+        Returns one ranked Task list per user.  (Materializing wrapper over
+        ``candidate_indices`` — the ClientPool stays in index space.)
         """
+        idx = self.candidate_indices(service_id, tasks, user_locs,
+                                     user_nets, top_n=top_n)
+        task_seq = list(tasks)
+        return [[task_seq[j] for j in row if j >= 0] for row in idx]
+
+    def candidate_indices(self, service_id: str, tasks: Sequence[object],
+                          user_locs, user_nets,
+                          top_n: Optional[int] = None) -> np.ndarray:
+        """Batched Algorithm 1 in index space: ``(U, k)`` int32 matrix of
+        ranked positions into ``tasks``, right-padded with -1.  Same
+        ranking as ``candidate_lists`` without materializing Python lists
+        (the ``ClientPool`` hot path)."""
         k = top_n or self.top_n
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         u_total = len(users)
-        if isinstance(user_nets, str):
-            nets = np.full(u_total, net_index(user_nets), np.int64)
-        else:
-            nets = np.asarray([net_index(n) for n in user_nets], np.int64)
-            if len(nets) != u_total:
-                raise ValueError(
-                    f"user_nets has {len(nets)} entries for "
-                    f"{u_total} users")
+        nets = parse_nets(user_nets, u_total)
         arr = self._arrays(service_id, tasks)
         mask, free = arr.dynamic_state()
         run_ix = np.nonzero(mask)[0]
+        out = np.full((u_total, k), -1, np.int32)   # always (U, k)
         if run_ix.size == 0:
-            return [[] for _ in range(u_total)]
-
-        out: List[List[object]] = []
+            return out
+        kk = min(k, run_ix.size)
         for lo in range(0, u_total, self.user_chunk):
             hi = min(lo + self.user_chunk, u_total)
-            out.extend(self._score_chunk(arr, run_ix, free[run_ix],
-                                         users[lo:hi], nets[lo:hi], k))
+            out[lo:hi, :kk] = self._score_chunk(arr, run_ix, free[run_ix],
+                                                users[lo:hi], nets[lo:hi],
+                                                kk)
         return out
 
     def _score_chunk(self, arr: _ServiceArrays, run_ix: np.ndarray,
                      free: np.ndarray, users: np.ndarray,
-                     nets: np.ndarray, k: int) -> List[List[object]]:
+                     nets: np.ndarray, k: int) -> np.ndarray:
         n = run_ix.size
         u = len(users)
         n_lat = arr.lat[run_ix]
@@ -235,11 +272,18 @@ class SelectionEngine:
                   + W_PROXIMITY * prox)
         scores = np.where(local, scores, -np.inf)
         # stable argsort matches Python's stable sort on score ties
-        order = np.argsort(-scores, axis=1, kind="stable")
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
         n_local = local.sum(axis=1)
-        tasks = arr.tasks
-        return [[tasks[run_ix[j]] for j in order[i, :min(k, n_local[i])]]
-                for i in range(u)]
+        idx = run_ix[order].astype(np.int32)
+        idx[np.arange(k)[None, :] >= np.minimum(k, n_local)[:, None]] = -1
+        return idx
+
+    def service_view(self, service_id: str,
+                     tasks: Sequence[object]) -> _ServiceArrays:
+        """Cached per-task attribute arrays (lat/lon, net, cloud/dedicated
+        flags, node ids) for the current replica set — the ClientPool's
+        window into task attributes without touching Task objects."""
+        return self._arrays(service_id, tasks)
 
     # --------------------------------------------------- kernel-backed path
 
@@ -250,10 +294,7 @@ class SelectionEngine:
         ``repro.kernels.geo_topk`` consumes (see its docstring for the
         meaning of the 20-bit codes and per-user shifts)."""
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
-        if isinstance(user_nets, str):
-            nets = np.full(len(users), net_index(user_nets), np.int64)
-        else:
-            nets = np.asarray([net_index(n) for n in user_nets], np.int64)
+        nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
         mask, free = arr.dynamic_state()
         run_ix = np.nonzero(mask)[0]
@@ -286,3 +327,59 @@ class SelectionEngine:
         return [[arr.tasks[run_ix[j]] for j, s in zip(row_i, row_s)
                  if np.isfinite(s) and s > -1e29]
                 for row_i, row_s in zip(idx, scores)]
+
+    def candidate_indices_kernel(self, service_id: str,
+                                 tasks: Sequence[object], user_locs,
+                                 user_nets, top_n: Optional[int] = None,
+                                 node_pad: int = 256,
+                                 interpret: bool = False) -> np.ndarray:
+        """``candidate_indices`` through the fused geo_topk op — the
+        ClientPool's high-throughput refresh path (fluid transport).
+
+        Node arrays are zero-padded to a multiple of ``node_pad`` with
+        ``node_valid = 0`` so churn (replica deaths/recoveries) doesn't
+        change jit shapes every tick; padding rows score ``NEG`` and are
+        mapped back to -1.  fp32 scoring — ranking may differ from the
+        float64 numpy path at exact-tie resolution, which the statistical
+        fluid transport tolerates.
+        """
+        from repro.kernels.geo_topk.ops import geo_topk, pack_inputs
+        k = top_n or self.top_n
+        users = np.asarray(user_locs, np.float64).reshape(-1, 2)
+        nets = parse_nets(user_nets, len(users))
+        arr = self._arrays(service_id, tasks)
+        mask, free = arr.dynamic_state()
+        run_ix = np.nonzero(mask)[0]
+        if run_ix.size == 0:
+            return np.full((len(users), k), -1, np.int32)
+        n = run_ix.size
+        n_pad = -(-n // node_pad) * node_pad
+
+        def pad(x, fill=0.0):
+            out = np.full(n_pad, fill, np.asarray(x).dtype)
+            out[:n] = x
+            return out
+
+        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
+                                       CODE_PRECISION)
+        valid = np.zeros(n_pad, np.float32)
+        valid[:n] = 1.0
+        packed = pack_inputs(
+            users[:, 0], users[:, 1], nets, u_codes,
+            pad(arr.lat[run_ix]), pad(arr.lon[run_ix]),
+            pad(free[run_ix]), pad(arr.net_idx[run_ix]),
+            pad(arr.codes[run_ix]), valid)
+        k_eff = min(k, n)
+        scores, idx = geo_topk(packed, k=k_eff,
+                               need=min(MIN_PROXIMITY_HITS, n),
+                               interpret=interpret)
+        scores = np.asarray(scores)
+        idx = np.asarray(idx)
+        run_pad = np.full(n_pad, -1, np.int64)
+        run_pad[:n] = run_ix
+        out = np.where(scores > -1e29, run_pad[idx], -1).astype(np.int32)
+        if k_eff < k:
+            out = np.concatenate(
+                [out, np.full((len(users), k - k_eff), -1, np.int32)],
+                axis=1)
+        return out

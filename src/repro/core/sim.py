@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -34,6 +35,7 @@ class Simulator:
         # doesn't grow without bound; benchmarks keep the default
         self.trace_enabled = trace_enabled
         self.trace: List[Dict[str, Any]] = []
+        self.truncated = False          # last run() hit max_events
 
     # ------------------------------------------------------------- events
 
@@ -50,7 +52,12 @@ class Simulator:
         ev.cancelled = True
 
     def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+        """Drain the heap up to ``until``.  Returns the event count and sets
+        ``self.truncated`` when the run stopped at ``max_events`` with work
+        still pending — a capped run must not be mistaken for a converged
+        one (benchmarks read the flag; a warning is also emitted)."""
         n = 0
+        self.truncated = False
         while self._heap and n < max_events:
             if until is not None and self._heap[0].time > until:
                 break
@@ -60,6 +67,16 @@ class Simulator:
             self.now = ev.time
             ev.fn(*ev.args)
             n += 1
+        if self._heap and n >= max_events and (
+                until is None or self._heap[0].time <= until):
+            self.truncated = True
+            self.log("run_truncated", events=n,
+                     pending=len(self._heap))
+            warnings.warn(
+                f"Simulator.run stopped at max_events={max_events} with "
+                f"{len(self._heap)} events pending (t={self.now:.1f}) — "
+                "results beyond this point are incomplete", RuntimeWarning,
+                stacklevel=2)
         if until is not None:
             self.now = max(self.now, until)
         return n
@@ -73,3 +90,12 @@ class Simulator:
     def jitter(self, base: float, frac: float = 0.1) -> float:
         """Multiplicative noise around ``base`` (deterministic via rng)."""
         return float(base * (1.0 + frac * self.rng.standard_normal()))
+
+    def jitter_batch(self, base: np.ndarray, frac: float = 0.1) -> np.ndarray:
+        """Vectorized ``jitter``: one draw per element, bit-identical to the
+        same number of sequential ``jitter`` calls (numpy Generator fills
+        arrays from the same bit stream), so batched senders stay on the
+        scalar path's RNG sequence."""
+        base = np.asarray(base, np.float64)
+        return base * (1.0 + frac * self.rng.standard_normal(base.size)
+                       .reshape(base.shape))

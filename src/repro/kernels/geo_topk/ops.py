@@ -35,10 +35,17 @@ class GeoTopKInputs(NamedTuple):
 
 def pack_inputs(user_lat, user_lon, user_net, user_code45,
                 node_lat, node_lon, node_free, node_net,
-                node_code45) -> GeoTopKInputs:
-    """45-bit engine codes + net indices -> kernel-ready arrays."""
+                node_code45, node_valid=None) -> GeoTopKInputs:
+    """45-bit engine codes + net indices -> kernel-ready arrays.
+
+    ``node_valid`` marks schedulable rows (1.0); pass zeros for padding
+    rows added to stabilize jit shapes — they score ``NEG`` and fall out
+    of the top-k.
+    """
     from repro.core.selection import AFFINITY_TABLE
     node_net = np.asarray(node_net, np.int64)
+    if node_valid is None:
+        node_valid = np.ones(len(node_lat), np.float32)
     return GeoTopKInputs(
         np.asarray(user_lat, np.float32),
         np.asarray(user_lon, np.float32),
@@ -49,7 +56,7 @@ def pack_inputs(user_lat, user_lon, user_net, user_code45,
         np.asarray(node_free, np.float32),
         AFFINITY_TABLE[node_net, :].T.astype(np.float32),
         (np.asarray(node_code45, np.int64) >> PREFIX_SHIFT).astype(np.int32),
-        np.ones(len(node_lat), np.float32),
+        np.asarray(node_valid, np.float32),
     )
 
 

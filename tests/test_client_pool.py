@@ -1,0 +1,345 @@
+"""ClientPool correctness: bit-for-bit scalar parity + policy units + the
+fluid scale path.
+
+The events-transport pool must reproduce U scalar ``Client`` objects
+EXACTLY — same latency samples, same EMA trajectories, same switch
+decisions, same active nodes — on the paper's Fig. 8/10 scenarios, because
+its batched RNG draws and replay orders are constructed to match the
+scalar event sequence.  Any drift here means the vectorized control plane
+changed semantics.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.common import WARM, emulation_system, realworld_system
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.client_pool import (MODE_ARMADA, MODE_CLOUD, MODE_DEDICATED,
+                                    ClientPool, ema_fold, failover_pick,
+                                    mode_filter, switch_decide)
+from repro.core.cluster import NodeSpec, Topology, campus_users
+
+# ---------------------------------------------------------------------------
+# scalar-parity harness
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(make_system, client_ids, mode, *, until, fail=(),
+              frame_interval=33.0, autoscale=False, **kw):
+    """Run the same seeded scenario twice — U scalar Clients vs one
+    events-transport ClientPool — and return both."""
+    sys_s = make_system()
+    sys_s.am.autoscale_enabled = autoscale
+    clients = [sys_s.make_client(c, "detect", mode=mode,
+                                 frame_interval_ms=frame_interval, **kw)
+               for c in client_ids]
+    for c in clients:
+        sys_s.sim.at(WARM, c.start)
+    for node, t in fail:
+        sys_s.fail_node(node, t)
+    sys_s.sim.run(until=until)
+
+    sys_p = make_system()
+    sys_p.am.autoscale_enabled = autoscale
+    pool = sys_p.make_client_pool("detect", client_ids=list(client_ids),
+                                  mode=mode, frame_interval_ms=frame_interval,
+                                  **kw)
+    sys_p.sim.at(WARM, pool.start)
+    for node, t in fail:
+        sys_p.fail_node(node, t)
+    sys_p.sim.run(until=until)
+    return clients, pool, sys_s, sys_p
+
+
+def _assert_parity(clients, pool):
+    for i, c in enumerate(clients):
+        want = [(s.t, s.ms, s.node, s.is_probe) for s in c.samples]
+        got = [(s.t, s.ms, s.node, s.is_probe)
+               for s in pool.samples_of(i)]
+        assert want == got, f"user {i}: samples diverge"
+        assert c.ema == pool.ema_of(i), f"user {i}: EMA diverges"
+        assert c.switches == pool.switches_of(i), \
+            f"user {i}: switches diverge"
+        want_active = c.active.captain.node_id if c.active else None
+        assert want_active == pool.active_node(i), f"user {i}: active"
+
+
+@pytest.mark.parametrize("mode", ["armada", "geo", "dedicated", "cloud",
+                                  "reconnect", "edge2cloud"])
+def test_pool_parity_steady_state_all_modes(mode):
+    """Every baseline mode, no failures: bit-for-bit identical."""
+    clients, pool, *_ = _run_pair(
+        lambda: realworld_system(seed=6, autoscale=False),
+        ["C1", "C2", "C3"], mode, until=WARM + 15_000.0)
+    _assert_parity(clients, pool)
+
+
+def test_pool_parity_fig8_emulation_node_sets():
+    """Fig 8 scenario: emulation cities, armada mode."""
+    clients, pool, *_ = _run_pair(
+        lambda: emulation_system(seed=4),
+        ["User_A", "User_B", "User_C"], "armada", until=WARM + 20_000.0)
+    _assert_parity(clients, pool)
+    assert any(len(pool.samples_of(i)) > 50 for i in range(3))
+
+
+def test_pool_parity_fig10a_failover_armada_vs_reconnect():
+    """Fig 10a: active node dies; armada flips instantly, reconnect
+    stalls — pool reproduces both trajectories exactly."""
+    for mode in ("armada", "reconnect"):
+        clients, pool, *_ = _run_pair(
+            lambda: realworld_system(seed=7, autoscale=False),
+            ["C1", "C2", "C3"], mode, until=WARM + 20_000.0,
+            fail=[("V1", WARM + 8_000.0), ("V2", WARM + 9_000.0)])
+        _assert_parity(clients, pool)
+
+
+def test_pool_parity_fig10b_edge2cloud_churn():
+    """Fig 10b: nodes die one by one; edge2cloud baseline degrades to the
+    cloud replica."""
+    clients, pool, *_ = _run_pair(
+        lambda: realworld_system(seed=7, autoscale=False),
+        ["C1", "C2", "C3"], "edge2cloud", until=WARM + 20_000.0,
+        fail=[("V1", WARM + 8_000.0), ("V2", WARM + 8_500.0),
+              ("V3", WARM + 9_000.0), ("D6", WARM + 9_500.0)])
+    _assert_parity(clients, pool)
+    assert any(pool.active_node(i) == "Cloud" for i in range(3))
+
+
+def test_pool_parity_total_candidate_loss():
+    """Kill EVERY edge node: armada users re-enter initial selection (and
+    the seed's extra-probe-chain quirk) — still bit-for-bit."""
+    fails = [(n, WARM + 8_000.0 + 200.0 * i) for i, n in
+             enumerate(("V1", "V2", "V3", "V4", "V5", "D6"))]
+    clients, pool, *_ = _run_pair(
+        lambda: realworld_system(seed=7, autoscale=False),
+        ["C1", "C2", "C3"], "armada", until=WARM + 20_000.0, fail=fails)
+    _assert_parity(clients, pool)
+
+
+def test_pool_parity_with_autoscaler_demand():
+    """Autoscaler reads pool populations through ``active_locs`` — the
+    batched capacity probe must see the same demand rows as U scalar
+    clients and spawn identically."""
+    def make():
+        sys_ = realworld_system(seed=3, autoscale=True)
+        campus_users(sys_.topo, 8, seed=3)
+        return sys_
+    ids = [f"U{i}" for i in range(8)]
+    clients, pool, sys_s, sys_p = _run_pair(
+        make, ids, "armada", until=WARM + 20_000.0, frame_interval=10.0)
+    _assert_parity(clients, pool)
+    assert sys_s.am.scale_events == sys_p.am.scale_events
+
+
+# ---------------------------------------------------------------------------
+# pure policy functions
+# ---------------------------------------------------------------------------
+
+def test_switch_decide_two_round_confirmation():
+    cand_task = np.array([[0, 1, 2]])
+    cand_node = np.array([[10, 11, 12]])
+    active = np.array([0])
+    pend = np.array([-1])
+    # candidate 1 beats active by > margin: round 1 nominates, no switch
+    ema = np.array([[100.0, 50.0, np.nan]])
+    confirm, slot, pend = switch_decide(
+        cand_task, ema, cand_node, active, np.array([100.0]), pend, 0.95)
+    assert not confirm[0] and pend[0] == 11
+    # round 2 confirms
+    confirm, slot, pend = switch_decide(
+        cand_task, ema, cand_node, active, np.array([100.0]), pend, 0.95)
+    assert confirm[0] and slot[0] == 1 and pend[0] == -1
+    # a margin miss clears pending
+    ema2 = np.array([[100.0, 97.0, np.nan]])
+    _, _, pend = switch_decide(
+        cand_task, ema2, cand_node, active, np.array([100.0]),
+        np.array([11]), 0.95)
+    assert pend[0] == -1
+    # ineligible rows (no EMA data) leave pending untouched
+    _, _, pend = switch_decide(
+        cand_task, np.full((1, 3), np.nan), cand_node, active,
+        np.array([np.nan]), np.array([11]), 0.95)
+    assert pend[0] == 11
+
+
+def test_mode_filter_semantics():
+    # tasks: 0 volunteer, 1 dedicated, 2 cloud
+    cloud = np.array([False, False, True])
+    ded = np.array([False, True, True])
+    lat = np.array([45.0, 45.2, 39.0])
+    lon = np.array([-93.0, -93.2, -77.0])
+    wide = np.array([[0, 1, 2]], np.int32)
+    ulat, ulon = np.array([45.19]), np.array([-93.19])
+
+    out = mode_filter(wide, np.array([MODE_DEDICATED], np.int8), 3,
+                      cloud, ded, lat, lon, ulat, ulon)
+    assert out.tolist() == [[1, -1, -1]]      # dedicated, non-cloud only
+    out = mode_filter(wide, np.array([MODE_CLOUD], np.int8), 3,
+                      cloud, ded, lat, lon, ulat, ulon)
+    assert out.tolist() == [[2, -1, -1]]
+    # dedicated fallback: no dedicated edge nodes -> whole wide list
+    out = mode_filter(np.array([[0, 2]], np.int32),
+                      np.array([MODE_DEDICATED], np.int8), 2,
+                      cloud, np.array([False, False, True]), lat, lon,
+                      ulat, ulon)
+    assert out.tolist() == [[0, 2]]
+    # geo: nearest node only, armada: rank order trimmed
+    out = mode_filter(wide, np.array([1], np.int8), 2,   # MODE_GEO
+                      cloud, ded, lat, lon, ulat, ulon)
+    assert out.tolist() == [[1, -1]]
+    out = mode_filter(wide, np.array([MODE_ARMADA], np.int8), 2,
+                      cloud, ded, lat, lon, ulat, ulon)
+    assert out.tolist() == [[0, 1]]
+
+
+def test_failover_pick_prefers_known_ema():
+    cand = np.array([[3, 4, 5], [3, 4, -1], [-1, -1, -1]])
+    ema = np.array([[np.nan, 20.0, 10.0],
+                    [np.nan, np.nan, np.nan],
+                    [np.nan, np.nan, np.nan]])
+    slot = failover_pick(cand, ema)
+    assert slot.tolist() == [2, 0, -1]
+
+
+def test_policy_functions_match_under_jax_numpy():
+    """The per-tick EMA/switch update is xp-generic: jnp results must
+    equal numpy's (the hook for fusing into the geo_topk scoring pass)."""
+    jnp = pytest.importorskip("jax.numpy")
+    rng = np.random.default_rng(0)
+    u, c = 64, 3
+    cand_task = rng.integers(-1, 10, (u, c))
+    cand_node = rng.integers(0, 6, (u, c))
+    cand_ema = np.where(rng.random((u, c)) < 0.3, np.nan,
+                        rng.uniform(10, 100, (u, c)))
+    active = rng.integers(-1, 10, u)
+    active_ema = np.where(rng.random(u) < 0.3, np.nan,
+                          rng.uniform(10, 100, u))
+    pending = rng.integers(-1, 6, u)
+    got_np = switch_decide(cand_task, cand_ema, cand_node, active,
+                           active_ema, pending, 0.95, xp=np)
+    got_j = switch_decide(jnp.asarray(cand_task), jnp.asarray(cand_ema),
+                          jnp.asarray(cand_node), jnp.asarray(active),
+                          jnp.asarray(active_ema), jnp.asarray(pending),
+                          0.95, xp=jnp)
+    for a, b in zip(got_np, got_j):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    prev = np.where(rng.random(u) < 0.5, np.nan, rng.uniform(10, 100, u))
+    ms = rng.uniform(5, 200, u)
+    np.testing.assert_allclose(
+        ema_fold(prev, ms, 0.4),
+        np.asarray(ema_fold(jnp.asarray(prev), jnp.asarray(ms), 0.4,
+                            xp=jnp)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fluid transport (the 100k scale path, exercised small in tier-1)
+# ---------------------------------------------------------------------------
+
+def _fluid_system(n_nodes=40, seed=0):
+    rng = np.random.default_rng(seed)
+    nodes = {f"N{i}": NodeSpec(
+        f"N{i}", (44.97 + float(rng.uniform(-.5, .5)),
+                  -93.22 + float(rng.uniform(-.5, .5))),
+        proc_ms=float(rng.uniform(10, 30)), slots=int(rng.integers(2, 9)))
+        for i in range(n_nodes)}
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False)
+    sys_.am.services["detect"] = ServiceSpec("detect", detection_image())
+    sys_.am.tasks["detect"] = []
+    sys_.am.users["detect"] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"detect/t{i}", "detect", captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks["detect"].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def test_fluid_pool_end_to_end_with_failover():
+    sys_ = _fluid_system()
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 400),
+                     -93.22 + rng.uniform(-.5, .5, 400)], axis=1)
+    pool = sys_.make_client_pool("detect", locs=locs, transport="fluid",
+                                 frame_interval_ms=500.0)
+    sys_.sim.at(0.0, pool.start)
+    sys_.sim.run(until=4_100.0)
+    from collections import Counter
+    cnt = Counter(pool._node_ids[pool.task_node[int(a)]]
+                  for a in pool.active if a >= 0)
+    victim, n_aff = cnt.most_common(1)[0]
+    sys_.fail_node(victim, 4_200.0)
+    sys_.sim.run(until=12_000.0)
+    assert pool.ticks_run >= 5
+    assert pool.requests_sent > 0
+    assert np.isfinite(pool.mean_latency())
+    assert pool.failovers >= n_aff          # everyone left the dead node
+    view = pool._last_view
+    assert all(view.tasks[int(a)].captain.alive
+               for a in pool.active if a >= 0)
+
+
+def test_bench_client_scale_smoke_profile():
+    """The registered benchmark's --smoke profile runs in tier-1, so the
+    population-scale path is exercised on every test run."""
+    from benchmarks.bench_client_scale import run
+    rows = run(smoke=True)
+    assert rows and rows[0][1] > 0
+    derived = rows[0][2]
+    assert "req_per_s=" in derived and "failovers=" in derived
+
+
+@pytest.mark.slow
+def test_bench_client_scale_mid_sweep():
+    from benchmarks.bench_client_scale import _bench_case
+    rows = _bench_case(10_000, 100, 6)
+    assert rows and rows[0][1] > 0
+
+
+def test_fluid_rejects_unmodelable_frame_intervals():
+    sys_ = _fluid_system(n_nodes=4)
+    for bad in (0.0, 5000.0):               # saturating train / floors to 0
+        with pytest.raises(ValueError, match="frame_interval_ms"):
+            sys_.make_client_pool("detect", locs=np.zeros((2, 2)),
+                                  transport="fluid",
+                                  frame_interval_ms=bad,
+                                  probe_period_ms=2000.0)
+
+
+def test_captain_fluid_capacity_not_double_counted():
+    """Overlapping fluid batches (several pools, one node) must not each
+    credit the node a full window of drain capacity."""
+    from repro.core.captain import Captain
+    from repro.core.sim import Simulator
+    sim = Simulator(seed=0)
+    spec = NodeSpec("N", (45.0, -93.0), proc_ms=20.0, slots=1)
+    cap = Captain(sim, Topology({"N": spec}, {}), spec)
+    cap.arrive_batch(100, 1.0, 2000.0, 0.0)    # exactly one window of work
+    cap.arrive_batch(100, 1.0, 2000.0, 0.0)    # second pool, same window
+    sim.now = 2000.0
+    assert abs(cap._fluid_requests() - 100.0) < 1e-6   # one window queued
+    sim.now = 6000.0
+    assert cap._fluid_requests() == 0.0                # idle drain works
+
+
+# ---------------------------------------------------------------------------
+# simulator truncation signal (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_sim_run_reports_truncation():
+    from repro.core.sim import Simulator
+    sim = Simulator(seed=0)
+
+    def chain():
+        sim.after(1.0, chain)
+    sim.after(0.0, chain)
+    with pytest.warns(RuntimeWarning, match="max_events"):
+        n = sim.run(until=1e9, max_events=50)
+    assert n == 50 and sim.truncated
+    sim2 = Simulator(seed=0)
+    sim2.after(1.0, lambda: None)
+    sim2.run(until=10.0)
+    assert not sim2.truncated

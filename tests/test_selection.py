@@ -163,6 +163,22 @@ def test_kernel_path_matches_numpy_engine():
         assert [t.task_id for t in g] == [t.task_id for t in w]
 
 
+def test_kernel_index_path_matches_numpy_indices():
+    """`candidate_indices_kernel` (padded, fp32, index-space) ranks like
+    the numpy index path — the ClientPool fluid-refresh contract."""
+    sys_ = _deployed_system(real_world)
+    users = campus_users(sys_.topo, 20, seed=18)
+    locs = [sys_.topo.nodes[u].loc for u in users]
+    nets = [sys_.topo.nodes[u].net_type for u in users]
+    eng = sys_.am.engine
+    tasks = sys_.am.tasks["svc"]
+    want = eng.candidate_indices("svc", tasks, locs, nets)
+    got = eng.candidate_indices_kernel("svc", tasks, locs, nets,
+                                       node_pad=8)
+    assert got.shape == want.shape          # both honor the (U, k) contract
+    np.testing.assert_array_equal(got, want)
+
+
 def test_empty_and_all_dead_services():
     sys_ = _deployed_system(real_world)
     eng = SelectionEngine()
