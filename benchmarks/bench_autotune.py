@@ -1,0 +1,67 @@
+"""geo_topk kernel autotune sweep: (block_u, node_tile) per backend.
+
+Times every VMEM-admissible layout of the fused selection kernel —
+untiled (all nodes resident) vs node-tiled (streamed with a running
+top-k merge) — on synthetic metro-area queries, and caches the winner in
+``repro.kernels.geo_topk.tune`` so subsequent ``ops.geo_topk`` calls on
+this backend pick it up.  Winners are also persisted to
+``artifacts/autotune/geo_topk.json``.
+
+On a TPU the timings rank real kernel layouts; elsewhere the kernels run
+through the Pallas interpreter (``interpret=True``), so the sweep is
+functional end-to-end — that is the ``--smoke`` profile tier-1 runs
+(tiny shapes, two configs) to keep the autotuner exercised without a
+TPU.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+
+from repro.kernels.geo_topk import tune
+
+CACHE_PATH = pathlib.Path(__file__).resolve().parents[1] \
+    / "artifacts" / "autotune" / "geo_topk.json"
+
+# (U, N, k) shape buckets of interest: the pool refresh (wide U, metro
+# node counts) and the past-the-VMEM-wall regime the tiled kernel opens
+FULL_SWEEP = [(8192, 4096, 8), (8192, 32768, 8), (4096, 131072, 8)]
+SMOKE_SWEEP = [(128, 512, 4)]
+SMOKE_CONFIGS = [(32, None), (32, 256)]
+
+
+def run(smoke: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    # interpreter timings only rank Python-level work, and the full sweep
+    # through it would take hours — off-TPU the full profile degrades to
+    # the smoke shapes (still functional end-to-end)
+    sweep = SMOKE_SWEEP if (smoke or not on_tpu) else FULL_SWEEP
+    smoke = smoke or not on_tpu
+    rows = []
+    for u, n, k in sweep:
+        res = tune.autotune(
+            u, n, k, interpret=interpret,
+            configs=SMOKE_CONFIGS if smoke else None,
+            repeats=1 if smoke else 3)
+        for (bu, nt), ms in sorted(res["timings_ms"].items(),
+                                   key=lambda kv: kv[1]):
+            tag = f"autotune/geo_topk/u{u}_n{n}_k{k}/bu{bu}_nt{nt}"
+            rows.append((tag, ms,
+                         f"backend={jax.default_backend()};"
+                         f"interpret={interpret};"
+                         f"winner={res['best'] == (bu, nt)}"))
+    tune.save_cache(CACHE_PATH)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep through the interpreter (tier-1)")
+    args = ap.parse_args()
+    print("name,ms_per_call,derived")
+    for name, ms, derived in run(smoke=args.smoke):
+        print(f"{name},{ms:.2f},{derived}")

@@ -3,15 +3,26 @@
 ``bench_selection_scale`` showed the selection control plane handles
 10k×1k batches; this bench closes the loop — the whole client data plane
 (periodic probing, per-candidate EMAs, two-round switches, failover under
-churn) runs population-scale through ``ClientPool``'s fluid transport:
-one ``candidate_indices`` call and one vectorized EMA/switch update per
-probe tick, per-node fluid queueing via ``Captain.arrive_batch``.
+churn) runs population-scale through ``ClientPool``'s fluid transport.
+Three tick modes are swept:
+
+* ``numpy`` — host tick, float64 numpy selection + policy update;
+* ``geo_topk`` — host tick, fused fp32 scoring on device, policy on host;
+* ``device`` — the fused device-resident tick (``repro.core.fused_tick``):
+  scoring → top-k → EMA fold → switch → failover as ONE jitted program,
+  state donated across ticks.
+
+Each row's ``derived`` carries a per-phase wall-time breakdown
+(``selection`` / ``policy`` / ``transport`` on host ticks,
+``fused_tick`` / ``transport`` on the device tick) so fusion wins are
+attributable in ``artifacts/bench/results.json``; the full sweep appends
+speedup rows for the headline 100k × 1k profile (device vs both host
+ticks — the ≥3× target from ROADMAP's "Pool jnp tick fusion" item is
+measured against the numpy tick).
 
 Default sweep ends at the headline 100k users × 1k nodes run (probing +
 frames + volunteer churn); ``run(smoke=True)`` (or ``--smoke`` on the
-CLI) is a seconds-scale profile exercised by tier-1 tests.  Reported
-``derived`` fields: wall ms per tick, simulated requests/s of wall time,
-and failovers observed under churn.
+CLI) is a seconds-scale profile exercised by tier-1 tests.
 """
 from __future__ import annotations
 
@@ -66,16 +77,20 @@ def _system(n_nodes: int, seed: int) -> ArmadaSystem:
 def _bench_case(n_users: int, n_nodes: int, n_ticks: int,
                 seed: int = 0, probe_period: float = 2000.0,
                 frame_interval: float = 1000.0,
-                selection_backend: str = "geo_topk"):
+                mode: str = "geo_topk"):
+    """``mode``: ``numpy``/``geo_topk`` (host tick, backend named) or
+    ``device`` (fused device-resident tick)."""
     sys_ = _system(n_nodes, seed)
     rng = np.random.default_rng(seed + 1)
     locs = np.stack(
         [_METRO[0] + rng.uniform(-0.5, 0.5, n_users),
          _METRO[1] + rng.uniform(-0.5, 0.5, n_users)], axis=1)
+    tick = "device" if mode == "device" else "host"
+    backend = "geo_topk" if mode == "device" else mode
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, nets="wifi", transport="fluid",
         probe_period_ms=probe_period, frame_interval_ms=frame_interval,
-        selection_backend=selection_backend, record_samples=False)
+        selection_backend=backend, tick=tick, record_samples=False)
     sys_.sim.at(0.0, pool.start)
     # volunteer churn: non-dedicated nodes fail/recover throughout the run
     churn = ChurnModel(sys_.sim, sys_.captains,
@@ -92,28 +107,44 @@ def _bench_case(n_users: int, n_nodes: int, n_ticks: int,
     per_tick = wall_ms / max(pool.ticks_run, 1)
     req_per_s = pool.requests_sent / (wall_ms / 1e3)
     leaves = sum(1 for e in churn.events if e["kind"] == "leave")
-    tag = f"client_scale/u{n_users}_n{n_nodes}/{selection_backend}"
+    phases = ";".join(
+        f"phase_{k}_ms={v / max(pool.ticks_run, 1):.1f}"
+        for k, v in sorted(pool.phase_ms.items()))
+    tag = f"client_scale/u{n_users}_n{n_nodes}/{mode}"
     return [(tag, per_tick,
              f"ticks={pool.ticks_run};reqs={pool.requests_sent};"
              f"req_per_s={req_per_s:.0f};node_failures={leaves};"
              f"failovers={pool.failovers};"
-             f"mean_frame_ms={pool.mean_latency():.1f}")]
+             f"mean_frame_ms={pool.mean_latency():.1f};{phases}")]
 
 
 def run(smoke: bool = False):
     if smoke:
-        sweep = [(2_000, 100, 5, "numpy")]
+        sweep = [(2_000, 100, 5, "numpy"),
+                 (2_000, 100, 5, "device")]
     else:
         # numpy wins at small N (no jit round-trip); the fused geo_topk
-        # oracle takes over once U x N scoring dominates the tick
+        # oracle takes over once U x N scoring dominates the tick, and
+        # the device-resident tick removes the remaining host round-trips
         sweep = [(10_000, 100, 10, "numpy"),
                  (10_000, 1_000, 10, "numpy"),
                  (10_000, 1_000, 10, "geo_topk"),
-                 (100_000, 1_000, 15, "geo_topk")]
+                 (100_000, 1_000, 15, "numpy"),
+                 (100_000, 1_000, 15, "geo_topk"),
+                 (100_000, 1_000, 15, "device")]
     rows = []
-    for n_users, n_nodes, n_ticks, backend in sweep:
-        rows.extend(_bench_case(n_users, n_nodes, n_ticks,
-                                selection_backend=backend))
+    for n_users, n_nodes, n_ticks, mode in sweep:
+        rows.extend(_bench_case(n_users, n_nodes, n_ticks, mode=mode))
+    if not smoke:
+        # headline speedups: fused device tick vs both host ticks
+        per_tick = {r[0].rsplit("/", 1)[1]: r[1] for r in rows
+                    if r[0].startswith("client_scale/u100000_n1000/")}
+        for base in ("numpy", "geo_topk"):
+            if base in per_tick and "device" in per_tick:
+                ratio = per_tick[base] / per_tick["device"]
+                rows.append((
+                    f"client_scale/u100000_n1000/speedup_device_vs_{base}",
+                    float("nan"), f"speedup={ratio:.2f}x"))
     return rows
 
 

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_fault_tolerance",    # Fig 10
     "benchmarks.bench_storage",            # Table 7 + Fig 11-13
     "benchmarks.bench_kernels",            # kernel oracles + pallas equiv
+    "benchmarks.bench_autotune",           # geo_topk (block_u, node_tile)
     "benchmarks.bench_roofline",           # §Roofline table
 ]
 

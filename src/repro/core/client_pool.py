@@ -39,6 +39,15 @@ Two data-plane transports:
   EMAs are folded in vectorized arrival-order rounds.  Statistically
   faithful (not bit-for-bit) and scales to 100k users × 1k nodes.
 
+The fluid transport runs its probe tick in one of two modes:
+``tick="host"`` (numpy policy update, optionally geo_topk-backed
+selection) or ``tick="device"`` — the whole tick as one jitted device
+program over resident SoA state (``repro.core.fused_tick``): scoring →
+candidate top-k → EMA fold → switch decision → failover pick with no
+numpy round-trips.  The device tick reproduces the host tick's decision
+stream exactly (same fp32 scoring inputs, same xp-generic policy
+functions) and is pinned against it in tests/test_fused_tick.py.
+
 Scalar-parity notes (events transport) — the pool intentionally mirrors
 seed-code quirks so equivalence is exact: a user whose *initial*
 candidate query is empty retries at 500 ms but never activates (no frame
@@ -48,6 +57,7 @@ notifications replay in warm-connection insertion order.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -280,12 +290,21 @@ class _EmaTable:
         return out
 
 
+# synthetic base-RTT model constants — the fused device tick
+# (core/fused_tick.py) recomputes this model on device from these same
+# values, so edit them here, not there
+RTT_LAST_MILE_MS = 6.0
+RTT_MS_PER_KM = 0.05
+RTT_CLOUD_PENALTY_MS = 55.0
+
+
 def default_rtt_model(user_lat, user_lon, node_lat, node_lon, node_cloud):
     """Synthetic base RTT for users without explicit Topology entries:
     last-mile floor + propagation by great-circle distance, plus a transit
     penalty into the cloud."""
     d = geohash.distance_km_batch(user_lat, user_lon, node_lat, node_lon)
-    return 6.0 + 0.05 * d + np.where(node_cloud, 55.0, 0.0)
+    return RTT_LAST_MILE_MS + RTT_MS_PER_KM * d \
+        + np.where(node_cloud, RTT_CLOUD_PENALTY_MS, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +332,7 @@ class ClientPool:
                  switch_margin: float = 0.95, workload_scale: float = 1.0,
                  transport: str = "events",
                  selection_backend: str = "numpy",
+                 tick: str = "host",
                  rtt_model: Callable = default_rtt_model,
                  record_samples: bool = True):
         if transport not in ("events", "fluid"):
@@ -323,6 +343,27 @@ class ClientPool:
         if selection_backend == "geo_topk" and transport == "events":
             raise ValueError("geo_topk backend is fp32 — only the "
                              "statistical fluid transport may use it")
+        if tick not in ("host", "device"):
+            raise ValueError(f"unknown tick {tick!r}")
+        if tick == "device":
+            # the fused device tick covers the paper's armada policy on
+            # synthetic (locs-based) populations; baselines and topology
+            # endpoints stay on the host tick
+            if transport != "fluid":
+                raise ValueError("tick='device' needs transport='fluid'")
+            if selection_backend != "geo_topk":
+                raise ValueError("tick='device' scores through geo_topk — "
+                                 "pass selection_backend='geo_topk'")
+            if client_ids is not None:
+                raise ValueError("tick='device' needs locs-based users "
+                                 "(RTTs from rtt_model, not the topology)")
+            if rtt_model is not default_rtt_model:
+                raise ValueError("tick='device' computes default_rtt_model "
+                                 "on device; custom models need tick='host'")
+            if mode != "armada" and (isinstance(mode, str) or
+                                     any(m != "armada" for m in mode)):
+                raise ValueError("tick='device' fuses the armada policy "
+                                 "only; baselines run tick='host'")
         if transport == "fluid" and not \
                 0 < frame_interval_ms <= probe_period_ms:
             # scalar semantics for interval 0 are back-to-back saturating
@@ -338,6 +379,8 @@ class ClientPool:
         self.service_id = service_id
         self.transport = transport
         self.selection_backend = selection_backend
+        self.tick_mode = tick
+        self._dev = None                    # FusedTickDriver (device tick)
         self.frame_interval = frame_interval_ms
         self.probe_period = probe_period_ms
         self.alpha = ema_alpha
@@ -411,8 +454,17 @@ class ClientPool:
         self.ticks_run = 0
         self.failovers = 0
         self._fluid_buf: List[Tuple] = []       # (users, nodes, ms, rounds)
+        # per-phase wall time (ms) accumulated across ticks, so benchmark
+        # runs can attribute where a tick goes (selection / policy /
+        # transport on the host tick; fused_tick / transport on device)
+        self.phase_ms: Dict[str, float] = {}
 
     # ------------------------------------------------------------- control
+
+    def phase_add(self, name: str, t0: float) -> None:
+        """Accumulate wall time since ``t0`` under phase ``name``."""
+        self.phase_ms[name] = self.phase_ms.get(name, 0.0) \
+            + (time.perf_counter() - t0) * 1e3
 
     def start(self):
         """Start every user (one simulator event; schedule with
@@ -425,12 +477,25 @@ class ClientPool:
             self._dispatch(plan)
             if self.ticking.any():
                 self.sim.after(self.probe_period, self._probe_tick)
+        elif self.tick_mode == "device":
+            self._start_device(sel)
         else:
             self._start_fluid(sel)
+
+    def _start_device(self, sel: np.ndarray):
+        """Host-side initial selection (same code path as the host tick),
+        then hand the probe-tick chain to the fused device driver."""
+        from repro.core.fused_tick import FusedTickDriver
+        self._refresh(sel, initial=True)
+        self._dev = FusedTickDriver(self)
+        self._dev.init_state()
+        self._dev.tick()
 
     def stop(self, users: Optional[Sequence[int]] = None):
         if self.transport == "fluid":
             self._flush_fluid()             # don't drop the open window
+            if self._dev is not None:
+                self._dev.flush()
         if users is None:
             self.running[:] = False
         else:
@@ -448,6 +513,8 @@ class ClientPool:
                     cap = self._node_caps[nix]
                     if cap is not None:
                         cap.connections.discard(self)
+        if self._dev is not None:
+            self._dev.set_running(self.running)
         if not self.running.any():
             self.am.user_leave(self.service_id, self)
             for nix, d in self._conn.items():
@@ -616,7 +683,11 @@ class ClientPool:
         """Fluid transport: join the break-notification list of every
         captain hosting a candidate (affected users are computed from the
         candidate matrix at break time — no per-user bookkeeping)."""
-        for nix in np.unique(self.task_node[new[new >= 0]]):
+        self.watch_node_indices(np.unique(self.task_node[new[new >= 0]]))
+
+    def watch_node_indices(self, nixes):
+        """Watch captains by node index (fused-tick driver entry point)."""
+        for nix in nixes:
             nix = int(nix)
             if nix >= 0 and nix not in self._watched:
                 cap = self._node_caps[nix]
@@ -768,6 +839,13 @@ class ClientPool:
         nix = self._node_of.get(node_id)
         if nix is None:
             return
+        if self._dev is not None:
+            # device tick: queue the break; the fused program replays the
+            # queue in arrival order at the next tick (or flush), which
+            # is when the fluid data plane next acts anyway
+            self._watched.discard(nix)
+            self._dev.on_break(nix)
+            return
         if self.transport == "events":
             order = [u for u in self._conn.pop(nix, {}) if self.running[u]]
         else:
@@ -896,13 +974,21 @@ class ClientPool:
 
     def _tick_fluid(self, first: bool = False):
         now = self.sim.now
+        t0 = time.perf_counter()
         self._flush_fluid()
+        self.phase_add("policy", t0)
         sel = np.nonzero(self.running & self.ticking)[0]
         if sel.size:
             if not first:
+                t0 = time.perf_counter()
                 self._refresh(sel)
+                self.phase_add("selection", t0)
+            t0 = time.perf_counter()
             self._switch_step(sel)
+            self.phase_add("policy", t0)
+            t0 = time.perf_counter()
             self._traffic_fluid(sel, now)
+            self.phase_add("transport", t0)
             self.ticks_run += 1
         if (self.running & self.ticking).any():
             self.sim.after(self.probe_period, self._tick_fluid)
@@ -1010,6 +1096,8 @@ class ClientPool:
         """Zero the aggregate frame stats — call at a measurement-window
         start on aggregate-only (fluid / record_samples=False) pools."""
         self._flush_fluid()                 # open window belongs to the past
+        if self._dev is not None:
+            self._dev.reset_aggregates()
         self.frame_count[:] = 0
         self.frame_sum[:] = 0.0
 
@@ -1025,6 +1113,10 @@ class ClientPool:
         return self._last_view.node_ids[t] if self._last_view else None
 
     def ema_of(self, u: int) -> Dict[str, float]:
+        if self._dev is not None:
+            return self._dev.ema_dict(u)
+        if self.transport == "fluid":
+            self._flush_fluid()         # match device-tick flush semantics
         return self.ema_tab.as_dict(u, self._node_ids)
 
     def samples_of(self, u: int) -> List[LatencySample]:
@@ -1043,6 +1135,8 @@ class ClientPool:
                      since: float = 0.0) -> float:
         if self.transport == "fluid" or not self.record_samples:
             self._flush_fluid()             # include the open window
+            if self._dev is not None:
+                self._dev.sync_aggregates()
             if since > 0.0:
                 raise ValueError(
                     "mean_latency(since=...) needs per-sample records — "

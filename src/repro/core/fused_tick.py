@@ -1,0 +1,656 @@
+"""Device-resident fused probe tick for the fluid ``ClientPool``.
+
+PR 2 vectorized the client control plane but each probe tick still
+round-tripped device↔host: geo_topk scoring on device, then numpy for
+the EMA fold, switch decision and failover pick.  This module runs the
+whole tick as ONE jitted program over the pool's SoA state:
+
+    connection breaks (sequential, host arrival order)
+      → EMA fold of the previous traffic window
+      → scoring + candidate top-k (same fp32 math as geo_topk)
+      → two-round ``switch_decide``
+      → next-window traffic masks
+
+``FusedTickState`` keeps every pool array resident on device across
+ticks (buffers are donated on accelerators, so the state updates in
+place); per tick only small dynamic vectors cross host→device (free
+fractions, validity masks, queued node deaths, jitter draws) and only
+the per-user decisions the transport needs come back (candidates,
+active/pending, switch confirmations, traffic masks).  Shapes are
+jit-stable under churn: node/task arrays ride the engine's
+``node_pad``-padded layout (``selection.PackedStatic``), the EMA table
+is the host ``_EmaTable`` vectorized as fixed-width per-user slots
+(see ``FusedTickState``), and breaks are processed through a
+fixed-width queue with a dynamic trip count — ``COMPILE_COUNTS`` tracks
+trace events so tests can pin "compiles exactly once per program".
+
+Equivalence with the host tick (``ClientPool`` with ``tick="host"``,
+``selection_backend="geo_topk"``) is exact in the decision stream —
+same candidates, actives, pending nominations, switches and failovers —
+because scoring consumes bit-identical fp32 inputs and the policy
+functions are the same xp-generic code (``ema_fold``/``switch_decide``/
+``failover_pick`` with ``xp=jnp``); EMA values and latencies agree to
+fp32 rounding (the host folds in float64).  ``tests/test_fused_tick.py``
+pins both on the paper's Fig. 8/10 scenarios.  Two deliberate
+approximations, both outside the pinned scenarios: a user who loses
+every candidate re-enters initial selection at the next tick boundary
+(the host retries ~500 ms earlier), and baseline modes other than
+``armada`` are not fused (they stay on the host tick).
+
+The driver at the bottom owns the host glue that cannot leave the
+simulator: ``Captain.arrive_batch`` fluid admission, RNG jitter draws in
+the exact scalar order (``Simulator.jitter_batch`` parity), switch/break
+bookkeeping, and metric mirrors.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client_pool import (RTT_CLOUD_PENALTY_MS, RTT_LAST_MILE_MS,
+                                    RTT_MS_PER_KM, ema_fold, failover_pick,
+                                    switch_decide)
+from repro.core.selection import MIN_PROXIMITY_HITS
+from repro.kernels.geo_topk.ref import haversine_km, score_matrix
+
+# trace-time counters: a body runs once per compile, so tests can assert
+# shape stability under churn (no silent recompiles)
+COMPILE_COUNTS: collections.Counter = collections.Counter()
+
+DEATH_QUEUE_MAX = 128          # breaks processed per tick (fixed jit shape)
+
+# buffer donation updates the state in place on accelerators; XLA:CPU
+# does not implement it and would warn on every call
+_DONATE = (0,) if jax.default_backend() != "cpu" else ()
+
+
+class FusedTickState(NamedTuple):
+    """Pool SoA state resident on device across ticks.
+
+    The EMA table is the host ``_EmaTable`` vectorized, not densified: a
+    fixed-width per-user slot map ``ema_nodes`` (node index, -1 free) /
+    ``ema_vals`` (NaN = no sample; pops NaN the value but keep the slot,
+    exactly like the host dict-pop semantics).  Memory stays
+    O(U × slots), independent of fleet size — a dense (U, N) table would
+    cap the very node counts the tiled kernel just unlocked.
+    ``ema_overflow`` latches when a user outgrows the slot width (the
+    host table would have grown; the driver raises with the remedy)."""
+    ema_nodes: jnp.ndarray      # (U, S) i32 node index per slot, -1 free
+    ema_vals: jnp.ndarray       # (U, S) f32 EMA per slot, NaN = no sample
+    ema_overflow: jnp.ndarray   # () bool
+    cand: jnp.ndarray           # (U, k) i32 candidate task positions, -1 pad
+    active: jnp.ndarray         # (U,) i32 active task position, -1 none
+    pending: jnp.ndarray        # (U,) i32 pending-switch node index, -1 none
+    running: jnp.ndarray        # (U,) bool
+    ticking: jnp.ndarray        # (U,) bool probe-tick membership
+    reinit: jnp.ndarray         # (U,) bool lost every candidate; re-enter
+    lat_probe: jnp.ndarray      # (U, k) f32 stashed window latencies, NaN=none
+    lat_frame: jnp.ndarray      # (U, nf) f32
+    cand_traffic: jnp.ndarray   # (U, k) i32 candidates the stash refers to
+    active_traffic: jnp.ndarray  # (U,) i32
+    frame_count: jnp.ndarray    # (U,) i32 aggregate frame stats
+    frame_sum: jnp.ndarray      # (U,) f32
+    failovers: jnp.ndarray      # () i32
+
+
+class FusedTickStatic(NamedTuple):
+    """Per-pool device constants (rebuilt only on node-epoch change)."""
+    user_lat: jnp.ndarray       # (U,) f32
+    user_lon: jnp.ndarray       # (U,) f32
+    user_net: jnp.ndarray       # (U,) i32
+    user_code20: jnp.ndarray    # (U,) i32
+    task_lat: jnp.ndarray       # (Tp,) f32
+    task_lon: jnp.ndarray       # (Tp,) f32
+    task_aff: jnp.ndarray       # (M, Tp) f32
+    task_code20: jnp.ndarray    # (Tp,) i32
+    task_cloud: jnp.ndarray     # (Tp,) f32
+    task_node: jnp.ndarray      # (Tp,) i32 node index per task (-1 none)
+    node_proc: jnp.ndarray      # (Np,) f32 proc_ms per node
+    node_slots: jnp.ndarray     # (Np,) f32 slots per node
+
+
+class TickOuts(NamedTuple):
+    """Per-user decisions handed back to the transport each tick."""
+    cand: jnp.ndarray           # (U, k) i32
+    active: jnp.ndarray         # (U,) i32
+    pending: jnp.ndarray        # (U,) i32
+    confirm: jnp.ndarray        # (U,) bool switches confirmed this tick
+    from_node: jnp.ndarray      # (U,) i32 pre-switch active node
+    probe_ok: jnp.ndarray       # (U, k) bool probes to send this window
+    frame_ok: jnp.ndarray       # (U,) bool frames to send this window
+    failovers: jnp.ndarray      # () i32 running total
+
+
+# ---------------------------------------------------------------------------
+# traced building blocks (shared by the tick and flush programs)
+# ---------------------------------------------------------------------------
+
+def _ema_get(nodes_tab, vals_tab, node):
+    """Per-row EMA lookup for ``node`` (U,) — NaN when absent; matches
+    ``_EmaTable.get`` (including the quirk that node == -1 matches a
+    free slot, whose value is NaN anyway)."""
+    eq = nodes_tab == node[:, None]                    # (U, S)
+    rows = jnp.arange(nodes_tab.shape[0])
+    v = vals_tab[rows, eq.argmax(axis=1)]
+    return jnp.where(eq.any(axis=1), v, jnp.nan)
+
+
+def _ema_get_matrix(nodes_tab, vals_tab, node_mat):
+    """(U, k) lookup — ``_EmaTable.get_matrix``."""
+    return jnp.stack([_ema_get(nodes_tab, vals_tab, node_mat[:, c])
+                      for c in range(node_mat.shape[1])], axis=1)
+
+
+def _ema_fold_into(nodes_tab, vals_tab, overflow, node, lat, m, alpha):
+    """One EMA step per row at ``node`` where ``m``: reuse the matching
+    slot, else claim the first free one (``_EmaTable.fold`` semantics).
+    A row with no free slot latches ``overflow`` — the host table would
+    have grown; the driver surfaces it."""
+    rows = jnp.arange(nodes_tab.shape[0])
+    eq = nodes_tab == node[:, None]
+    has = eq.any(axis=1)
+    free = nodes_tab == -1
+    can_alloc = free.any(axis=1)
+    slot = jnp.where(has, eq.argmax(axis=1), free.argmax(axis=1))
+    do = m & (has | can_alloc)
+    overflow = overflow | (m & ~has & ~can_alloc).any()
+    claim = do & ~has
+    nodes_tab = nodes_tab.at[rows, slot].set(
+        jnp.where(claim, node, nodes_tab[rows, slot]))
+    prev = vals_tab[rows, slot]
+    prev = jnp.where(has, prev, jnp.nan)               # fresh slot: no prior
+    new = jnp.where(do, ema_fold(prev, lat, alpha, xp=jnp),
+                    vals_tab[rows, slot])
+    return nodes_tab, vals_tab.at[rows, slot].set(new), overflow
+
+
+def _process_deaths(state, tn, deaths, n_deaths):
+    """Replay queued connection breaks in arrival order — each step is
+    ``ClientPool.on_connection_break``'s fluid/armada branch: pop the
+    dead node's EMAs for affected users, left-compact their candidate
+    rows, instant-failover users whose active died (best known EMA, else
+    first candidate, else mark for re-initialization).
+
+    Pops are accumulated as a slot mask and applied once after the loop.
+    That is exact: the slot map itself never changes during the loop,
+    compaction removes every dead-node candidate before
+    ``failover_pick`` gathers EMAs (so a popped cell is never read
+    inside the loop), and the fold that could re-seed popped cells runs
+    after the mask is applied."""
+    rows = jnp.arange(state.cand.shape[0])
+    running = state.running
+    nodes_tab, vals_tab = state.ema_nodes, state.ema_vals
+
+    def step(i, carry):
+        cand, active, reinit, failovers, popmask = carry
+        d = deaths[i]
+        cand_node = jnp.where(cand >= 0, tn[jnp.clip(cand, 0)], -1)
+        act_node = jnp.where(active >= 0, tn[jnp.clip(active, 0)], -1)
+        hit = running & ((cand_node == d).any(axis=1) | (act_node == d))
+        popmask = popmask | (hit[:, None] & (nodes_tab == d))
+        keep = (cand >= 0) & (cand_node != d)
+        # left-compact kept entries by rank (compact_rows semantics) —
+        # closed-form per output column, no per-row sort
+        rank = jnp.cumsum(keep, axis=1) - 1
+        cols = []
+        for j in range(cand.shape[1]):
+            hitj = keep & (rank == j)
+            src = jnp.argmax(hitj, axis=1)
+            cols.append(jnp.where(hitj.any(axis=1), cand[rows, src], -1))
+        compacted = jnp.stack(cols, axis=1)
+        cand = jnp.where(hit[:, None], compacted, cand)
+        act_dead = hit & ((active < 0) | (act_node == d))
+        cand_node = jnp.where(cand >= 0, tn[jnp.clip(cand, 0)], -1)
+        slot = failover_pick(
+            cand, _ema_get_matrix(nodes_tab, vals_tab, cand_node), xp=jnp)
+        has = slot >= 0
+        picked = cand[rows, jnp.clip(slot, 0)]
+        active = jnp.where(act_dead & has, picked, active)
+        active = jnp.where(act_dead & ~has, -1, active)
+        failovers = failovers + jnp.sum((act_dead & has).astype(jnp.int32))
+        reinit = reinit | (act_dead & ~has)
+        return cand, active, reinit, failovers, popmask
+
+    cand, active, reinit, failovers, popmask = jax.lax.fori_loop(
+        0, n_deaths, step,
+        (state.cand, state.active, state.reinit, state.failovers,
+         jnp.zeros(nodes_tab.shape, bool)))
+    vals_tab = jnp.where(popmask, jnp.nan, vals_tab)
+    return nodes_tab, vals_tab, cand, active, reinit, failovers
+
+
+def _fold_window(state, nodes_tab, vals_tab, tn, alpha):
+    """Fold the stashed window's latencies into the EMA table in the
+    host flush order: candidate slots left-to-right (== per-(user, node)
+    occurrence rank), then frame rounds in arrival order."""
+    u, k = state.cand_traffic.shape
+    nf = state.lat_frame.shape[1]
+    overflow = state.ema_overflow
+
+    ct = state.cand_traffic
+    for c in range(k):
+        tc = ct[:, c]
+        lat = state.lat_probe[:, c]
+        node = jnp.where(tc >= 0, tn[jnp.clip(tc, 0)], -1)
+        nodes_tab, vals_tab, overflow = _ema_fold_into(
+            nodes_tab, vals_tab, overflow, node, lat,
+            (node >= 0) & ~jnp.isnan(lat), alpha)
+    at_ = state.active_traffic
+    fnode = jnp.where(at_ >= 0, tn[jnp.clip(at_, 0)], -1)
+    fc, fs = state.frame_count, state.frame_sum
+    for j in range(nf):
+        lat = state.lat_frame[:, j]
+        m = (fnode >= 0) & ~jnp.isnan(lat)
+        nodes_tab, vals_tab, overflow = _ema_fold_into(
+            nodes_tab, vals_tab, overflow, fnode, lat, m, alpha)
+        fc = fc + m.astype(fc.dtype)
+        fs = fs + jnp.where(m, lat, 0.0).astype(fs.dtype)
+    return nodes_tab, vals_tab, overflow, fc, fs
+
+
+def _base_rtt(static, tasks):
+    """``default_rtt_model`` on device (same constants, fp32)."""
+    safe = jnp.clip(tasks, 0)
+    ul, uo = static.user_lat, static.user_lon
+    if tasks.ndim == 2:
+        ul, uo = ul[:, None], uo[:, None]
+    d = haversine_km(ul, uo, static.task_lat[safe], static.task_lon[safe])
+    return RTT_LAST_MILE_MS + RTT_MS_PER_KM * d \
+        + jnp.where(static.task_cloud[safe] > 0, RTT_CLOUD_PENALTY_MS, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# jitted programs
+# ---------------------------------------------------------------------------
+
+def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
+               alpha, margin):
+    COMPILE_COUNTS["tick"] += 1
+    u, k = state.cand.shape
+    rows = jnp.arange(u)
+    tn = static.task_node
+
+    # 1. queued connection breaks (before the fold — host breaks happen
+    #    mid-window, after traffic was scheduled but before it is folded)
+    enodes, evals, cand, active, reinit, failovers = _process_deaths(
+        state, tn, deaths, n_deaths)
+
+    # 2. fold the previous window
+    enodes, evals, overflow, fc, fs = _fold_window(
+        state, enodes, evals, tn, alpha)
+
+    # 3. candidate refresh: fused scoring + top-k (lax.top_k — the exact
+    #    op the geo_topk kernel path dispatches to, same min-index ties;
+    #    one pass over the (U, Tp) score matrix)
+    tick_mask = state.running & state.ticking
+    scores = score_matrix(
+        static.user_lat, static.user_lon, static.user_net,
+        static.user_code20, static.task_lat, static.task_lon, free,
+        static.task_aff, static.task_code20, sched, need)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    new_cand = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+    cand = jnp.where(tick_mask[:, None], new_cand, cand)
+
+    # users who lost every candidate re-enter initial selection: active
+    # is the best-base-RTT candidate (Client start semantics)
+    base = jnp.where(cand >= 0, _base_rtt(static, cand), jnp.inf)
+    init_slot = jnp.argmin(base, axis=1)
+    has_cand = (cand >= 0).any(axis=1)
+    init_active = jnp.where(has_cand, cand[rows, init_slot], -1)
+    do_init = reinit & tick_mask
+    active = jnp.where(do_init, init_active, active)
+    reinit = jnp.where(do_init & has_cand, False, reinit)
+
+    # 4. two-round confirmed switch on the freshly folded EMAs
+    cand_node = jnp.where(cand >= 0, tn[jnp.clip(cand, 0)], -1)
+    act_node = jnp.where(active >= 0, tn[jnp.clip(active, 0)], -1)
+    cand_ema = _ema_get_matrix(enodes, evals, cand_node)
+    act_ema = _ema_get(enodes, evals, act_node)
+    confirm, best_slot, new_pending = switch_decide(
+        cand, cand_ema, cand_node, active, act_ema, state.pending,
+        margin, xp=jnp)
+    confirm = confirm & tick_mask
+    pending = jnp.where(tick_mask, new_pending, state.pending)
+    active = jnp.where(confirm, cand[rows, best_slot], active)
+
+    # 5. next-window traffic: probes to every live candidate, frames to
+    #    the live active
+    probe_ok = (cand >= 0) & alive[jnp.clip(cand, 0)] & tick_mask[:, None]
+    frame_ok = (active >= 0) & alive[jnp.clip(active, 0)] & tick_mask
+
+    nf = state.lat_frame.shape[1]
+    new_state = FusedTickState(
+        ema_nodes=enodes, ema_vals=evals, ema_overflow=overflow,
+        cand=cand, active=active, pending=pending,
+        running=state.running, ticking=state.ticking, reinit=reinit,
+        lat_probe=jnp.full((u, k), jnp.nan, jnp.float32),
+        lat_frame=jnp.full((u, nf), jnp.nan, jnp.float32),
+        cand_traffic=cand, active_traffic=active,
+        frame_count=fc, frame_sum=fs, failovers=failovers)
+    outs = TickOuts(cand=cand, active=active, pending=pending,
+                    confirm=confirm, from_node=act_node,
+                    probe_ok=probe_ok, frame_ok=frame_ok,
+                    failovers=failovers)
+    return new_state, outs
+
+
+def _traffic_impl(state, static, work0, net_rate, probe_ok, frame_ok,
+                  e_rtt_p, e_proc_p, e_back_p, e_rtt_f, e_proc_f, e_back_f,
+                  scale, frame_interval):
+    """Fluid-window latencies for the traffic the tick scheduled, stashed
+    into the state for the next tick's fold.  Mirrors the host
+    ``_traffic_fluid`` arithmetic: ``wait(tau) = max(0, work0 +
+    net_rate * tau) / slots``, multiplicative jitter on rtt/proc/back."""
+    COMPILE_COUNTS["traffic"] += 1
+    tn = static.task_node
+    nf = state.lat_frame.shape[1]
+
+    ct = state.cand_traffic
+    node_p = jnp.clip(tn[jnp.clip(ct, 0)], 0)
+    base_p = _base_rtt(static, ct)
+    rtt = base_p * (1 + 0.08 * e_rtt_p)
+    wait_p = jnp.maximum(0.0, work0[node_p]) / static.node_slots[node_p]
+    proc_p = (static.node_proc[node_p] * scale) * (1 + 0.06 * e_proc_p)
+    back = (rtt / 2) * (1 + 0.08 * e_back_p)
+    lat_p = rtt / 2 + wait_p + jnp.maximum(proc_p, 0.1) + back
+    lat_probe = jnp.where(probe_ok, lat_p, jnp.nan)
+
+    at_ = state.active_traffic
+    node_f = jnp.clip(tn[jnp.clip(at_, 0)], 0)
+    base_f = _base_rtt(static, at_)[:, None]
+    tau = ((jnp.arange(nf) + 0.5) * frame_interval)[None, :]
+    rtt_f = base_f * (1 + 0.08 * e_rtt_f)
+    wait_f = jnp.maximum(
+        0.0, work0[node_f][:, None] + net_rate[node_f][:, None] * tau
+    ) / static.node_slots[node_f][:, None]
+    proc_f = (static.node_proc[node_f][:, None] * scale) \
+        * (1 + 0.06 * e_proc_f)
+    back_f = (rtt_f / 2) * (1 + 0.08 * e_back_f)
+    lat_f = rtt_f / 2 + wait_f + jnp.maximum(proc_f, 0.1) + back_f
+    lat_frame = jnp.where(frame_ok[:, None], lat_f, jnp.nan)
+    return state._replace(lat_probe=lat_probe, lat_frame=lat_frame)
+
+
+def _flush_impl(state, static, deaths, n_deaths, alpha):
+    """Fold-only step: process queued breaks then fold the open window —
+    what the host tick does lazily when metrics are read mid-window."""
+    COMPILE_COUNTS["flush"] += 1
+    u, k = state.cand.shape
+    nf = state.lat_frame.shape[1]
+    tn = static.task_node
+    enodes, evals, cand, active, reinit, failovers = _process_deaths(
+        state, tn, deaths, n_deaths)
+    enodes, evals, overflow, fc, fs = _fold_window(
+        state, enodes, evals, tn, alpha)
+    return state._replace(
+        ema_nodes=enodes, ema_vals=evals, ema_overflow=overflow,
+        cand=cand, active=active, reinit=reinit,
+        failovers=failovers, frame_count=fc, frame_sum=fs,
+        lat_probe=jnp.full((u, k), jnp.nan, jnp.float32),
+        lat_frame=jnp.full((u, nf), jnp.nan, jnp.float32))
+
+
+_fused_tick = jax.jit(_tick_impl, donate_argnums=_DONATE)
+_fused_traffic = jax.jit(_traffic_impl, donate_argnums=_DONATE)
+_fused_flush = jax.jit(_flush_impl, donate_argnums=_DONATE)
+
+
+# ---------------------------------------------------------------------------
+# host-side driver
+# ---------------------------------------------------------------------------
+
+class FusedTickDriver:
+    """Owns the device state for one ``ClientPool`` (``tick="device"``)
+    and the host glue a tick still needs: fluid admission through the
+    captains, jitter draws on the simulator RNG in scalar order, switch
+    records and mirror updates.  The pool delegates its probe-tick chain
+    here; everything else (start/refresh bookkeeping, metrics surface)
+    stays on the pool."""
+
+    def __init__(self, pool, node_pad: int = 256, ema_slots: int = 32):
+        self.pool = pool
+        self.node_pad = node_pad
+        self.ema_slots = ema_slots
+        self.deaths: List[int] = []
+        self._epoch = -1
+        self.static: Optional[FusedTickStatic] = None
+        self.state: Optional[FusedTickState] = None
+        self.nf = int(pool.probe_period // pool.frame_interval)
+        self._stash_dirty = False       # an unfolded window is stashed
+
+    # ------------------------------------------------------------ setup
+
+    def _packed_user(self):
+        from repro.core import geohash
+        from repro.kernels.geo_topk.ops import pack_user_inputs
+        from repro.core.selection import CODE_PRECISION
+        pool = self.pool
+        codes = geohash.encode_batch(pool.locs[:, 0], pool.locs[:, 1],
+                                     CODE_PRECISION)
+        return pack_user_inputs(pool.locs[:, 0], pool.locs[:, 1],
+                                pool.net_ix, codes)
+
+    def _node_cap(self) -> int:
+        npad = self.node_pad
+        return max(npad, -(-len(self.pool._node_ids) // npad) * npad)
+
+    def _rebuild_static(self, view):
+        pool = self.pool
+        st = view.packed_static(self.node_pad)
+        np_cap = self._node_cap()
+        if self.static is not None:
+            if np_cap != self.static.node_proc.shape[0] or \
+                    st.n_pad != self.static.task_lat.shape[0]:
+                raise RuntimeError(
+                    "fused tick: node/task set outgrew its padding "
+                    f"(tasks {st.n_pad}, nodes {np_cap}) — restart the "
+                    "pool with a larger node_pad")
+        tn = np.full(st.n_pad, -1, np.int32)
+        tn[:len(pool.task_node)] = pool.task_node
+        proc = np.zeros(np_cap, np.float32)
+        slots = np.ones(np_cap, np.float32)
+        for i, cap in enumerate(pool._node_caps):
+            if cap is not None:
+                proc[i] = cap.spec.proc_ms
+                slots[i] = max(cap.spec.slots, 1)
+        ulat, ulon, unet, ucode = self._packed_user()
+        self.static = FusedTickStatic(
+            user_lat=jnp.asarray(ulat), user_lon=jnp.asarray(ulon),
+            user_net=jnp.asarray(unet), user_code20=jnp.asarray(ucode),
+            task_lat=st.lat, task_lon=st.lon, task_aff=st.aff,
+            task_code20=st.code20, task_cloud=st.cloud,
+            task_node=jnp.asarray(tn), node_proc=jnp.asarray(proc),
+            node_slots=jnp.asarray(slots))
+        self._epoch = view.epoch
+
+    def init_state(self):
+        """Upload the pool mirrors (populated by the host-side initial
+        refresh) as the resident device state."""
+        pool = self.pool
+        view = pool._view()
+        self._rebuild_static(view)
+        u, k = pool.cand_task.shape
+        self.state = FusedTickState(
+            ema_nodes=jnp.full((u, self.ema_slots), -1, jnp.int32),
+            ema_vals=jnp.full((u, self.ema_slots), jnp.nan, jnp.float32),
+            ema_overflow=jnp.zeros((), bool),
+            cand=jnp.asarray(pool.cand_task),
+            active=jnp.asarray(pool.active),
+            pending=jnp.asarray(pool.pending),
+            running=jnp.asarray(pool.running),
+            ticking=jnp.asarray(pool.ticking),
+            reinit=jnp.zeros(u, bool),
+            lat_probe=jnp.full((u, k), jnp.nan, jnp.float32),
+            lat_frame=jnp.full((u, self.nf), jnp.nan, jnp.float32),
+            cand_traffic=jnp.full((u, k), -1, jnp.int32),
+            active_traffic=jnp.full(u, -1, jnp.int32),
+            frame_count=jnp.zeros(u, jnp.int32),
+            frame_sum=jnp.zeros(u, jnp.float32),
+            failovers=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------- tick
+
+    def _drain_deaths(self):
+        deaths = self.deaths
+        self.deaths = []
+        if len(deaths) > DEATH_QUEUE_MAX:
+            raise RuntimeError(
+                f"{len(deaths)} breaks in one window > DEATH_QUEUE_MAX")
+        arr = np.full(DEATH_QUEUE_MAX, -1, np.int32)
+        arr[:len(deaths)] = deaths
+        return arr, np.int32(len(deaths))
+
+    def tick(self):
+        pool = self.pool
+        t0 = time.perf_counter()
+        view = pool._view()
+        if view.epoch != self._epoch:
+            self._rebuild_static(view)
+        free, sched, alive = view.padded_dynamic(self.node_pad)
+        need = np.int32(min(MIN_PROXIMITY_HITS, int(sched.sum())))
+        deaths, n_deaths = self._drain_deaths()
+        pool.phase_add("transport", t0)
+
+        t0 = time.perf_counter()
+        self.state, outs = _fused_tick(
+            self.state, self.static, free, sched, alive, need, deaths,
+            n_deaths, pool.alpha, pool.switch_margin)
+        self._stash_dirty = False       # tick folded the previous window
+        cand = np.asarray(outs.cand)
+        active = np.asarray(outs.active)
+        probe_ok = np.asarray(outs.probe_ok)
+        frame_ok = np.asarray(outs.frame_ok)
+        confirm = np.asarray(outs.confirm)
+        pool.phase_add("fused_tick", t0)
+
+        t0 = time.perf_counter()
+        # mirrors + switch records (scalar-identical timestamps/order)
+        pool.cand_task = cand
+        pool.active = active
+        pool.pending = np.asarray(outs.pending)
+        pool.failovers = int(outs.failovers)
+        self.check_overflow()
+        rows = np.nonzero(confirm)[0]
+        # per-switch records match the host tick's (time, user, from, to)
+        # stream; population-scale runs opt out via record_samples=False
+        # (the host tick has no such toggle — it pays the append cost)
+        if rows.size and pool.record_samples:
+            from_node = np.asarray(outs.from_node)
+            now = pool.sim.now
+            for u in rows:
+                pool.switch_t.append(now)
+                pool.switch_user.append(int(u))
+                pool.switch_from.append(
+                    pool._node_ids[int(from_node[u])])
+                pool.switch_to.append(
+                    pool._node_ids[pool.task_node[int(active[u])]])
+        self._send_traffic(cand, active, probe_ok, frame_ok)
+        pool.phase_add("transport", t0)
+
+        if bool((pool.running & pool.ticking).any()):
+            pool.ticks_run += 1
+            pool.sim.after(pool.probe_period, self.tick)
+
+    def _send_traffic(self, cand, active, probe_ok, frame_ok):
+        """Admit one window of fluid traffic and stash its latencies:
+        per-node ``arrive_batch`` in ascending node order, then the three
+        jitter draws in the host tick's exact element order (probes
+        row-major, then frames user-major)."""
+        pool = self.pool
+        nf = self.nf
+        p_tasks = cand[probe_ok]
+        p_nodes = pool.task_node[p_tasks]
+        f_nodes = pool.task_node[active[frame_ok]]
+        n_nodes = len(pool._node_ids)
+        counts = np.bincount(p_nodes, minlength=n_nodes)
+        counts += nf * np.bincount(f_nodes, minlength=n_nodes)
+        pool.watch_node_indices(np.nonzero(counts)[0])
+
+        p_cnt = int(probe_ok.sum())
+        f_cnt = int(frame_ok.sum())
+        total = p_cnt + f_cnt * nf
+        if total == 0:
+            return
+        np_cap = self._node_cap()
+        work0 = np.zeros(np_cap, np.float32)
+        net_rate = np.zeros(np_cap, np.float32)
+        now = pool.sim.now
+        for nix in np.nonzero(counts)[0]:
+            cap = pool._node_caps[nix]
+            w0, in_rate, cap_rate = cap.arrive_batch(
+                int(counts[nix]), pool.workload_scale, pool.probe_period,
+                now)
+            work0[nix] = w0
+            net_rate[nix] = in_rate - cap_rate
+        pool.requests_sent += total
+
+        eps = [pool.sim.rng.standard_normal(total) for _ in range(3)]
+
+        def split(e):
+            dp = np.zeros(probe_ok.shape, np.float32)
+            dp[probe_ok] = e[:p_cnt]
+            df = np.zeros((len(frame_ok), nf), np.float32)
+            df[frame_ok] = e[p_cnt:].reshape(-1, nf)
+            return dp, df
+
+        (e1p, e1f), (e2p, e2f), (e3p, e3f) = map(split, eps)
+        self.state = _fused_traffic(
+            self.state, self.static, work0, net_rate, probe_ok, frame_ok,
+            e1p, e2p, e3p, e1f, e2f, e3f, pool.workload_scale,
+            pool.frame_interval)
+        self._stash_dirty = True
+
+    # ------------------------------------------------------- maintenance
+
+    def flush(self):
+        """Process queued breaks + fold the open window (metric reads).
+        Free when nothing is pending — no device round-trip."""
+        if self.state is None or not (self._stash_dirty or self.deaths):
+            return
+        deaths, n_deaths = self._drain_deaths()
+        self._stash_dirty = False
+        self.state = _fused_flush(self.state, self.static, deaths,
+                                  n_deaths, self.pool.alpha)
+        pool = self.pool
+        pool.cand_task = np.asarray(self.state.cand)
+        pool.active = np.asarray(self.state.active)
+        pool.failovers = int(self.state.failovers)
+
+    def sync_aggregates(self):
+        self.flush()
+        pool = self.pool
+        pool.frame_count = np.asarray(self.state.frame_count, np.int64)
+        pool.frame_sum = np.asarray(self.state.frame_sum, np.float64)
+
+    def reset_aggregates(self):
+        self.flush()
+        self.state = self.state._replace(
+            frame_count=jnp.zeros_like(self.state.frame_count),
+            frame_sum=jnp.zeros_like(self.state.frame_sum))
+
+    def set_running(self, running: np.ndarray):
+        self.state = self.state._replace(running=jnp.asarray(running))
+
+    def on_break(self, node_ix: int):
+        self.deaths.append(int(node_ix))
+
+    def check_overflow(self):
+        if bool(self.state.ema_overflow):
+            raise RuntimeError(
+                f"fused tick: a user outgrew its {self.ema_slots} EMA "
+                "slots — restart the pool with a larger ema_slots")
+
+    def ema_dict(self, u: int):
+        """Per-user node-id -> EMA map (tests/metrics; mirrors
+        ``_EmaTable.as_dict``)."""
+        self.flush()
+        nodes = np.asarray(self.state.ema_nodes[u])
+        vals = np.asarray(self.state.ema_vals[u], np.float64)
+        ids = self.pool._node_ids
+        return {ids[n]: float(v) for n, v in zip(nodes, vals)
+                if n >= 0 and not np.isnan(v)}

@@ -19,7 +19,12 @@ runs it on arrays:
   ``candidate_lists`` scores a U×N matrix and returns per-user top-k in
   one shot (used by ``Beacon.query_service_batch`` and the autoscaler);
 * the U×N scoring can optionally run through the fused
-  ``repro.kernels.geo_topk`` op (jnp oracle on CPU, Pallas on TPU).
+  ``repro.kernels.geo_topk`` op (jnp oracle on CPU, Pallas on TPU):
+  ``candidate_indices_device`` returns device arrays with no numpy
+  materialization (the fused probe tick's path), and the padded node
+  half of the query is cached per node-epoch on the service view
+  (``packed_static``) so only (U,)-sized user arrays and two (N,)
+  dynamic vectors move per tick.
 
 ``candidate_list_scalar`` preserves the pre-refactor scalar scorer
 verbatim; parity tests and ``benchmarks/bench_selection_scale.py`` pin
@@ -27,7 +32,8 @@ the engine's ranking against it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import itertools
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -112,12 +118,32 @@ def candidate_list_scalar(tasks: Sequence[object], user_loc, user_net: str,
 # Cached per-service arrays
 # ---------------------------------------------------------------------------
 
+class PackedStatic(NamedTuple):
+    """Device-resident node half of a geo_topk query, zero-padded to a
+    ``node_pad`` multiple so churn never changes jit shapes.  Static
+    between replica-set changes — cached per node-epoch on the owning
+    ``_ServiceArrays`` (free fractions and validity are per-tick dynamic
+    and travel separately)."""
+    n: int               # real task count (rows beyond are padding)
+    n_pad: int
+    lat: object          # (n_pad,) f32 jnp
+    lon: object          # (n_pad,) f32 jnp
+    aff: object          # (M, n_pad) f32 jnp affinity columns
+    code20: object       # (n_pad,) i32 jnp
+    cloud: object        # (n_pad,) f32 jnp — 1.0 = cloud replica
+
+
+_EPOCH = itertools.count(1)
+
+
 class _ServiceArrays:
     """Static (between replica-set changes) arrays over one task list."""
 
     def __init__(self, tasks: Sequence[object]):
         self.tasks = list(tasks)
         self.fingerprint = _fingerprint(tasks)
+        self.epoch = next(_EPOCH)       # bumps on every rebuild
+        self._packed: Dict[int, PackedStatic] = {}
         n = len(self.tasks)
         self.lat = np.empty(n)
         self.lon = np.empty(n)
@@ -155,6 +181,52 @@ class _ServiceArrays:
                 mask[i] = True
                 free[i] = c.free_fraction()
         return mask, free
+
+    def packed_static(self, node_pad: int = 256) -> PackedStatic:
+        """Kernel-ready padded node arrays, built once per node-epoch
+        (i.e. once per replica-set change) and cached on this view —
+        repacking from numpy used to happen on every tick."""
+        cached = self._packed.get(node_pad)
+        if cached is not None:
+            return cached
+        import jax.numpy as jnp
+
+        from repro.kernels.geo_topk.ops import code20
+        n = len(self.tasks)
+        n_pad = max(node_pad, -(-n // node_pad) * node_pad)
+
+        def pad(x, dtype):
+            out = np.zeros(n_pad, dtype)
+            out[:n] = x
+            return jnp.asarray(out)
+
+        aff = np.zeros((AFFINITY_TABLE.shape[0], n_pad), np.float32)
+        aff[:, :n] = AFFINITY_TABLE[self.net_idx, :].T
+        packed = PackedStatic(
+            n=n, n_pad=n_pad,
+            lat=pad(self.lat, np.float32),
+            lon=pad(self.lon, np.float32),
+            aff=jnp.asarray(aff),
+            code20=pad(code20(self.codes), np.int32),
+            cloud=pad(self.cloud, np.float32))
+        self._packed[node_pad] = packed
+        return packed
+
+    def padded_dynamic(self, node_pad: int = 256
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-tick (free, valid_sched, valid_alive) padded to match
+        ``packed_static``: fp32 free fractions, schedulable mask (running
+        + alive — what selection scores) and alive mask (what the client
+        data plane may still talk to)."""
+        mask, free = self.dynamic_state()
+        st = self.packed_static(node_pad)
+        free_p = np.zeros(st.n_pad, np.float32)
+        free_p[:st.n] = free
+        sched = np.zeros(st.n_pad, np.float32)
+        sched[:st.n] = mask
+        alive = np.zeros(st.n_pad, bool)
+        alive[:st.n] = self.alive_mask()
+        return free_p, sched, alive
 
 
 def _fingerprint(tasks: Sequence[object]) -> Tuple:
@@ -328,6 +400,46 @@ class SelectionEngine:
                  if np.isfinite(s) and s > -1e29]
                 for row_i, row_s in zip(idx, scores)]
 
+    def candidate_indices_device(self, service_id: str,
+                                 tasks: Sequence[object], user_locs,
+                                 user_nets, top_n: Optional[int] = None,
+                                 node_pad: int = 256,
+                                 interpret: bool = False):
+        """Batched Algorithm 1 on device, no numpy materialization:
+        returns ``(scores, idx)`` jnp arrays of shape ``(U, k_eff)``,
+        ``k_eff = min(top_n, running replicas)`` — ``idx`` in task-
+        position space with padding/filtered entries scoring ``NEG``
+        (callers keep entries with ``score > -1e29``).  Returns ``None``
+        when no replica is running.
+
+        The node half of the query comes from the per-epoch
+        ``packed_static`` cache (device-resident, zero-padded to a
+        ``node_pad`` multiple so churn never changes jit shapes); only
+        the (U,) user arrays and two (n_pad,) dynamic vectors cross the
+        host→device boundary per call.  fp32 scoring — ranking may
+        differ from the float64 numpy path at exact-tie resolution.
+        """
+        from repro.kernels.geo_topk.ops import (GeoTopKInputs, geo_topk,
+                                                pack_user_inputs)
+        k = top_n or self.top_n
+        users = np.asarray(user_locs, np.float64).reshape(-1, 2)
+        nets = parse_nets(user_nets, len(users))
+        arr = self._arrays(service_id, tasks)
+        st = arr.packed_static(node_pad)
+        free_p, sched, _alive = arr.padded_dynamic(node_pad)
+        n_run = int(sched.sum())
+        if n_run == 0:
+            return None
+        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
+                                       CODE_PRECISION)
+        packed = GeoTopKInputs(
+            *pack_user_inputs(users[:, 0], users[:, 1], nets, u_codes),
+            st.lat, st.lon, free_p, st.aff, st.code20, sched)
+        k_eff = min(k, n_run)
+        return geo_topk(packed, k=k_eff,
+                        need=min(MIN_PROXIMITY_HITS, n_run),
+                        interpret=interpret)
+
     def candidate_indices_kernel(self, service_id: str,
                                  tasks: Sequence[object], user_locs,
                                  user_nets, top_n: Optional[int] = None,
@@ -335,51 +447,20 @@ class SelectionEngine:
                                  interpret: bool = False) -> np.ndarray:
         """``candidate_indices`` through the fused geo_topk op — the
         ClientPool's high-throughput refresh path (fluid transport).
-
-        Node arrays are zero-padded to a multiple of ``node_pad`` with
-        ``node_valid = 0`` so churn (replica deaths/recoveries) doesn't
-        change jit shapes every tick; padding rows score ``NEG`` and are
-        mapped back to -1.  fp32 scoring — ranking may differ from the
-        float64 numpy path at exact-tie resolution, which the statistical
-        fluid transport tolerates.
-        """
-        from repro.kernels.geo_topk.ops import geo_topk, pack_inputs
+        Materializing wrapper over ``candidate_indices_device``."""
         k = top_n or self.top_n
-        users = np.asarray(user_locs, np.float64).reshape(-1, 2)
-        nets = parse_nets(user_nets, len(users))
-        arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state()
-        run_ix = np.nonzero(mask)[0]
-        if run_ix.size == 0:
-            return np.full((len(users), k), -1, np.int32)
-        n = run_ix.size
-        n_pad = -(-n // node_pad) * node_pad
-
-        def pad(x, fill=0.0):
-            out = np.full(n_pad, fill, np.asarray(x).dtype)
-            out[:n] = x
-            return out
-
-        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
-                                       CODE_PRECISION)
-        valid = np.zeros(n_pad, np.float32)
-        valid[:n] = 1.0
-        packed = pack_inputs(
-            users[:, 0], users[:, 1], nets, u_codes,
-            pad(arr.lat[run_ix]), pad(arr.lon[run_ix]),
-            pad(free[run_ix]), pad(arr.net_idx[run_ix]),
-            pad(arr.codes[run_ix]), valid)
-        k_eff = min(k, n)
-        scores, idx = geo_topk(packed, k=k_eff,
-                               need=min(MIN_PROXIMITY_HITS, n),
-                               interpret=interpret)
-        scores = np.asarray(scores)
-        idx = np.asarray(idx)
-        run_pad = np.full(n_pad, -1, np.int64)
-        run_pad[:n] = run_ix
-        out = np.where(scores > -1e29, run_pad[idx], -1).astype(np.int32)
+        u_total = np.asarray(user_locs, np.float64).reshape(-1, 2).shape[0]
+        res = self.candidate_indices_device(
+            service_id, tasks, user_locs, user_nets, top_n=top_n,
+            node_pad=node_pad, interpret=interpret)
+        if res is None:
+            return np.full((u_total, k), -1, np.int32)
+        scores = np.asarray(res[0])
+        idx = np.asarray(res[1])
+        out = np.where(scores > -1e29, idx, -1).astype(np.int32)
+        k_eff = out.shape[1]
         if k_eff < k:
             out = np.concatenate(
-                [out, np.full((len(users), k - k_eff), -1, np.int32)],
+                [out, np.full((u_total, k - k_eff), -1, np.int32)],
                 axis=1)
         return out

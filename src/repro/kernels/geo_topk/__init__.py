@@ -1,2 +1,4 @@
 from repro.kernels.geo_topk.ops import (GeoTopKInputs, geo_topk,  # noqa: F401
-                                        pack_inputs)
+                                        pack_inputs, pack_node_inputs,
+                                        pack_user_inputs)
+from repro.kernels.geo_topk import tune  # noqa: F401

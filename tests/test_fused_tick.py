@@ -1,0 +1,199 @@
+"""Device-resident fused tick vs the host numpy tick: decision-stream
+parity on the paper's Fig. 8/10 scenarios, jit-shape stability under
+churn, and the device-mode guard rails.
+
+The fused program must reproduce the host fluid tick EXACTLY in every
+decision — candidate matrices, active/pending assignments, switch
+records (time, user, from, to), failover counts, request counts — and
+match EMAs/latency aggregates to fp32 rounding (the host folds in
+float64).  Scoring parity is by construction (both paths consume
+bit-identical fp32 inputs through the geo_topk math); this file pins the
+whole tick, including the sequential break replay and two-round switch.
+"""
+import numpy as np
+import pytest
+
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.cluster import NodeSpec, Topology
+
+SERVICE = "detect"
+
+
+def _fluid_system(n_nodes=24, seed=0, spread=0.5):
+    """Metro fleet with one running replica per node (Fig 8-style node
+    sets; failures injected per test recreate the Fig 10 trajectories)."""
+    rng = np.random.default_rng(seed)
+    nodes = {f"N{i}": NodeSpec(
+        f"N{i}", (44.97 + float(rng.uniform(-spread, spread)),
+                  -93.22 + float(rng.uniform(-spread, spread))),
+        proc_ms=float(rng.uniform(10, 30)),
+        slots=int(rng.integers(2, 9)),
+        dedicated=bool(rng.random() < 0.2))
+        for i in range(n_nodes)}
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def _run_pool(tick, *, n_users=50, n_nodes=24, seed=0, until=12_000.0,
+              fail=(), frame_interval=500.0):
+    sys_ = _fluid_system(n_nodes, seed)
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
+                     -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid",
+        frame_interval_ms=frame_interval, selection_backend="geo_topk",
+        tick=tick)
+    sys_.sim.at(0.0, pool.start)
+    for node, t in fail:
+        sys_.fail_node(node, t)
+    sys_.sim.run(until=until)
+    return pool, sys_
+
+
+def _assert_tick_parity(host, dev, n_users):
+    assert host.ticks_run == dev.ticks_run
+    assert host.requests_sent == dev.requests_sent
+    assert host.failovers == dev.failovers
+    np.testing.assert_array_equal(host.cand_task, dev.cand_task)
+    np.testing.assert_array_equal(host.active, dev.active)
+    np.testing.assert_array_equal(host.pending, dev.pending)
+    want = list(zip(host.switch_t, host.switch_user, host.switch_from,
+                    host.switch_to))
+    got = list(zip(dev.switch_t, dev.switch_user, dev.switch_from,
+                   dev.switch_to))
+    assert want == got, "switch records diverge"
+    # fold the open window on BOTH sides before comparing EMA tables
+    # (mean_latency flushes the host fluid buffer / the device stash)
+    np.testing.assert_allclose(host.mean_latency(), dev.mean_latency(),
+                               rtol=1e-4)
+    for u in range(n_users):
+        a, b = host.ema_of(u), dev.ema_of(u)
+        assert set(a) == set(b), f"user {u}: EMA key set diverges"
+        for node in a:
+            np.testing.assert_allclose(a[node], b[node], rtol=1e-4)
+
+
+def test_device_tick_matches_host_fig8_steady_state():
+    """Fig 8 regime: steady metro fleet, probes + frames + two-round
+    switches — decision stream identical, EMAs to fp32 rounding."""
+    host, _ = _run_pool("host", until=14_000.0)
+    dev, _ = _run_pool("device", until=14_000.0)
+    _assert_tick_parity(host, dev, 50)
+    assert len(dev.switch_t) > 0          # the scenario actually switches
+    assert dev.ticks_run >= 6
+
+
+def test_device_tick_matches_host_fig10_failover():
+    """Fig 10 regime: nodes die mid-run (some within one window) — the
+    queued break replay must reproduce the host's instant failovers."""
+    fail = [("N1", 4_200.0), ("N5", 4_300.0), ("N9", 6_500.0),
+            ("N2", 6_600.0)]
+    host, _ = _run_pool("host", until=14_000.0, fail=fail)
+    dev, _ = _run_pool("device", until=14_000.0, fail=fail)
+    _assert_tick_parity(host, dev, 50)
+    assert dev.failovers > 0
+
+
+def test_device_tick_matches_host_under_volunteer_churn():
+    """Fail/recover cycles: recovered nodes re-enter selection, EMAs are
+    popped per break — both ticks stay locked step for the whole run."""
+    host, hs = _run_pool("host", until=10_000.0,
+                         fail=[("N3", 3_100.0), ("N7", 5_100.0)])
+    dev, ds = _run_pool("device", until=10_000.0,
+                        fail=[("N3", 3_100.0), ("N7", 5_100.0)])
+    for s in (hs, ds):
+        s.captains["N3"].recover()
+        s.sim.run(until=18_000.0)
+    _assert_tick_parity(host, dev, 50)
+
+
+def test_device_tick_compiles_once_under_churn():
+    """Shape stability: node failures, recoveries AND a replica join
+    (within the node_pad) must not retrigger tracing of any fused
+    program — a recompiling tick would silently serialize the loop."""
+    from repro.core import fused_tick
+    sys_ = _fluid_system(16, seed=2)
+    rng = np.random.default_rng(3)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 37),
+                     -93.22 + rng.uniform(-.5, .5, 37)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device")
+    sys_.sim.at(0.0, pool.start)
+    sys_.sim.run(until=2_100.0)           # start + first full tick traced
+    counts0 = dict(fused_tick.COMPILE_COUNTS)
+
+    sys_.fail_node("N2", 2_200.0)
+    sys_.fail_node("N6", 4_300.0)
+    sys_.sim.run(until=6_000.0)
+    sys_.captains["N2"].recover()
+    # volunteer join: a fresh replica appears on a live node (new task,
+    # new node-epoch — static arrays rebuild, shapes must not change)
+    cap = sys_.captains["N4"]
+    t = Task(f"{SERVICE}/t_join", SERVICE, captain=cap, status="running",
+             ready_at=sys_.sim.now)
+    cap.tasks[t.task_id] = t
+    sys_.am.tasks[SERVICE].append(t)
+    sys_.am.engine.invalidate(SERVICE)
+    sys_.sim.run(until=14_000.0)
+    assert pool.ticks_run >= 6
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts0.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"fused programs re-traced under churn: {delta}"
+
+
+def test_device_tick_phase_breakdown_recorded():
+    dev, _ = _run_pool("device", n_users=20, n_nodes=12, until=4_100.0)
+    assert "fused_tick" in dev.phase_ms and "transport" in dev.phase_ms
+    host, _ = _run_pool("host", n_users=20, n_nodes=12, until=4_100.0)
+    assert {"selection", "policy", "transport"} <= set(host.phase_ms)
+
+
+def test_device_tick_guard_rails():
+    sys_ = _fluid_system(8, seed=1)
+    locs = np.zeros((4, 2)) + (44.97, -93.22)
+    for kw, msg in [
+            (dict(transport="events", selection_backend="numpy"),
+             "tick='device'"),
+            (dict(transport="fluid", selection_backend="numpy"),
+             "geo_topk"),
+            (dict(transport="fluid", selection_backend="geo_topk",
+                  mode="cloud"), "armada")]:
+        with pytest.raises(ValueError, match=msg):
+            sys_.make_client_pool(SERVICE, locs=locs, tick="device",
+                                  frame_interval_ms=500.0, **kw)
+
+
+def test_device_tick_survives_total_candidate_loss_and_recovery():
+    """Kill the whole fleet, then bring one node back: users re-enter
+    initial selection at the next tick and traffic resumes."""
+    sys_ = _fluid_system(6, seed=4, spread=0.05)
+    rng = np.random.default_rng(5)
+    locs = np.stack([44.97 + rng.uniform(-.05, .05, 15),
+                     -93.22 + rng.uniform(-.05, .05, 15)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device")
+    sys_.sim.at(0.0, pool.start)
+    for i in range(6):
+        sys_.fail_node(f"N{i}", 3_000.0 + 10 * i)
+    sys_.sim.run(until=5_000.0)
+    assert (pool.active == -1).all()
+    sys_.captains["N0"].recover()
+    sys_.sim.run(until=12_000.0)
+    assert (pool.active >= 0).all()
+    assert np.isfinite(pool.mean_latency())

@@ -8,7 +8,10 @@ import pytest
 from repro.core import geohash
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_mha_reference
-from repro.kernels.geo_topk.kernel import geo_topk_pallas
+from repro.kernels.geo_topk import tune as geo_tune
+from repro.kernels.geo_topk.kernel import (geo_topk_pallas,
+                                           geo_topk_tiled_pallas,
+                                           vmem_bytes_tiled)
 from repro.kernels.geo_topk.kernel import vmem_bytes as geo_vmem
 from repro.kernels.geo_topk.ops import geo_topk, pack_inputs
 from repro.kernels.geo_topk.ref import geo_topk_reference
@@ -262,3 +265,136 @@ def test_geo_topk_op_dispatches_to_oracle_on_cpu():
 def test_geo_topk_vmem_budget():
     # production tile: 128 users x 4096 nodes must fit half a v5e VMEM
     assert geo_vmem(128, 4096) < 64 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# node-tiled geo top-k (past the all-nodes-in-VMEM wall)
+# ---------------------------------------------------------------------------
+
+def _geo_inputs_valid(u, n, spread=0.5, seed=0, valid=None):
+    rng = np.random.default_rng(seed)
+    base = (44.97, -93.22)
+    ulat = base[0] + rng.uniform(-spread, spread, u)
+    ulon = base[1] + rng.uniform(-spread, spread, u)
+    nlat = base[0] + rng.uniform(-spread, spread, n)
+    nlon = base[1] + rng.uniform(-spread, spread, n)
+    return pack_inputs(ulat, ulon, rng.integers(0, 3, u),
+                       geohash.encode_batch(ulat, ulon, 9),
+                       nlat, nlon, rng.uniform(0, 1, n),
+                       rng.integers(0, 3, n),
+                       geohash.encode_batch(nlat, nlon, 9), valid)
+
+
+TILED_CASES = [
+    # U, N, k, block_u, node_tile — N spans multiple tiles, ragged too
+    (48, 640, 3, 16, 256),
+    (20, 1000, 5, 8, 128),
+    (8, 257, 4, 8, 128),          # ragged final tile
+    (16, 128, 3, 8, 128),         # single tile degenerates cleanly
+]
+
+
+@pytest.mark.parametrize("case", TILED_CASES)
+def test_geo_topk_tiled_matches_oracle(case):
+    u, n, k, bu, nt = case
+    packed = _geo_inputs_valid(u, n, seed=u + n)
+    need = min(4, n)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=k, need=need)
+    s_t, i_t = geo_topk_tiled_pallas(*packed, k=k, need=need, block_u=bu,
+                                     node_tile=nt, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_ref))
+
+
+def test_geo_topk_tiled_ties_at_tile_boundary():
+    """Equal-score nodes straddling a tile edge must resolve to the
+    lowest global index, exactly like ``lax.top_k`` over the full row."""
+    u, n, nt = 8, 384, 128
+    packed = _geo_inputs_valid(u, n, seed=5)
+    # clone node 126's full scoring identity across the 128-boundary
+    for fld in ("node_lat", "node_lon", "node_free", "node_code20"):
+        arr = getattr(packed, fld)
+        arr[125:132] = arr[126]
+    packed.node_aff[:, 125:132] = packed.node_aff[:, 126:127]
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=6, need=4)
+    s_t, i_t = geo_topk_tiled_pallas(*packed, k=6, need=4, block_u=8,
+                                     node_tile=nt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               atol=1e-5)
+
+
+def test_geo_topk_tiled_all_invalid_tiles():
+    """Whole-tile invalid spans (churned-out nodes / jit padding) and the
+    fully-invalid query both match the reference."""
+    u, n, nt = 12, 512, 128
+    valid = np.ones(n, np.float32)
+    valid[128:256] = 0.0                     # one entirely dead tile
+    valid[500:] = 0.0
+    packed = _geo_inputs_valid(u, n, seed=9, valid=valid)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=4, need=4)
+    s_t, i_t = geo_topk_tiled_pallas(*packed, k=4, need=4, block_u=8,
+                                     node_tile=nt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_ref))
+
+    packed = _geo_inputs_valid(u, n, seed=10,
+                               valid=np.zeros(n, np.float32))
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=3, need=4)
+    s_t, i_t = geo_topk_tiled_pallas(*packed, k=3, need=4, block_u=8,
+                                     node_tile=nt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_ref))
+    assert (np.asarray(s_t) < -1e29).all()
+
+
+def test_geo_topk_tiled_validates_at_64k_nodes():
+    """The acceptance regime: N >= 64k — far past the untiled kernel's
+    VMEM wall — still matches the reference exactly."""
+    u, n = 8, 65536
+    packed = _geo_inputs_valid(u, n, seed=3)
+    s_ref, i_ref = geo_topk_reference(
+        *[jnp.asarray(a) for a in packed], k=8, need=4)
+    s_t, i_t = geo_topk_tiled_pallas(*packed, k=8, need=4, block_u=8,
+                                     node_tile=8192, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_t), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_geo_topk_tiled_vmem_independent_of_n():
+    # the tiled budget is a function of the tile, not the fleet size —
+    # this is what lifts the N ≲ 16k cap to 100k+ nodes
+    assert vmem_bytes_tiled(128, 2048) < 64 * 2**20
+    assert vmem_bytes_tiled(256, 8192) < 64 * 2**20
+    assert geo_vmem(128, 131072) > 64 * 2**20      # untiled would not fit
+
+
+def test_geo_topk_autotune_smoke_end_to_end(monkeypatch, tmp_path):
+    """The registered ``bench_autotune --smoke`` profile: a tiny
+    interpret-mode sweep must run both layouts, cache a winner, and the
+    dispatcher must serve it.  Cache and artifact are sandboxed so the
+    smoke winner can't leak into other tests or the working tree."""
+    import benchmarks.bench_autotune as ba
+    monkeypatch.setattr(ba, "CACHE_PATH", tmp_path / "geo_topk.json")
+    geo_tune.clear_cache()
+    try:
+        rows = ba.run(smoke=True)
+        assert rows and any("winner=True" in r[2] for r in rows)
+        assert (tmp_path / "geo_topk.json").exists()
+        u, n, k = 128, 512, 4
+        cfg = geo_tune.get_config(u, n, k)
+        assert geo_tune.cache_key(u, n, k) in geo_tune._CACHE
+        assert cfg in geo_tune.candidate_configs(u, n, k) + \
+            [(32, None), (32, 256)]
+        # winner actually dispatches through ops.geo_topk
+        packed = _geo_inputs_valid(u, n, seed=1)
+        s, i = geo_topk(packed, k=k, force_pallas=True, interpret=True)
+        s_ref, i_ref = geo_topk_reference(
+            *[jnp.asarray(a) for a in packed], k=k, need=4)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    finally:
+        geo_tune.clear_cache()
