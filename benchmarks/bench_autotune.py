@@ -28,8 +28,8 @@ CACHE_PATH = pathlib.Path(__file__).resolve().parents[1] \
 # (U, N, k) shape buckets of interest: the pool refresh (wide U, metro
 # node counts) and the past-the-VMEM-wall regime the tiled kernel opens
 FULL_SWEEP = [(8192, 4096, 8), (8192, 32768, 8), (4096, 131072, 8)]
-SMOKE_SWEEP = [(128, 512, 4)]
-SMOKE_CONFIGS = [(32, None), (32, 256)]
+SMOKE_SWEEP = [(32, 128, 4)]            # interpreter-priced: keep tiny
+SMOKE_CONFIGS = [(32, None), (32, 64)]
 
 
 def run(smoke: bool = False):

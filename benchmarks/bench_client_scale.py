@@ -120,8 +120,10 @@ def _bench_case(n_users: int, n_nodes: int, n_ticks: int,
 
 def run(smoke: bool = False):
     if smoke:
-        sweep = [(2_000, 100, 5, "numpy"),
-                 (2_000, 100, 5, "device")]
+        # seconds-scale tier-1 profile: small enough that jit compilation,
+        # not the swept population, is the dominant cost
+        sweep = [(256, 64, 4, "numpy"),
+                 (256, 64, 4, "device")]
     else:
         # numpy wins at small N (no jit round-trip); the fused geo_topk
         # oracle takes over once U x N scoring dominates the tick, and

@@ -1,0 +1,197 @@
+"""Region-sharded selection vs the global engine (paper §3.1 scale-out).
+
+The paper scales Beacon by replicating it per coarse geographic region,
+each replica tracking only nearby nodes.  This bench builds an
+edge-dense multi-metro fleet — ``n_regions`` city clusters of
+``n_per_region`` nodes each, users concentrated around the same cities
+with a small roaming fraction between them — and times one full
+selection pass (every user, ``candidate_indices_kernel``, chunked) on:
+
+* ``global``  — the unsharded ``SelectionEngine``: every user chunk
+  scores the full N-node padded layout;
+* ``sharded`` — ``shard_precision=3``: each user chunk scores only its
+  home-region shard (filter restricted to the shard prefix), border
+  users escalate to one cross-shard pass.
+
+Both engines are asserted decision-identical before timing.  ``derived``
+carries the evidence for the ~1/S scaling claim: ``work_frac`` is the
+sharded pass's scored (user × node-pad) pairs over the global pass's —
+per-shard scoring cost drops to O(U·N/S + border overlap) — plus the
+shard count and the border fraction.  A numpy-engine pair at reduced
+scale covers the non-kernel path.
+
+``run(smoke=True)`` (or ``--smoke``) is the seconds-scale profile
+exercised by tier-1 tests; the full sweep ends at the acceptance shape,
+100k users × 4 regions × 1k nodes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.selection import NET_TYPES, SelectionEngine
+
+# four metros in distinct precision-3 geohash cells
+REGIONS = ((44.97, -93.22), (41.88, -87.63), (39.74, -104.99),
+           (32.78, -96.80))
+SHARD_PRECISION = 3
+ROAM_FRAC = 0.02          # users scattered between regions (border band)
+CHUNK = 16_384            # bounds the per-call (U, N) device matrices
+
+
+class _BenchTask:
+    """Stand-in for app_manager.Task: just the fields selection reads."""
+
+    __slots__ = ("task_id", "service_id", "captain", "status")
+
+    def __init__(self, task_id, captain):
+        self.task_id = task_id
+        self.service_id = "bench"
+        self.captain = captain
+        self.status = "running"
+
+
+def _fleet(n_per_region: int, n_regions: int, seed: int):
+    from repro.core.captain import Captain
+    from repro.core.cluster import NodeSpec, Topology
+    from repro.core.sim import Simulator
+    rng = np.random.default_rng(seed)
+    sim = Simulator(seed=seed, trace_enabled=False)
+    nets = [t for t in NET_TYPES if t != "other"]
+    nodes = {}
+    for r in range(n_regions):
+        base = REGIONS[r % len(REGIONS)]
+        for i in range(n_per_region):
+            spec = NodeSpec(
+                f"R{r}N{i}",
+                (base[0] + float(rng.uniform(-0.4, 0.4)),
+                 base[1] + float(rng.uniform(-0.4, 0.4))),
+                proc_ms=float(rng.uniform(20, 60)),
+                slots=int(rng.integers(1, 5)),
+                net_type=nets[int(rng.integers(len(nets)))])
+            nodes[spec.node_id] = spec
+    topo = Topology(nodes, {})
+    tasks = []
+    for i, spec in enumerate(nodes.values()):
+        cap = Captain(sim, topo, spec)
+        cap.busy = int(rng.integers(0, spec.slots + 1))
+        tasks.append(_BenchTask(f"bench/t{i}", cap))
+    return tasks
+
+
+def _users(n_users: int, n_regions: int, seed: int):
+    rng = np.random.default_rng(seed + 1)
+    region = rng.integers(0, n_regions, n_users)
+    base = np.asarray(REGIONS)[region % len(REGIONS)]
+    locs = base + rng.uniform(-0.4, 0.4, (n_users, 2))
+    roam = rng.random(n_users) < ROAM_FRAC
+    locs[roam] = (np.asarray(REGIONS).min(0)
+                  + rng.uniform(0, 1, (int(roam.sum()), 2))
+                  * np.ptp(np.asarray(REGIONS), 0))
+    nets = rng.integers(0, 3, n_users)
+    return locs, nets
+
+
+def _pass(eng: SelectionEngine, tasks, locs, nets, kernel: bool):
+    out = np.empty((len(locs), 3), np.int32)
+    for lo in range(0, len(locs), CHUNK):
+        hi = min(lo + CHUNK, len(locs))
+        if kernel:
+            out[lo:hi] = eng.candidate_indices_kernel(
+                "bench", tasks, locs[lo:hi], nets[lo:hi])
+        else:
+            out[lo:hi] = eng.candidate_indices(
+                "bench", tasks, locs[lo:hi], nets[lo:hi])
+    return out
+
+
+def _shard_stats(eng: SelectionEngine, tasks, locs, n_nodes: int):
+    """(n_shards, work_frac, border_frac): scored-pair ratio vs global."""
+    from repro.core import geohash
+    from repro.core.selection import CODE_PRECISION
+    arr = eng._arrays("bench", tasks)
+    shards = eng._shards("bench", arr)
+    u_codes = geohash.encode_batch(locs[:, 0], locs[:, 1], CODE_PRECISION)
+    u_shard = shards.route(u_codes)
+    mask, free = arr.dynamic_state()
+    run_ix = np.nonzero(mask)[0]
+    need = min(4, run_ix.size)
+    pairs = 0
+    border = 0
+    for sh in shards.shards:
+        sel = np.nonzero(u_shard == sh.code)[0]
+        if sel.size == 0 or not mask[sh.ix].any():
+            border += sel.size
+            continue
+        run_local = np.nonzero(mask[sh.ix])[0]
+        _, sat = eng._score_shard_chunk(
+            sh, run_local, free[sh.ix][run_local], locs[sel],
+            np.zeros(sel.size, np.int64), u_codes[sel], 3, need)
+        pairs += sel.size * len(sh.ix)
+        border += int((~sat).sum())
+    pairs += border * n_nodes
+    return (len(shards.shards), pairs / (len(locs) * n_nodes),
+            border / len(locs))
+
+
+def _bench_case(n_users: int, n_per_region: int, n_regions: int,
+                kernel: bool = True, seed: int = 0, repeats: int = 2):
+    n_nodes = n_per_region * n_regions
+    tasks = _fleet(n_per_region, n_regions, seed)
+    locs, nets = _users(n_users, n_regions, seed)
+    eng_g = SelectionEngine(top_n=3)
+    eng_s = SelectionEngine(top_n=3, shard_precision=SHARD_PRECISION)
+    mode = "kernel" if kernel else "numpy"
+    tag = f"sharded_selection/u{n_users}_s{n_regions}x{n_per_region}/{mode}"
+
+    # warm caches + compile, and pin decision-identity while at it
+    got_g = _pass(eng_g, tasks, locs, nets, kernel)
+    got_s = _pass(eng_s, tasks, locs, nets, kernel)
+    assert np.array_equal(got_g, got_s), \
+        "sharded engine diverged from the global engine"
+
+    def best_of(eng):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            _pass(eng, tasks, locs, nets, kernel)
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        return best
+
+    g_ms = best_of(eng_g)
+    s_ms = best_of(eng_s)
+    n_shards, work_frac, border_frac = _shard_stats(eng_s, tasks, locs,
+                                                    n_nodes)
+    return [
+        (f"{tag}/global", g_ms, f"total_nodes={n_nodes}"),
+        (f"{tag}/sharded", s_ms,
+         f"speedup={g_ms / s_ms:.2f}x;shards={n_shards};"
+         f"work_frac={work_frac:.3f};border_frac={border_frac:.4f}"),
+    ]
+
+
+def run(smoke: bool = False):
+    if smoke:
+        # numpy engine: exercises routing/border/merge + the parity
+        # assert without paying per-shard jit compiles (the kernel path's
+        # parity is pinned by tests/test_sharded_selection.py)
+        sweep = [(2_000, 32, 4, False)]
+    else:
+        sweep = [(20_000, 250, 4, False),       # numpy engine pair
+                 (100_000, 1_000, 4, True)]     # acceptance shape
+    rows = []
+    for n_users, n_per, n_regions, kernel in sweep:
+        rows.extend(_bench_case(n_users, n_per, n_regions, kernel))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale profile (small U/N)")
+    args = ap.parse_args()
+    print("name,ms_per_pass,derived")
+    for name, ms, derived in run(smoke=args.smoke):
+        print(f"{name},{ms:.1f},{derived}")

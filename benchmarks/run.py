@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.bench_heterogeneity",      # Table 5
     "benchmarks.bench_selection",          # Table 6
     "benchmarks.bench_selection_scale",    # engine scaling (beyond paper)
+    "benchmarks.bench_sharded_selection",  # region-sharded control plane
     "benchmarks.bench_client_scale",       # client-pool scaling (beyond paper)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7

@@ -63,7 +63,8 @@ class ApplicationManager:
     def __init__(self, sim: Simulator, topo: Topology, spinner: Spinner,
                  cargo_manager=None, *, top_n: int = 3,
                  scale_check_s: float = 2.0,
-                 overload_ratio: float = 1.5):
+                 overload_ratio: float = 1.5,
+                 shard_precision: Optional[int] = None):
         self.sim = sim
         self.topo = topo
         self.spinner = spinner
@@ -77,7 +78,11 @@ class ApplicationManager:
         self._ids = itertools.count()
         self.autoscale_enabled = True
         self.scale_events: List[dict] = []
-        self.engine = SelectionEngine(top_n=top_n)
+        # shard_precision partitions selection state by coarse geohash
+        # region (paper §3.1's per-region Beacon replicas); queries and
+        # invalidations are routed per shard inside the engine
+        self.engine = SelectionEngine(top_n=top_n,
+                                      shard_precision=shard_precision)
         self._autoscale_scheduled = False
 
     # ----------------------------------------------------------- deployment
@@ -105,6 +110,15 @@ class ApplicationManager:
         self.tasks[spec.service_id].append(task)
         self.engine.invalidate(spec.service_id)
         return task
+
+    def register_task(self, task: Task):
+        """Out-of-band task insertion (cloud baseline replicas, benchmark
+        fixtures): append to the service's task list AND route through
+        engine invalidation, so device-resident ``packed_static`` caches
+        rebuild for the affected region instead of relying on the lazy
+        fingerprint check alone."""
+        self.tasks.setdefault(task.service_id, []).append(task)
+        self.engine.invalidate(task.service_id)
 
     def _task_ready(self, task: Task):
         self.sim.log("task_ready", task=task.task_id,

@@ -60,13 +60,15 @@ class ArmadaSystem:
                  compute_nodes: Optional[List[str]] = None,
                  cargo_nodes: Optional[List[str]] = None,
                  include_cloud_compute: bool = True,
-                 trace_enabled: bool = True):
+                 trace_enabled: bool = True,
+                 shard_precision: Optional[int] = None):
         self.sim = Simulator(seed=seed, trace_enabled=trace_enabled)
         self.topo = topo
         self.spinner = Spinner(self.sim, topo)
         self.cargo_manager = CargoManager(self.sim, topo)
         self.am = ApplicationManager(self.sim, topo, self.spinner,
-                                     self.cargo_manager)
+                                     self.cargo_manager,
+                                     shard_precision=shard_precision)
         self.beacon = Beacon(self.am, self.spinner, self.cargo_manager)
         self.captains: Dict[str, Captain] = {}
         self.cargos: Dict[str, Cargo] = {}
@@ -99,7 +101,12 @@ class ArmadaSystem:
 
     def ensure_cloud_replica(self, service_id: str):
         """The paper's cloud baseline assumes an always-available cloud
-        deployment; Armada's own scheduler never places on the cloud."""
+        deployment; Armada's own scheduler never places on the cloud.
+        Registration routes through ``ApplicationManager.register_task``
+        so the selection engine's device-resident node caches are
+        invalidated like any other replica-set change (appending to
+        ``am.tasks`` directly would leave a stale ``packed_static`` to
+        whatever path skips the lazy fingerprint check)."""
         from repro.core.app_manager import Task
         cloud = next((c for c in self.captains.values()
                       if c.spec.is_cloud), None)
@@ -108,7 +115,7 @@ class ArmadaSystem:
         task = Task(f"{service_id}/cloud", service_id, captain=cloud,
                     status="running", ready_at=self.sim.now)
         cloud.tasks[task.task_id] = task
-        self.am.tasks[service_id].append(task)
+        self.am.register_task(task)
         return task
 
     def fail_node(self, name: str, at_ms: float):

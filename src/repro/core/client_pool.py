@@ -48,6 +48,13 @@ numpy round-trips.  The device tick reproduces the host tick's decision
 stream exactly (same fp32 scoring inputs, same xp-generic policy
 functions) and is pinned against it in tests/test_fused_tick.py.
 
+When the ``SelectionEngine`` is region-sharded (``shard_precision`` on
+the ``ApplicationManager``/``ArmadaSystem``), both tick modes route each
+user chunk to its home-region shard transparently — the host tick
+through the engine's sharded query paths, the device tick through
+per-shard fused scoring with a fixed-capacity cross-shard border pass
+(``shard_border_cap``); decisions stay identical to the unsharded pool.
+
 Scalar-parity notes (events transport) — the pool intentionally mirrors
 seed-code quirks so equivalence is exact: a user whose *initial*
 candidate query is empty retries at 500 ms but never activates (no frame
@@ -334,7 +341,8 @@ class ClientPool:
                  selection_backend: str = "numpy",
                  tick: str = "host",
                  rtt_model: Callable = default_rtt_model,
-                 record_samples: bool = True):
+                 record_samples: bool = True,
+                 shard_border_cap: Optional[int] = None):
         if transport not in ("events", "fluid"):
             raise ValueError(f"unknown transport {transport!r}")
         if selection_backend not in ("numpy", "geo_topk"):
@@ -388,6 +396,9 @@ class ClientPool:
         self.workload_scale = workload_scale
         self.rtt_model = rtt_model
         self.record_samples = record_samples
+        # device tick + region-sharded engine: rows reserved for the
+        # cross-shard border pass (None = FusedTickDriver's U/8 default)
+        self.shard_border_cap = shard_border_cap
 
         if client_ids is not None:
             self.client_ids: Optional[List[str]] = list(client_ids)

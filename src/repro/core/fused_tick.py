@@ -11,6 +11,18 @@ whole tick as ONE jitted program over the pool's SoA state:
       → two-round ``switch_decide``
       → next-window traffic masks
 
+When the ``SelectionEngine`` is region-sharded (``shard_precision``),
+the scoring step routes each user chunk to its home-region shard — one
+(U_s, Ts_pad) pass per shard over gathered node columns with the
+proximity filter restricted to the shard prefix — plus one
+fixed-capacity border pass (``shard_border_cap`` rows) over the full
+node set for users the in-shard widening cannot satisfy.  All shapes
+stay jit-stable under churn (per-shard task paddings, static user
+routing); only a shard appearing/vanishing retraces, and a border band
+larger than its capacity raises rather than dropping users.  Decisions
+remain identical to the sharded host tick (tests/test_sharded_selection
+pins this on the Fig. 8/10 scenarios).
+
 ``FusedTickState`` keeps every pool array resident on device across
 ticks (buffers are donated on accelerators, so the state updates in
 place); per tick only small dynamic vectors cross host→device (free
@@ -56,7 +68,8 @@ from repro.core.client_pool import (RTT_CLOUD_PENALTY_MS, RTT_LAST_MILE_MS,
                                     RTT_MS_PER_KM, ema_fold, failover_pick,
                                     switch_decide)
 from repro.core.selection import MIN_PROXIMITY_HITS
-from repro.kernels.geo_topk.ref import haversine_km, score_matrix
+from repro.kernels.geo_topk.ref import (haversine_km, score_matrix,
+                                        score_matrix_restricted)
 
 # trace-time counters: a body runs once per compile, so tests can assert
 # shape stability under churn (no silent recompiles)
@@ -98,6 +111,17 @@ class FusedTickState(NamedTuple):
     failovers: jnp.ndarray      # () i32
 
 
+class ShardIx(NamedTuple):
+    """One region shard's index maps inside the fused tick: the user
+    rows homed in this shard (a static partition — user locations never
+    move) and the shard's padded global task positions (content changes
+    under churn, shape does not).  The shard's user/node attribute
+    arrays are gathered from the full ``FusedTickStatic`` on device, so
+    these two index vectors are all a shard costs."""
+    user_ix: jnp.ndarray        # (Us,) i32 user rows of this shard
+    task_ix: jnp.ndarray        # (Ts_pad,) i32 global task positions, -1 pad
+
+
 class FusedTickStatic(NamedTuple):
     """Per-pool device constants (rebuilt only on node-epoch change)."""
     user_lat: jnp.ndarray       # (U,) f32
@@ -112,6 +136,7 @@ class FusedTickStatic(NamedTuple):
     task_node: jnp.ndarray      # (Tp,) i32 node index per task (-1 none)
     node_proc: jnp.ndarray      # (Np,) f32 proc_ms per node
     node_slots: jnp.ndarray     # (Np,) f32 slots per node
+    shards: Optional[Tuple[ShardIx, ...]] = None   # region-sharded scoring
 
 
 class TickOuts(NamedTuple):
@@ -124,6 +149,7 @@ class TickOuts(NamedTuple):
     probe_ok: jnp.ndarray       # (U, k) bool probes to send this window
     frame_ok: jnp.ndarray       # (U,) bool frames to send this window
     failovers: jnp.ndarray      # () i32 running total
+    border_overflow: jnp.ndarray  # () bool sharded border band > capacity
 
 
 # ---------------------------------------------------------------------------
@@ -268,8 +294,58 @@ def _base_rtt(static, tasks):
 # jitted programs
 # ---------------------------------------------------------------------------
 
+def _sharded_candidates(static, free, sched, need, k, p_min, border_cap,
+                        tick_mask):
+    """Region-sharded candidate refresh: each shard's users score only
+    that shard's gathered node columns (filter restricted to
+    ``p >= p_min``); the border band — users the in-shard widening could
+    not satisfy — is gathered into a fixed-capacity buffer
+    (``border_cap`` rows, jit-stable) and scored against the full node
+    set with the unrestricted filter.  Per-shard (U_s, k) results merge
+    by scatter in global task-position space; ``lax.top_k``'s min-index
+    ties match the unsharded pass because shard task columns keep
+    ascending global order.  Returns ``(new_cand, border_overflow)`` —
+    an overflowing border band means dropped users, so the driver
+    raises with the remedy instead of serving wrong candidates."""
+    u = static.user_lat.shape[0]
+    new_cand = jnp.full((u, k), -1, jnp.int32)
+    sat_all = jnp.zeros(u, bool)
+    for sh in static.shards:
+        safe_t = jnp.clip(sh.task_ix, 0)
+        t_ok = (sh.task_ix >= 0).astype(jnp.float32)
+        s_scores, sat = score_matrix_restricted(
+            static.user_lat[sh.user_ix], static.user_lon[sh.user_ix],
+            static.user_net[sh.user_ix], static.user_code20[sh.user_ix],
+            static.task_lat[safe_t], static.task_lon[safe_t],
+            free[safe_t] * t_ok, static.task_aff[:, safe_t],
+            static.task_code20[safe_t], sched[safe_t] * t_ok, need, p_min)
+        kk = min(k, sh.task_ix.shape[0])
+        top_s, top_i = jax.lax.top_k(s_scores, kk)
+        g = sh.task_ix[top_i]
+        cand_s = jnp.where(top_s > -1e29, g.astype(jnp.int32), -1)
+        if kk < k:
+            cand_s = jnp.pad(cand_s, ((0, 0), (0, k - kk)),
+                             constant_values=-1)
+        new_cand = new_cand.at[sh.user_ix].set(cand_s)
+        sat_all = sat_all.at[sh.user_ix].set(sat)
+    border = tick_mask & ~sat_all
+    b_count = border.sum()
+    # fill_value=u: out-of-range rows are dropped by the scatter below
+    b_ix, = jnp.nonzero(border, size=border_cap, fill_value=u)
+    safe_b = jnp.clip(b_ix, 0, u - 1)
+    b_scores = score_matrix(
+        static.user_lat[safe_b], static.user_lon[safe_b],
+        static.user_net[safe_b], static.user_code20[safe_b],
+        static.task_lat, static.task_lon, free, static.task_aff,
+        static.task_code20, sched, need)
+    top_s, top_i = jax.lax.top_k(b_scores, k)
+    cand_b = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+    new_cand = new_cand.at[b_ix].set(cand_b)
+    return new_cand, b_count > border_cap
+
+
 def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
-               alpha, margin):
+               alpha, margin, p_min, border_cap):
     COMPILE_COUNTS["tick"] += 1
     u, k = state.cand.shape
     rows = jnp.arange(u)
@@ -285,15 +361,21 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
         state, enodes, evals, tn, alpha)
 
     # 3. candidate refresh: fused scoring + top-k (lax.top_k — the exact
-    #    op the geo_topk kernel path dispatches to, same min-index ties;
-    #    one pass over the (U, Tp) score matrix)
+    #    op the geo_topk kernel path dispatches to, same min-index ties) —
+    #    one (U, Tp) pass unsharded, or per-shard (U_s, Ts_pad) passes
+    #    plus the fixed-capacity border pass when the engine is sharded
     tick_mask = state.running & state.ticking
-    scores = score_matrix(
-        static.user_lat, static.user_lon, static.user_net,
-        static.user_code20, static.task_lat, static.task_lon, free,
-        static.task_aff, static.task_code20, sched, need)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    new_cand = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+    if static.shards is None:
+        scores = score_matrix(
+            static.user_lat, static.user_lon, static.user_net,
+            static.user_code20, static.task_lat, static.task_lon, free,
+            static.task_aff, static.task_code20, sched, need)
+        top_s, top_i = jax.lax.top_k(scores, k)
+        new_cand = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+        border_overflow = jnp.zeros((), bool)
+    else:
+        new_cand, border_overflow = _sharded_candidates(
+            static, free, sched, need, k, p_min, border_cap, tick_mask)
     cand = jnp.where(tick_mask[:, None], new_cand, cand)
 
     # users who lost every candidate re-enter initial selection: active
@@ -335,7 +417,7 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
     outs = TickOuts(cand=cand, active=active, pending=pending,
                     confirm=confirm, from_node=act_node,
                     probe_ok=probe_ok, frame_ok=frame_ok,
-                    failovers=failovers)
+                    failovers=failovers, border_overflow=border_overflow)
     return new_state, outs
 
 
@@ -395,7 +477,8 @@ def _flush_impl(state, static, deaths, n_deaths, alpha):
         lat_frame=jnp.full((u, nf), jnp.nan, jnp.float32))
 
 
-_fused_tick = jax.jit(_tick_impl, donate_argnums=_DONATE)
+_fused_tick = jax.jit(_tick_impl, donate_argnums=_DONATE,
+                      static_argnames=("p_min", "border_cap"))
 _fused_traffic = jax.jit(_traffic_impl, donate_argnums=_DONATE)
 _fused_flush = jax.jit(_flush_impl, donate_argnums=_DONATE)
 
@@ -422,6 +505,21 @@ class FusedTickDriver:
         self.state: Optional[FusedTickState] = None
         self.nf = int(pool.probe_period // pool.frame_interval)
         self._stash_dirty = False       # an unfolded window is stashed
+        # region sharding (engine-configured): static user→shard routing
+        # plus the two static knobs the jitted tick needs
+        self._u_shard = None            # (precision, (U,) home shard codes)
+        self.p_min = 0                  # 0 = unsharded scoring
+        self.border_cap = 0
+
+    def _default_border_cap(self) -> int:
+        """Fixed border-band capacity: the cross-shard pass costs
+        O(border_cap × N) every tick regardless of how many users are
+        actually in the band, so it defaults to U/8 (128-aligned) —
+        generous for region-clustered populations, overridable via
+        ``ClientPool(shard_border_cap=...)``.  Overflow raises rather
+        than dropping users."""
+        u = self.pool.n_users
+        return min(u, max(128, -(-u // 8 // 128) * 128))
 
     # ------------------------------------------------------------ setup
 
@@ -465,8 +563,46 @@ class FusedTickDriver:
             task_lat=st.lat, task_lon=st.lon, task_aff=st.aff,
             task_code20=st.code20, task_cloud=st.cloud,
             task_node=jnp.asarray(tn), node_proc=jnp.asarray(proc),
-            node_slots=jnp.asarray(slots))
+            node_slots=jnp.asarray(slots),
+            shards=self._build_shards())
         self._epoch = view.epoch
+
+    def _build_shards(self) -> Optional[tuple]:
+        """Per-shard index maps for the sharded scoring step (None when
+        the engine is unsharded).  User→shard routing is computed once —
+        locations never move; a shard's ``task_ix`` content changes under
+        churn while its padded shape stays put (reused device arrays via
+        the engine's per-shard adoption).  A shard appearing or vanishing
+        changes the static pytree and retraces the tick once — a rare,
+        coarse-region event, unlike per-tick churn."""
+        pool = self.pool
+        engine = pool.am.engine
+        shard_view = engine.shard_view(
+            pool.service_id, pool.am.tasks.get(pool.service_id, ()))
+        if shard_view is None:
+            self.p_min = 0
+            self.border_cap = 0
+            return None
+        if self._u_shard is None or self._u_shard[0] != shard_view.precision:
+            from repro.core import geohash
+            from repro.core.selection import CODE_PRECISION
+            codes = geohash.encode_batch(pool.locs[:, 0], pool.locs[:, 1],
+                                         CODE_PRECISION)
+            self._u_shard = (shard_view.precision, shard_view.route(codes))
+        u_shard = self._u_shard[1]
+        entries = []
+        for sh in shard_view.shards:
+            user_ix = np.nonzero(u_shard == sh.code)[0]
+            if user_ix.size == 0:
+                continue        # border pass covers its nodes if needed
+            entries.append(ShardIx(
+                user_ix=jnp.asarray(user_ix, jnp.int32),
+                task_ix=jnp.asarray(sh.task_ix_padded(self.node_pad))))
+        self.p_min = shard_view.precision
+        self.border_cap = pool.shard_border_cap \
+            if pool.shard_border_cap is not None \
+            else self._default_border_cap()
+        return tuple(entries)
 
     def init_state(self):
         """Upload the pool mirrors (populated by the host-side initial
@@ -519,8 +655,14 @@ class FusedTickDriver:
         t0 = time.perf_counter()
         self.state, outs = _fused_tick(
             self.state, self.static, free, sched, alive, need, deaths,
-            n_deaths, pool.alpha, pool.switch_margin)
+            n_deaths, pool.alpha, pool.switch_margin,
+            p_min=self.p_min, border_cap=self.border_cap)
         self._stash_dirty = False       # tick folded the previous window
+        if bool(outs.border_overflow):
+            raise RuntimeError(
+                f"fused tick: border band exceeded {self.border_cap} "
+                "users — restart the pool with a larger shard_border_cap "
+                "(or a coarser shard_precision)")
         cand = np.asarray(outs.cand)
         active = np.asarray(outs.active)
         probe_ok = np.asarray(outs.probe_ok)

@@ -1,34 +1,59 @@
-"""Batched performance-aware edge selection (paper §3.2, Algorithm 1).
+"""Batched, region-sharded performance-aware edge selection (paper
+§3.1-3.2, Algorithm 1).
 
 The paper's 2-step selection scores each running replica per user:
 
     score = w1 * free_resources + w2 * net_affinity + w3 * proximity
 
-after an adaptive-precision geohash proximity filter.  The seed repo ran
-this as scalar Python per (user, replica) pair — fine for 5-15 users,
-hostile to millions.  ``SelectionEngine`` keeps the exact semantics but
-runs it on arrays:
+after an adaptive-precision geohash proximity filter, and scales the
+control plane by replicating Beacon per coarse geographic region so each
+replica tracks only nearby nodes.  ``SelectionEngine`` implements both
+halves on arrays:
 
-* per-service node arrays (lat/lon, Morton geohash codes, net-type index,
-  slot counts) are cached and rebuilt only when the replica set changes
-  (captain join / task spawn / cancel — detected by fingerprint and by
-  explicit ``invalidate`` calls from the ApplicationManager);
-* per-query dynamic state (alive/running mask, free-slot fractions) is
-  one O(N) sweep, amortized over the whole user batch;
+* **Global view** — per-service node arrays (lat/lon, Morton geohash
+  codes, net-type index, cloud/dedicated flags) are cached per replica-set
+  fingerprint and rebuilt only on change (captain join / task spawn /
+  cancel — detected lazily and by explicit ``invalidate`` calls);
+  per-query dynamic state (running mask, free-slot fractions) is one O(N)
+  sweep amortized over the whole user batch.
+* **Region shards** (``shard_precision=1..4``) — the replica set is
+  partitioned by Morton-code prefix into per-shard ``_ServiceArrays``
+  (``_ShardSet``), each with its *own* ``packed_static`` device cache, so
+  a replica-set change in one region leaves every other shard's device
+  arrays untouched (``_Shard.adopt`` carries them across rebuilds).  A
+  query routes each user chunk to its home-region shard and scores only
+  that shard's nodes with the proximity filter restricted to precisions
+  ``p >= shard_precision``.  Because geohash cells nest, a user's p-cell
+  for ``p >= shard_precision`` lies entirely inside their home shard, so
+  in-shard hit counts equal global hit counts and a satisfied user's
+  filter level, mask and scores are *exactly* the unsharded engine's.
+  Users the in-shard widening cannot satisfy (the **border band**: near a
+  shard boundary, in a sparse region, or needing the global no-filter
+  fallback) escalate to a cross-shard pass over the adjacent shards'
+  union (the full node set), which reproduces the unsharded computation
+  verbatim.  Per-shard (U, k) index matrices are merged back in global
+  task-position space — within a shard, tasks keep ascending global
+  order, so score ties resolve exactly like the unsharded stable argsort.
+  Per-shard scoring cost is O(U·N/S + border overlap) instead of O(U·N).
 * ``candidate_list`` serves the existing single-user API;
   ``candidate_lists`` scores a U×N matrix and returns per-user top-k in
-  one shot (used by ``Beacon.query_service_batch`` and the autoscaler);
-* the U×N scoring can optionally run through the fused
+  one shot (used by ``Beacon.query_service_batch`` and the autoscaler).
+* The scoring can optionally run through the fused
   ``repro.kernels.geo_topk`` op (jnp oracle on CPU, Pallas on TPU):
-  ``candidate_indices_device`` returns device arrays with no numpy
-  materialization (the fused probe tick's path), and the padded node
-  half of the query is cached per node-epoch on the service view
-  (``packed_static``) so only (U,)-sized user arrays and two (N,)
-  dynamic vectors move per tick.
+  ``candidate_indices_device`` returns device arrays (the fused probe
+  tick's path; its sharded variant syncs only a small per-shard
+  "satisfied" mask to the host), and the padded node half of the query is
+  cached per node-epoch per shard (``packed_static``) so only (U,)-sized
+  user arrays and per-shard (N_s,) dynamic vectors move per tick.
+  ``repro.core.fused_tick`` fuses the same per-shard layout into the
+  device-resident probe tick with jit-stable shapes under churn.
 
 ``candidate_list_scalar`` preserves the pre-refactor scalar scorer
-verbatim; parity tests and ``benchmarks/bench_selection_scale.py`` pin
-the engine's ranking against it.
+verbatim; parity tests (``tests/test_selection.py``,
+``tests/test_sharded_selection.py``) pin the engine's ranking against it
+and the sharded engine against the unsharded one, including cross-shard
+border ties; ``benchmarks/bench_sharded_selection.py`` measures the 1/S
+scaling.
 """
 from __future__ import annotations
 
@@ -69,19 +94,51 @@ def net_index(net_type: str) -> int:
 
 def parse_nets(user_nets, n_users: int) -> np.ndarray:
     """Coerce a net-type spec to an (U,) int64 index array: a single
-    string (applied to every user), a pre-mapped integer array, or a
-    sequence of net-type strings."""
+    string (applied to every user), a pre-mapped integer sequence (list,
+    tuple or ndarray), or a sequence of net-type strings.
+
+    Pre-mapped indices are validated against ``NET_TYPES`` — a plain
+    Python list of ints used to fall through the string branch and map
+    every entry to "other" silently."""
     if isinstance(user_nets, str):
         return np.full(n_users, net_index(user_nets), np.int64)
-    if isinstance(user_nets, np.ndarray) and \
-            np.issubdtype(user_nets.dtype, np.integer):
-        nets = user_nets.astype(np.int64)
+    arr = np.asarray(user_nets)
+    if np.issubdtype(arr.dtype, np.integer):
+        nets = arr.astype(np.int64)
+        if nets.size and (nets.min() < 0 or nets.max() >= len(NET_TYPES)):
+            raise ValueError(
+                f"net index out of range [0, {len(NET_TYPES)}): "
+                f"{nets[(nets < 0) | (nets >= len(NET_TYPES))][:5]}")
     else:
         nets = np.asarray([net_index(n) for n in user_nets], np.int64)
     if len(nets) != n_users:
         raise ValueError(
             f"user_nets has {len(nets)} entries for {n_users} users")
     return nets
+
+
+def _score_rows(lat, lon, net_idx, free, users, nets) -> np.ndarray:
+    """Unfiltered (U, N) float64 Algorithm-1 scores for a user chunk
+    against node attribute rows.  Single source for the numpy scoring
+    arithmetic — the global and per-shard scorers must stay bit-identical
+    for the sharded engine's decision parity to hold."""
+    d = geohash.distance_km_batch(users[:, 0:1], users[:, 1:2],
+                                  lat[None, :], lon[None, :])
+    prox = 1.0 / (1.0 + d / 10.0)
+    aff = AFFINITY_TABLE[net_idx[None, :], nets[:, None]]
+    return (W_RESOURCE * free[None, :] + W_AFFINITY * aff
+            + W_PROXIMITY * prox)
+
+
+def _rank_local(scores: np.ndarray, local: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stable descending rank of filtered scores: ``(order, n_local)``.
+    The stable argsort matches Python's stable sort on score ties —
+    shared by the global and per-shard scorers so cross-shard merges
+    tie-break identically."""
+    masked = np.where(local, scores, -np.inf)
+    order = np.argsort(-masked, axis=1, kind="stable")[:, :k]
+    return order, local.sum(axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +269,20 @@ class _ServiceArrays:
         self._packed[node_pad] = packed
         return packed
 
+    def padded_sched(self, mask: np.ndarray, free: np.ndarray,
+                     node_pad: int = 256
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(free_p, sched) in the kernel's padded layout, from an
+        already-computed ``dynamic_state`` sweep (the single source for
+        this padding — callers that did the O(N) sweep themselves must
+        not restate it)."""
+        st = self.packed_static(node_pad)
+        free_p = np.zeros(st.n_pad, np.float32)
+        free_p[:st.n] = free
+        sched = np.zeros(st.n_pad, np.float32)
+        sched[:st.n] = mask
+        return free_p, sched
+
     def padded_dynamic(self, node_pad: int = 256
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-tick (free, valid_sched, valid_alive) padded to match
@@ -219,13 +290,9 @@ class _ServiceArrays:
         + alive — what selection scores) and alive mask (what the client
         data plane may still talk to)."""
         mask, free = self.dynamic_state()
-        st = self.packed_static(node_pad)
-        free_p = np.zeros(st.n_pad, np.float32)
-        free_p[:st.n] = free
-        sched = np.zeros(st.n_pad, np.float32)
-        sched[:st.n] = mask
-        alive = np.zeros(st.n_pad, bool)
-        alive[:st.n] = self.alive_mask()
+        free_p, sched = self.padded_sched(mask, free, node_pad)
+        alive = np.zeros(free_p.shape[0], bool)
+        alive[:len(self.tasks)] = self.alive_mask()
         return free_p, sched, alive
 
 
@@ -235,21 +302,115 @@ def _fingerprint(tasks: Sequence[object]) -> Tuple:
 
 
 # ---------------------------------------------------------------------------
+# Region shards (paper §3.1: per-region Beacon replicas)
+# ---------------------------------------------------------------------------
+
+class _Shard:
+    """One Morton-prefix region of a service's replica set: a child
+    ``_ServiceArrays`` over the shard's tasks plus the mapping back to
+    global task-list positions (``ix``, ascending — so per-shard stable
+    sorts tie-break exactly like the global one)."""
+
+    def __init__(self, code: int, ix: np.ndarray, tasks: Sequence[object]):
+        self.code = int(code)
+        self.ix = ix
+        self.arrays = _ServiceArrays(tasks)
+        self._task_ix_pad: Dict[int, np.ndarray] = {}
+
+    def adopt(self, prev: "_Shard"):
+        """Carry the device-resident caches over from a predecessor whose
+        membership fingerprint is identical — a replica-set change in
+        another region must not repack this shard's node arrays."""
+        self.arrays._packed = prev.arrays._packed
+        self.arrays.epoch = prev.arrays.epoch
+        self._task_ix_pad = prev._task_ix_pad
+
+    def task_ix_padded(self, node_pad: int = 256) -> np.ndarray:
+        """(n_pad,) int32 global task positions, -1 beyond the shard —
+        the local→global index map for kernel-path top-k results, padded
+        exactly like ``packed_static`` so churn never changes jit shapes."""
+        out = self._task_ix_pad.get(node_pad)
+        if out is None:
+            n = len(self.ix)
+            n_pad = max(node_pad, -(-n // node_pad) * node_pad)
+            out = np.full(n_pad, -1, np.int32)
+            out[:n] = self.ix
+            self._task_ix_pad[node_pad] = out
+        return out
+
+    def padded_dynamic(self, mask: np.ndarray, free: np.ndarray,
+                       node_pad: int = 256
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-tick (free, sched) for this shard, sliced from the parent
+        O(N) sweep and padded to the shard's kernel layout."""
+        return self.arrays.padded_sched(mask[self.ix], free[self.ix],
+                                        node_pad)
+
+
+class _ShardSet:
+    """Partition of one service's task list by Morton-code prefix at
+    ``precision`` chars.  Rebuilt when the parent view changes, but
+    shards whose own membership is unchanged adopt their predecessor's
+    device caches — invalidation is effectively routed to the one shard
+    whose region actually changed."""
+
+    def __init__(self, parent: _ServiceArrays, precision: int,
+                 prev: Optional["_ShardSet"] = None):
+        self.parent_epoch = parent.epoch
+        self.precision = precision
+        shift = 5 * (CODE_PRECISION - precision)
+        shard_code = parent.codes >> shift
+        prev_by_code = {}
+        if prev is not None and prev.precision == precision:
+            prev_by_code = {s.code: s for s in prev.shards}
+        self.shards: List[_Shard] = []
+        for code in np.unique(shard_code):
+            ix = np.nonzero(shard_code == code)[0]
+            sh = _Shard(code, ix, [parent.tasks[i] for i in ix])
+            old = prev_by_code.get(int(code))
+            if old is not None and len(old.ix) == len(ix) \
+                    and old.arrays.fingerprint == sh.arrays.fingerprint \
+                    and np.array_equal(old.ix, ix):
+                sh.adopt(old)
+            self.shards.append(sh)
+
+    def route(self, u_codes: np.ndarray) -> np.ndarray:
+        """(U,) home-shard prefix code per user (full-precision codes)."""
+        return u_codes >> np.int64(5 * (CODE_PRECISION - self.precision))
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
 class SelectionEngine:
-    def __init__(self, *, top_n: int = 3, user_chunk: int = 8192):
+    def __init__(self, *, top_n: int = 3, user_chunk: int = 8192,
+                 shard_precision: Optional[int] = None):
+        if shard_precision is not None and not \
+                1 <= shard_precision <= PROXIMITY_PRECISION:
+            raise ValueError(
+                f"shard_precision must be in [1, {PROXIMITY_PRECISION}] "
+                f"(got {shard_precision}) — shards are aligned to the "
+                "proximity filter's geohash cells")
         self.top_n = top_n
         self.user_chunk = user_chunk        # bounds the U×N score matrices
+        self.shard_precision = shard_precision
         self._cache: Dict[str, _ServiceArrays] = {}
+        self._shard_cache: Dict[str, _ShardSet] = {}
 
     # ------------------------------------------------------------- caching
 
     def invalidate(self, service_id: Optional[str] = None):
-        """Drop cached node arrays (replica set changed)."""
+        """Drop cached node arrays (replica set changed).  A per-service
+        invalidate keeps that service's shard set: the next query diffs
+        per-shard fingerprints and rebuilds only the shards whose
+        membership actually changed (the others adopt their device
+        caches), so invalidation is region-routed.  A full
+        ``invalidate()`` releases everything, shard sets included —
+        the teardown path."""
         if service_id is None:
             self._cache.clear()
+            self._shard_cache.clear()
         else:
             self._cache.pop(service_id, None)
 
@@ -260,6 +421,23 @@ class SelectionEngine:
             arr = _ServiceArrays(tasks)
             self._cache[service_id] = arr
         return arr
+
+    def _shards(self, service_id: str, arr: _ServiceArrays) -> _ShardSet:
+        cur = self._shard_cache.get(service_id)
+        if cur is None or cur.parent_epoch != arr.epoch \
+                or cur.precision != self.shard_precision:
+            cur = _ShardSet(arr, self.shard_precision, prev=cur)
+            self._shard_cache[service_id] = cur
+        return cur
+
+    def shard_view(self, service_id: str,
+                   tasks: Sequence[object]) -> Optional[_ShardSet]:
+        """Current region partition of the replica set (None when the
+        engine is unsharded) — the fused tick's window into the shard
+        layout."""
+        if self.shard_precision is None:
+            return None
+        return self._shards(service_id, self._arrays(service_id, tasks))
 
     # ------------------------------------------------------------- queries
 
@@ -303,12 +481,88 @@ class SelectionEngine:
         if run_ix.size == 0:
             return out
         kk = min(k, run_ix.size)
+        if self.shard_precision is not None:
+            self._indices_sharded(service_id, arr, mask, free, run_ix,
+                                  users, nets, kk, out)
+            return out
         for lo in range(0, u_total, self.user_chunk):
             hi = min(lo + self.user_chunk, u_total)
             out[lo:hi, :kk] = self._score_chunk(arr, run_ix, free[run_ix],
                                                 users[lo:hi], nets[lo:hi],
                                                 kk)
         return out
+
+    def _indices_sharded(self, service_id: str, arr: _ServiceArrays,
+                         mask: np.ndarray, free: np.ndarray,
+                         run_ix: np.ndarray, users: np.ndarray,
+                         nets: np.ndarray, kk: int, out: np.ndarray):
+        """Region-sharded Algorithm 1: each user chunk scores only its
+        home-region shard; users the in-shard proximity widening cannot
+        satisfy (the border band) escalate to one cross-shard pass over
+        the full node set.  Fills ``out`` in place — decision-identical
+        to the unsharded chunk loop (see the module docstring for the
+        nesting argument)."""
+        need = min(MIN_PROXIMITY_HITS, run_ix.size)
+        u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
+                                       CODE_PRECISION)
+        shards = self._shards(service_id, arr)
+        u_shard = shards.route(u_codes)
+        sat_all = np.zeros(len(users), bool)
+        for sh in shards.shards:
+            sel = np.nonzero(u_shard == sh.code)[0]
+            if sel.size == 0:
+                continue
+            run_local = np.nonzero(mask[sh.ix])[0]
+            if run_local.size == 0:
+                continue            # nothing running here: all border
+            free_sub = free[sh.ix][run_local]
+            for lo in range(0, sel.size, self.user_chunk):
+                s = sel[lo:lo + self.user_chunk]
+                idx, sat = self._score_shard_chunk(
+                    sh, run_local, free_sub, users[s], nets[s],
+                    u_codes[s], kk, need)
+                rows = s[sat]
+                out[rows, :kk] = idx[sat]
+                sat_all[rows] = True
+        border = np.nonzero(~sat_all)[0]
+        for lo in range(0, border.size, self.user_chunk):
+            b = border[lo:lo + self.user_chunk]
+            out[b, :kk] = self._score_chunk(arr, run_ix, free[run_ix],
+                                            users[b], nets[b], kk)
+
+    def _score_shard_chunk(self, sh: _Shard, run_local: np.ndarray,
+                           free: np.ndarray, users: np.ndarray,
+                           nets: np.ndarray, u_codes: np.ndarray,
+                           k: int, need: int
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """One user chunk against one shard, proximity filter restricted
+        to ``p >= shard_precision``.  Returns ``(idx, sat)``: (U, k)
+        global task positions (-1 padded) and the per-user satisfied
+        mask.  Unsatisfied rows carry no result — the caller escalates
+        them to the cross-shard border pass.  ``need`` is the *global*
+        running-replica hit target, so a satisfied user's filter level is
+        exactly the unsharded engine's."""
+        child = sh.arrays
+        n = run_local.size
+        u = len(users)
+        n_codes = child.codes[run_local]
+        local = np.zeros((u, n), bool)          # no fallback in-shard
+        done = np.zeros(u, bool)
+        for p in range(PROXIMITY_PRECISION, self.shard_precision - 1, -1):
+            shift = 5 * (CODE_PRECISION - p)
+            eq = (u_codes[:, None] >> shift) == (n_codes[None, :] >> shift)
+            use = (eq.sum(axis=1) >= need) & ~done
+            local = np.where(use[:, None], eq, local)
+            done |= use
+
+        scores = _score_rows(child.lat[run_local], child.lon[run_local],
+                             child.net_idx[run_local], free, users, nets)
+        kk = min(k, n)
+        order, n_local = _rank_local(scores, local, kk)
+        idx = np.full((u, k), -1, np.int32)
+        idx[:, :kk] = sh.ix[run_local[order]].astype(np.int32)
+        idx[np.arange(k)[None, :] >= np.minimum(k, n_local)[:, None]] = -1
+        return idx, done
 
     def _score_chunk(self, arr: _ServiceArrays, run_ix: np.ndarray,
                      free: np.ndarray, users: np.ndarray,
@@ -336,16 +590,8 @@ class SelectionEngine:
             local = np.where(use[:, None], eq, local)
             done |= use
 
-        d = geohash.distance_km_batch(users[:, 0:1], users[:, 1:2],
-                                      n_lat[None, :], n_lon[None, :])
-        prox = 1.0 / (1.0 + d / 10.0)
-        aff = AFFINITY_TABLE[n_net[None, :], nets[:, None]]
-        scores = (W_RESOURCE * free[None, :] + W_AFFINITY * aff
-                  + W_PROXIMITY * prox)
-        scores = np.where(local, scores, -np.inf)
-        # stable argsort matches Python's stable sort on score ties
-        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
-        n_local = local.sum(axis=1)
+        scores = _score_rows(n_lat, n_lon, n_net, free, users, nets)
+        order, n_local = _rank_local(scores, local, k)
         idx = run_ix[order].astype(np.int32)
         idx[np.arange(k)[None, :] >= np.minimum(k, n_local)[:, None]] = -1
         return idx
@@ -418,6 +664,15 @@ class SelectionEngine:
         the (U,) user arrays and two (n_pad,) dynamic vectors cross the
         host→device boundary per call.  fp32 scoring — ranking may
         differ from the float64 numpy path at exact-tie resolution.
+
+        With ``shard_precision`` set, each user chunk is scored against
+        its home-region shard's ``packed_static`` only (one geo_topk
+        invocation per shard) and the per-shard (U_s, k) results are
+        merged in global task-position space; border users take one
+        cross-shard pass over the full packed layout.  The sharded path
+        syncs a small per-shard "satisfied" mask to the host to size the
+        border pass — the fully-fused variant lives in
+        ``repro.core.fused_tick``.
         """
         from repro.kernels.geo_topk.ops import (GeoTopKInputs, geo_topk,
                                                 pack_user_inputs)
@@ -425,20 +680,93 @@ class SelectionEngine:
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
-        st = arr.packed_static(node_pad)
-        free_p, sched, _alive = arr.padded_dynamic(node_pad)
-        n_run = int(sched.sum())
+        mask, free = arr.dynamic_state()
+        n_run = int(mask.sum())
         if n_run == 0:
             return None
         u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
                                        CODE_PRECISION)
+        k_eff = min(k, n_run)
+        need = min(MIN_PROXIMITY_HITS, n_run)
+        if self.shard_precision is not None:
+            return self._indices_device_sharded(
+                service_id, arr, mask, free, users, nets, u_codes,
+                k_eff, need, node_pad, interpret)
+        st = arr.packed_static(node_pad)
+        free_p, sched = arr.padded_sched(mask, free, node_pad)
         packed = GeoTopKInputs(
             *pack_user_inputs(users[:, 0], users[:, 1], nets, u_codes),
             st.lat, st.lon, free_p, st.aff, st.code20, sched)
-        k_eff = min(k, n_run)
-        return geo_topk(packed, k=k_eff,
-                        need=min(MIN_PROXIMITY_HITS, n_run),
-                        interpret=interpret)
+        return geo_topk(packed, k=k_eff, need=need, interpret=interpret)
+
+    def _indices_device_sharded(self, service_id: str, arr: _ServiceArrays,
+                                mask: np.ndarray, free: np.ndarray,
+                                users: np.ndarray, nets: np.ndarray,
+                                u_codes: np.ndarray, k_eff: int, need: int,
+                                node_pad: int, interpret: bool):
+        """Sharded kernel-path scoring: per-shard ``geo_topk_shard`` over
+        each shard's cached padded layout, border users through one full
+        ``geo_topk`` pass, merged into (U, k_eff) device arrays in global
+        task-position space."""
+        import jax.numpy as jnp
+
+        from repro.kernels.geo_topk.ops import (GeoTopKInputs, geo_topk,
+                                                geo_topk_shard,
+                                                pack_user_inputs)
+        from repro.kernels.geo_topk.ref import NEG
+        u_total = len(users)
+        scores = jnp.full((u_total, k_eff), NEG, jnp.float32)
+        idx = jnp.full((u_total, k_eff), -1, jnp.int32)
+        shards = self._shards(service_id, arr)
+        u_shard = shards.route(u_codes)
+        sat_all = np.zeros(u_total, bool)
+        # dispatch every shard's kernel before the first host sync, then
+        # merge with ONE concatenated scatter — per-shard .at[].set would
+        # copy the full (U, k) buffers S times and the sat sync would
+        # serialize the shard launches
+        parts = []
+        for sh in shards.shards:
+            sel = np.nonzero(u_shard == sh.code)[0]
+            if sel.size == 0 or not mask[sh.ix].any():
+                continue            # empty / dead shard: users go border
+            st = sh.arrays.packed_static(node_pad)
+            if st.n_pad < k_eff:
+                continue            # shard smaller than k: border scores it
+            free_p, sched = sh.padded_dynamic(mask, free, node_pad)
+            packed = GeoTopKInputs(
+                *pack_user_inputs(users[sel, 0], users[sel, 1], nets[sel],
+                                  u_codes[sel]),
+                st.lat, st.lon, free_p, st.aff, st.code20, sched)
+            s, li, sat = geo_topk_shard(packed, k=k_eff, need=need,
+                                        p_min=self.shard_precision,
+                                        interpret=interpret)
+            g = jnp.asarray(sh.task_ix_padded(node_pad))[li]
+            parts.append((sel, s, g, sat))
+        rows_p, s_p, g_p = [], [], []
+        for sel, s, g, sat in parts:
+            sat_np = np.asarray(sat)
+            keep = sel[sat_np]
+            if keep.size:
+                rows_p.append(keep)
+                s_p.append(s[sat_np])
+                g_p.append(g[sat_np])
+                sat_all[keep] = True
+        if rows_p:
+            rows = np.concatenate(rows_p)
+            scores = scores.at[rows].set(jnp.concatenate(s_p))
+            idx = idx.at[rows].set(jnp.concatenate(g_p).astype(jnp.int32))
+        border = np.nonzero(~sat_all)[0]
+        if border.size:
+            st = arr.packed_static(node_pad)
+            free_p, sched = arr.padded_sched(mask, free, node_pad)
+            packed = GeoTopKInputs(
+                *pack_user_inputs(users[border, 0], users[border, 1],
+                                  nets[border], u_codes[border]),
+                st.lat, st.lon, free_p, st.aff, st.code20, sched)
+            s, i = geo_topk(packed, k=k_eff, need=need, interpret=interpret)
+            scores = scores.at[border].set(s)
+            idx = idx.at[border].set(i.astype(jnp.int32))
+        return scores, idx
 
     def candidate_indices_kernel(self, service_id: str,
                                  tasks: Sequence[object], user_locs,

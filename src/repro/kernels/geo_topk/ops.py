@@ -7,8 +7,11 @@ node half — see ``SelectionEngine``'s node-epoch cache); ``geo_topk``
 dispatches and returns per-user ``(scores, indices)`` top-k.  On TPU the
 kernel layout — untiled vs node-tiled — and its ``(block_u, node_tile)``
 come from ``repro.kernels.geo_topk.tune``'s per-backend autotune cache.
-``SelectionEngine`` in ``repro.core.selection`` maps indices back to
-Task objects.
+``geo_topk_shard`` is the region-sharded entry point: one invocation per
+shard over that shard's padded layout, filter restricted to the shard
+prefix, with a per-user "satisfied" mask so border users can escalate to
+a cross-shard pass.  ``SelectionEngine`` in ``repro.core.selection`` maps
+indices back to Task objects.
 """
 from __future__ import annotations
 
@@ -94,6 +97,37 @@ def _dispatch(packed: GeoTopKInputs, k: int, need: int, force_pallas: bool,
             return geo_topk_tiled_pallas(*packed, node_tile=node_tile, **kw)
         return geo_topk_pallas(*packed, **kw)
     return geo_topk_reference(*packed, k=k, need=need)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "need", "p_min"))
+def _dispatch_shard(packed: GeoTopKInputs, k: int, need: int, p_min: int):
+    from repro.kernels.geo_topk.ref import score_matrix_restricted
+    scores, sat = score_matrix_restricted(*packed, need=need, p_min=p_min)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i, sat
+
+
+def geo_topk_shard(packed: GeoTopKInputs, *, k: int, need: int,
+                   p_min: int, interpret: bool = False):
+    """Per-shard top-k over one region's padded node layout: the
+    adaptive proximity filter runs restricted to precisions
+    ``p >= p_min`` (the shard prefix length) with no global fallback.
+
+    Returns ``(scores, indices, satisfied)`` — ``indices`` are positions
+    into THIS shard's padded layout (callers map them to global task
+    positions via the shard's ``task_ix_padded``), and rows with
+    ``satisfied == False`` carry no result: the in-shard widening could
+    not reach ``need`` hits, so the caller must escalate them to a
+    cross-shard pass (``geo_topk`` over the adjacent shards' union).
+    ``need`` is the caller's *global* hit target — per-shard counts at
+    ``p >= p_min`` equal global counts because geohash cells nest.
+
+    jnp oracle on every backend (the per-shard matrices are already a
+    1/S slice of the work the Pallas kernels tile; ``interpret`` is
+    accepted for call-site symmetry with ``geo_topk``).
+    """
+    del interpret
+    return _dispatch_shard(packed, k, need, p_min)
 
 
 def geo_topk(packed: GeoTopKInputs, *, k: int, need: int = None,

@@ -43,25 +43,11 @@ def haversine_km(ulat, ulon, nlat, nlon):
     return 2.0 * EARTH_KM * jnp.arcsin(jnp.sqrt(jnp.clip(a, 0.0, 1.0)))
 
 
-def proximity_mask(user_code20, node_code20, node_valid, need: int):
-    """(U, N) bool: the adaptive-precision prefix filter over valid nodes."""
-    valid = node_valid[None, :] > 0
-    local = valid                                     # fallback: no filter
-    done = jnp.zeros(user_code20.shape[0], bool)
-    for p in range(PREFIX_CHARS, 0, -1):
-        shift = 5 * (PREFIX_CHARS - p)
-        eq = ((user_code20[:, None] >> shift)
-              == (node_code20[None, :] >> shift)) & valid
-        use = (eq.sum(axis=1) >= need) & ~done
-        local = jnp.where(use[:, None], eq, local)
-        done = done | use
-    return local
-
-
-def score_matrix(user_lat, user_lon, user_net, user_code20,
-                 node_lat, node_lon, node_free, node_aff, node_code20,
-                 node_valid, need: int):
-    """(U, N) fp32 scores with filtered/invalid pairs at ``NEG``."""
+def _raw_scores(user_lat, user_lon, user_net, node_lat, node_lon,
+                node_free, node_aff):
+    """Unfiltered (U, N) fp32 Algorithm-1 scores.  Single source for the
+    scoring arithmetic — the sharded/unsharded decision-parity proof
+    rests on both filters seeing bit-identical scores."""
     d = haversine_km(user_lat[:, None], user_lon[:, None],
                      node_lat[None, :], node_lon[None, :])
     prox = 1.0 / (1.0 + d / 10.0)
@@ -70,8 +56,61 @@ def score_matrix(user_lat, user_lon, user_net, user_code20,
               == lax.broadcasted_iota(jnp.int32, (user_net.shape[0], m), 1)
               ).astype(jnp.float32)
     aff = onehot @ node_aff                            # (U, N)
-    scores = (W_RESOURCE * node_free[None, :] + W_AFFINITY * aff
-              + W_PROXIMITY * prox)
+    return (W_RESOURCE * node_free[None, :] + W_AFFINITY * aff
+            + W_PROXIMITY * prox)
+
+
+def proximity_mask(user_code20, node_code20, node_valid, need: int):
+    """(U, N) bool: the adaptive-precision prefix filter over valid
+    nodes — the restricted filter down to p=1, with unsatisfied rows
+    falling back to no filter (every valid node)."""
+    local, done = proximity_mask_restricted(user_code20, node_code20,
+                                            node_valid, need, 1)
+    valid = node_valid[None, :] > 0
+    return jnp.where(done[:, None], local, valid)
+
+
+def proximity_mask_restricted(user_code20, node_code20, node_valid,
+                              need: int, p_min: int):
+    """Shard-local adaptive filter: precisions restricted to
+    ``p >= p_min`` (the shard's own prefix length), NO global fallback.
+    Returns ``(mask, satisfied)`` — unsatisfied rows stay all-False and
+    must escalate to the cross-shard border pass.  Because geohash cells
+    nest, a satisfied row's level and mask equal the unrestricted
+    ``proximity_mask`` computed over the full node set."""
+    valid = node_valid[None, :] > 0
+    u = user_code20.shape[0]
+    local = jnp.zeros((u, node_code20.shape[0]), bool)
+    done = jnp.zeros(u, bool)
+    for p in range(PREFIX_CHARS, p_min - 1, -1):
+        shift = 5 * (PREFIX_CHARS - p)
+        eq = ((user_code20[:, None] >> shift)
+              == (node_code20[None, :] >> shift)) & valid
+        use = (eq.sum(axis=1) >= need) & ~done
+        local = jnp.where(use[:, None], eq, local)
+        done = done | use
+    return local, done
+
+
+def score_matrix_restricted(user_lat, user_lon, user_net, user_code20,
+                            node_lat, node_lon, node_free, node_aff,
+                            node_code20, node_valid, need: int, p_min: int):
+    """(U, N) fp32 shard-local scores plus the (U,) satisfied mask.
+    Scores are elementwise-identical to ``score_matrix`` over the same
+    (user, node) pairs; unsatisfied rows are all ``NEG``."""
+    scores = _raw_scores(user_lat, user_lon, user_net, node_lat, node_lon,
+                         node_free, node_aff)
+    local, sat = proximity_mask_restricted(user_code20, node_code20,
+                                           node_valid, need, p_min)
+    return jnp.where(local, scores, jnp.float32(NEG)), sat
+
+
+def score_matrix(user_lat, user_lon, user_net, user_code20,
+                 node_lat, node_lon, node_free, node_aff, node_code20,
+                 node_valid, need: int):
+    """(U, N) fp32 scores with filtered/invalid pairs at ``NEG``."""
+    scores = _raw_scores(user_lat, user_lon, user_net, node_lat, node_lon,
+                         node_free, node_aff)
     local = proximity_mask(user_code20, node_code20, node_valid, need)
     return jnp.where(local, scores, jnp.float32(NEG))
 

@@ -127,8 +127,8 @@ def test_device_tick_compiles_once_under_churn():
     from repro.core import fused_tick
     sys_ = _fluid_system(16, seed=2)
     rng = np.random.default_rng(3)
-    locs = np.stack([44.97 + rng.uniform(-.5, .5, 37),
-                     -93.22 + rng.uniform(-.5, .5, 37)], axis=1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 50),
+                     -93.22 + rng.uniform(-.5, .5, 50)], axis=1)
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
         selection_backend="geo_topk", tick="device")
@@ -157,9 +157,11 @@ def test_device_tick_compiles_once_under_churn():
 
 
 def test_device_tick_phase_breakdown_recorded():
-    dev, _ = _run_pool("device", n_users=20, n_nodes=12, until=4_100.0)
+    # default shapes on purpose: reuses the parity tests' compiled
+    # programs (every fused-tick test shares U=50 / node_pad=256 / nf=4)
+    dev, _ = _run_pool("device", until=4_100.0)
     assert "fused_tick" in dev.phase_ms and "transport" in dev.phase_ms
-    host, _ = _run_pool("host", n_users=20, n_nodes=12, until=4_100.0)
+    host, _ = _run_pool("host", until=4_100.0)
     assert {"selection", "policy", "transport"} <= set(host.phase_ms)
 
 
@@ -178,13 +180,14 @@ def test_device_tick_guard_rails():
                                   frame_interval_ms=500.0, **kw)
 
 
+@pytest.mark.slow
 def test_device_tick_survives_total_candidate_loss_and_recovery():
     """Kill the whole fleet, then bring one node back: users re-enter
     initial selection at the next tick and traffic resumes."""
     sys_ = _fluid_system(6, seed=4, spread=0.05)
     rng = np.random.default_rng(5)
-    locs = np.stack([44.97 + rng.uniform(-.05, .05, 15),
-                     -93.22 + rng.uniform(-.05, .05, 15)], axis=1)
+    locs = np.stack([44.97 + rng.uniform(-.05, .05, 50),
+                     -93.22 + rng.uniform(-.05, .05, 50)], axis=1)
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
         selection_backend="geo_topk", tick="device")

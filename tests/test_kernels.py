@@ -27,6 +27,11 @@ from repro.kernels.ssm_scan.ref import (ssd_chunked_reference,
 
 RNG = np.random.default_rng(42)
 
+# interpret-mode kernel sweeps are priced in seconds per case on CPU:
+# tier-1 keeps the float32 parity pin per kernel family and one layout
+# case per geo_topk variant; the rest ride the slow marker
+BF16_SLOW = pytest.param(jnp.bfloat16, marks=pytest.mark.slow)
+
 
 def _tol(dtype):
     return 2e-2 if dtype == jnp.bfloat16 else 2e-4
@@ -39,15 +44,17 @@ def _tol(dtype):
 FA_CASES = [
     # B, Hq, Hkv, Tq, Tk, D, causal, offset
     (2, 4, 2, 128, 128, 64, True, 0),
-    (1, 8, 8, 96, 96, 32, True, 0),
-    (1, 4, 1, 64, 256, 64, True, 192),     # chunked prefill w/ offset
+    pytest.param((1, 8, 8, 96, 96, 32, True, 0), marks=pytest.mark.slow),
+    pytest.param((1, 4, 1, 64, 256, 64, True, 192),
+                 marks=pytest.mark.slow),  # chunked prefill w/ offset
     (2, 2, 2, 50, 200, 128, False, 0),     # non-causal (encoder), ragged
-    (1, 6, 3, 33, 65, 16, True, 0),        # odd sizes -> padding path
+    pytest.param((1, 6, 3, 33, 65, 16, True, 0),
+                 marks=pytest.mark.slow),  # odd sizes -> padding path
 ]
 
 
 @pytest.mark.parametrize("case", FA_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, BF16_SLOW])
 def test_flash_attention_matches_reference(case, dtype):
     B, Hq, Hkv, Tq, Tk, D, causal, off = case
     q = jnp.asarray(RNG.normal(size=(B, Hq, Tq, D)), dtype)
@@ -80,12 +87,16 @@ def test_flash_attention_vmem_budget():
 # decode attention
 # ---------------------------------------------------------------------------
 
-DEC_CASES = [(2, 4, 2, 512, 64), (1, 8, 1, 300, 128), (4, 2, 2, 64, 32),
-             (3, 12, 4, 100, 16)]
+DEC_CASES = [
+    (2, 4, 2, 512, 64),
+    pytest.param((1, 8, 1, 300, 128), marks=pytest.mark.slow),
+    pytest.param((4, 2, 2, 64, 32), marks=pytest.mark.slow),
+    pytest.param((3, 12, 4, 100, 16), marks=pytest.mark.slow),
+]
 
 
 @pytest.mark.parametrize("case", DEC_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, BF16_SLOW])
 def test_decode_attention_matches_reference(case, dtype):
     B, Hq, Hkv, S, D = case
     q = jnp.asarray(RNG.normal(size=(B, Hq, D)), dtype)
@@ -117,12 +128,16 @@ def test_decode_attention_ignores_padding():
 # grouped matmul
 # ---------------------------------------------------------------------------
 
-GMM_CASES = [(4, 64, 128, 256), (2, 100, 96, 130), (8, 32, 64, 64),
-             (1, 17, 33, 65)]
+GMM_CASES = [
+    (4, 64, 128, 256),
+    pytest.param((2, 100, 96, 130), marks=pytest.mark.slow),
+    pytest.param((8, 32, 64, 64), marks=pytest.mark.slow),
+    (1, 17, 33, 65),               # ragged: the padding path stays pinned
+]
 
 
 @pytest.mark.parametrize("case", GMM_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, BF16_SLOW])
 def test_gmm_matches_reference(case, dtype):
     E, C, D, F = case
     x = jnp.asarray(RNG.normal(size=(E, C, D)), dtype)
@@ -160,9 +175,13 @@ def _ssd_inputs(B, T, H, P, N, style, per_head):
 
 
 @pytest.mark.parametrize("style", ["mamba2", "mlstm"])
-@pytest.mark.parametrize("per_head", [False, True])
-@pytest.mark.parametrize("shape", [(2, 64, 3, 16, 8, 16),
-                                   (1, 100, 2, 32, 16, 32)])
+@pytest.mark.parametrize("per_head",
+                         [False, pytest.param(True,
+                                              marks=pytest.mark.slow)])
+@pytest.mark.parametrize(
+    "shape", [(2, 64, 3, 16, 8, 16),
+              pytest.param((1, 100, 2, 32, 16, 32),
+                           marks=pytest.mark.slow)])
 def test_ssd_chunked_and_pallas_match_sequential(style, per_head, shape):
     B, T, H, P, N, chunk = shape
     x, g, s, Bm, Cm, D = _ssd_inputs(B, T, H, P, N, style, per_head)
@@ -219,9 +238,11 @@ def _geo_inputs(u, n, spread=0.5, seed=0):
 GEO_CASES = [
     # U, N, k, block_u — exercise padding on every axis
     (64, 128, 3, 32),
-    (50, 37, 5, 16),       # ragged U and N
-    (8, 3, 3, 8),          # k == N: every node selected
-    (130, 257, 8, 128),
+    pytest.param((50, 37, 5, 16),
+                 marks=pytest.mark.slow),      # ragged U and N
+    pytest.param((8, 3, 3, 8),
+                 marks=pytest.mark.slow),      # k == N: all selected
+    pytest.param((130, 257, 8, 128), marks=pytest.mark.slow),
 ]
 
 
@@ -239,7 +260,8 @@ def test_geo_topk_pallas_matches_oracle(case):
     np.testing.assert_array_equal(np.asarray(i_pal), np.asarray(i_ref))
 
 
-@pytest.mark.parametrize("spread", [0.02, 5.0])
+@pytest.mark.parametrize(
+    "spread", [pytest.param(0.02, marks=pytest.mark.slow), 5.0])
 def test_geo_topk_proximity_filter_consistency(spread):
     """Tight clusters trigger the high-precision filter path; global
     spreads fall through to lower precisions — both must match."""
@@ -288,9 +310,11 @@ def _geo_inputs_valid(u, n, spread=0.5, seed=0, valid=None):
 TILED_CASES = [
     # U, N, k, block_u, node_tile — N spans multiple tiles, ragged too
     (48, 640, 3, 16, 256),
-    (20, 1000, 5, 8, 128),
-    (8, 257, 4, 8, 128),          # ragged final tile
-    (16, 128, 3, 8, 128),         # single tile degenerates cleanly
+    pytest.param((20, 1000, 5, 8, 128), marks=pytest.mark.slow),
+    pytest.param((8, 257, 4, 8, 128),
+                 marks=pytest.mark.slow),  # ragged final tile
+    pytest.param((16, 128, 3, 8, 128),
+                 marks=pytest.mark.slow),  # single tile degenerates
 ]
 
 
@@ -327,6 +351,7 @@ def test_geo_topk_tiled_ties_at_tile_boundary():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_geo_topk_tiled_all_invalid_tiles():
     """Whole-tile invalid spans (churned-out nodes / jit padding) and the
     fully-invalid query both match the reference."""
@@ -351,6 +376,7 @@ def test_geo_topk_tiled_all_invalid_tiles():
     assert (np.asarray(s_t) < -1e29).all()
 
 
+@pytest.mark.slow
 def test_geo_topk_tiled_validates_at_64k_nodes():
     """The acceptance regime: N >= 64k — far past the untiled kernel's
     VMEM wall — still matches the reference exactly."""
@@ -385,11 +411,11 @@ def test_geo_topk_autotune_smoke_end_to_end(monkeypatch, tmp_path):
         rows = ba.run(smoke=True)
         assert rows and any("winner=True" in r[2] for r in rows)
         assert (tmp_path / "geo_topk.json").exists()
-        u, n, k = 128, 512, 4
+        u, n, k = 32, 128, 4
         cfg = geo_tune.get_config(u, n, k)
         assert geo_tune.cache_key(u, n, k) in geo_tune._CACHE
         assert cfg in geo_tune.candidate_configs(u, n, k) + \
-            [(32, None), (32, 256)]
+            [(32, None), (32, 64)]
         # winner actually dispatches through ops.geo_topk
         packed = _geo_inputs_valid(u, n, seed=1)
         s, i = geo_topk(packed, k=k, force_pallas=True, interpret=True)

@@ -195,6 +195,57 @@ def test_empty_and_all_dead_services():
 # satellite fixes
 # ---------------------------------------------------------------------------
 
+def test_parse_nets_accepts_integer_sequences():
+    """A plain Python list of int net indices used to fall through the
+    string branch and silently map every entry to "other"."""
+    from repro.core.selection import NET_INDEX, parse_nets
+    np.testing.assert_array_equal(parse_nets([0, 1, 2], 3), [0, 1, 2])
+    np.testing.assert_array_equal(parse_nets((2, 0), 2), [2, 0])
+    np.testing.assert_array_equal(
+        parse_nets(np.array([0, 1, 2]), 3), [0, 1, 2])
+    np.testing.assert_array_equal(
+        parse_nets(["wifi", "lte"], 2),
+        [NET_INDEX["wifi"], NET_INDEX["lte"]])
+    np.testing.assert_array_equal(parse_nets("lte", 2),
+                                  [NET_INDEX["lte"]] * 2)
+
+
+def test_parse_nets_rejects_out_of_range_indices():
+    from repro.core.selection import parse_nets
+    with pytest.raises(ValueError, match="out of range"):
+        parse_nets([0, 7], 2)
+    with pytest.raises(ValueError, match="out of range"):
+        parse_nets(np.array([-1, 0]), 2)
+    with pytest.raises(ValueError, match="entries for"):
+        parse_nets([0, 1], 3)
+
+
+def test_cloud_replica_visible_to_device_path_immediately():
+    """``ensure_cloud_replica`` is an out-of-band task insertion; it must
+    route through engine invalidation so the device-resident
+    ``packed_static`` cache cannot serve pre-insertion node arrays on the
+    very next query."""
+    sys_ = _deployed_system(real_world)
+    loc = sys_.topo.nodes["C1"].loc
+    # warm the device-resident padded cache
+    warm = sys_.am.engine.candidate_indices_kernel(
+        "svc", sys_.am.tasks["svc"], [loc], "wifi", top_n=64, node_pad=8)
+    assert (warm >= 0).any()
+    for t in sys_.am.tasks["svc"]:          # only the cloud will remain
+        if t.captain is not None:
+            t.captain.fail()
+    task = sys_.ensure_cloud_replica("svc")
+    assert task is not None
+    cloud_pos = sys_.am.tasks["svc"].index(task)
+    got = sys_.am.engine.candidate_indices_kernel(
+        "svc", sys_.am.tasks["svc"], [loc], "wifi", top_n=64, node_pad=8)
+    assert got[0, 0] == cloud_pos, \
+        "device path served a stale pre-insertion replica set"
+    # numpy path agrees
+    got_np = sys_.am.candidate_indices("svc", [loc], "wifi", top_n=64)
+    assert got_np[0, 0] == cloud_pos
+
+
 def test_scale_down_survives_dead_captains():
     sys_ = _deployed_system(real_world, replicas=6)
     tasks = [t for t in sys_.am.tasks["svc"] if t.status == "running"]

@@ -75,6 +75,7 @@ def _greedy_reference(model, params, cfg, prompt, n):
     return toks[len(prompt):]
 
 
+@pytest.mark.slow
 def test_engine_matches_full_forward_generation(tiny):
     cfg, model, params = tiny
     engine = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)
@@ -102,6 +103,7 @@ def test_continuous_batching_interleaves(tiny):
     assert out == ref
 
 
+@pytest.mark.slow
 def test_session_failover_preserves_generation(tiny):
     cfg, model, params = tiny
     e1 = ServeEngine(cfg, params, max_batch=2, max_seq=64, eos_id=-1)

@@ -1,0 +1,318 @@
+"""Region-sharded selection: decision-identity with the unsharded engine.
+
+The sharded control plane (paper §3.1's per-region Beacon replicas) must
+be a pure execution-strategy change: same (U, k) candidate indices as
+the global engine — including users in the border band between regions
+and exact score ties across a shard boundary — on the numpy path, the
+fused-kernel path, and the device-resident fused tick, across the
+Fig. 8/10 scenarios and synthetic boundary-straddling topologies.  Also
+pins the per-shard cache adoption (invalidation routed to the changed
+region) and the fused tick's border-capacity guard rail.
+"""
+import numpy as np
+import pytest
+
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.cluster import NodeSpec, Topology, campus_users, real_world
+from repro.core.selection import SelectionEngine
+
+SERVICE = "detect"
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity (numpy + kernel paths)
+# ---------------------------------------------------------------------------
+
+def _metro_fleet(n_nodes=60, seed=2, spread=0.5):
+    from benchmarks.bench_selection_scale import _fleet
+    del n_nodes, spread
+    return _fleet(60, seed=seed)
+
+
+def _metro_users(n=300, seed=2):
+    from benchmarks.bench_selection_scale import _users
+    return _users(n, seed=seed)
+
+
+@pytest.mark.parametrize("precision", [1, 2, 3, 4])
+def test_sharded_numpy_matches_global(precision):
+    tasks = _metro_fleet()
+    locs, nets = _metro_users()
+    want = SelectionEngine(top_n=3).candidate_indices(
+        "bench", tasks, locs, nets)
+    eng = SelectionEngine(top_n=3, shard_precision=precision)
+    got = eng.candidate_indices("bench", tasks, locs, nets)
+    np.testing.assert_array_equal(got, want)
+    assert len(eng._shard_cache["bench"].shards) >= 1
+
+
+def test_sharded_kernel_path_matches_global_kernel():
+    tasks = _metro_fleet()
+    locs, nets = _metro_users(n=80)
+    want = SelectionEngine(top_n=3).candidate_indices_kernel(
+        "bench", tasks, locs, nets, node_pad=32)
+    eng = SelectionEngine(top_n=3, shard_precision=3)
+    got = eng.candidate_indices_kernel("bench", tasks, locs, nets,
+                                       node_pad=32)
+    np.testing.assert_array_equal(got, want)
+    assert len(eng._shard_cache["bench"].shards) >= 2
+
+
+def test_sharded_on_paper_topology_under_liveness_churn():
+    """real_world deployment: sharded candidate lists equal global ones,
+    and a captain death routes through the dynamic mask identically."""
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=3, shard_precision=3)
+    first = next(iter(topo.nodes.values()))
+    sys_.beacon.deploy_application(ServiceSpec(
+        "svc", detection_image(), locations=[first.loc], min_replicas=6))
+    sys_.sim.run(until=20_000)
+    users = campus_users(sys_.topo, 20, seed=5)
+    locs = [sys_.topo.nodes[u].loc for u in users]
+    nets = [sys_.topo.nodes[u].net_type for u in users]
+    tasks = sys_.am.tasks["svc"]
+    ref = SelectionEngine(top_n=3)
+    for _ in range(2):
+        want = ref.candidate_indices("svc", tasks, locs, nets)
+        got = sys_.am.candidate_indices("svc", locs, nets)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        running = [t for t in tasks if t.status == "running"
+                   and t.captain is not None and t.captain.alive]
+        running[0].captain.fail()           # second lap: one region lost
+
+
+# ---------------------------------------------------------------------------
+# border band + cross-shard ties (satellite: tie parity)
+# ---------------------------------------------------------------------------
+
+class _TieTask:
+    __slots__ = ("task_id", "service_id", "captain", "status")
+
+    def __init__(self, task_id, captain):
+        self.task_id = task_id
+        self.service_id = "tie"
+        self.captain = captain
+        self.status = "running"
+
+
+def _tie_tasks(specs, seed=0):
+    from repro.core.captain import Captain
+    from repro.core.sim import Simulator
+    sim = Simulator(seed=seed, trace_enabled=False)
+    topo = Topology({s.node_id: s for s in specs}, {})
+    return [_TieTask(f"tie/t{i}", Captain(sim, topo, s))
+            for i, s in enumerate(specs)]
+
+
+def test_cross_shard_equidistant_tie_resolves_like_global_argsort():
+    """Two replicas exactly equidistant from the user, identical free
+    slots and net type, in DIFFERENT shards (opposite sides of the 45°
+    precision-1 latitude boundary): the sharded engine must return them
+    in global task order — the unsharded stable argsort's tie-break."""
+    specs = [NodeSpec("hi", (45.7, -93.0), proc_ms=20.0, slots=2),
+             NodeSpec("lo", (44.3, -93.0), proc_ms=20.0, slots=2)]
+    tasks = _tie_tasks(specs)
+    users = [(45.0, -93.0), (45.0, -93.1)]
+    want = SelectionEngine(top_n=2).candidate_indices(
+        "tie", tasks, users, "wifi")
+    np.testing.assert_array_equal(want, [[0, 1], [0, 1]])
+    for precision in (1, 2, 3, 4):
+        eng = SelectionEngine(top_n=2, shard_precision=precision)
+        got = eng.candidate_indices("tie", tasks, users, "wifi")
+        np.testing.assert_array_equal(got, want)
+        # same tie through the fp32 kernel path (lax.top_k min-index)
+        gk = eng.candidate_indices_kernel("tie", tasks, users, "wifi",
+                                          node_pad=8)
+        np.testing.assert_array_equal(gk, want)
+
+
+def test_straddling_boundary_widening_crosses_shards():
+    """A cluster straddling a precision-3 cell edge (inside one
+    precision-2 cell): users just west of the boundary cannot reach the
+    hit target in-shard, so the widening must pull candidates from the
+    adjacent shard — identically to the global engine."""
+    edge = -92.8125            # p3 lon boundary, NOT a p2 boundary
+    specs = [NodeSpec(f"W{i}", (44.9 + 0.01 * i, edge - 0.02),
+                      proc_ms=20.0, slots=2) for i in range(3)] + \
+            [NodeSpec(f"E{i}", (44.9 + 0.01 * i, edge + 0.02),
+                      proc_ms=20.0, slots=2) for i in range(3)]
+    tasks = _tie_tasks(specs)
+    users = [(44.9, edge - 0.01), (44.91, edge - 0.05),
+             (44.9, edge + 0.01)]
+    want = SelectionEngine(top_n=6).candidate_indices(
+        "tie", tasks, users, "wifi")
+    # the global filter widened past the shard prefix: east+west mix
+    assert {int(i) for i in want[0] if i >= 0} == {0, 1, 2, 3, 4, 5}
+    eng = SelectionEngine(top_n=6, shard_precision=3)
+    got = eng.candidate_indices("tie", tasks, users, "wifi")
+    np.testing.assert_array_equal(got, want)
+    gk = eng.candidate_indices_kernel("tie", tasks, users, "wifi",
+                                      node_pad=8)
+    wk = SelectionEngine(top_n=6).candidate_indices_kernel(
+        "tie", tasks, users, "wifi", node_pad=8)
+    np.testing.assert_array_equal(gk, wk)
+
+
+# ---------------------------------------------------------------------------
+# shard cache adoption (invalidation routed to the changed region)
+# ---------------------------------------------------------------------------
+
+def test_unchanged_shards_adopt_device_caches_across_invalidate():
+    from repro.core.captain import Captain
+    from repro.core.sim import Simulator
+    specs = [NodeSpec(f"A{i}", (44.9 + 0.05 * i, -93.2), proc_ms=20.0,
+                      slots=2) for i in range(3)] + \
+            [NodeSpec(f"B{i}", (32.8 + 0.05 * i, -96.8), proc_ms=20.0,
+                      slots=2) for i in range(3)]
+    sim = Simulator(seed=0, trace_enabled=False)
+    topo = Topology({s.node_id: s for s in specs}, {})
+    caps = {s.node_id: Captain(sim, topo, s) for s in specs}
+    tasks = [_TieTask(f"tie/t{i}", caps[s.node_id])
+             for i, s in enumerate(specs)]
+    eng = SelectionEngine(top_n=3, shard_precision=3)
+    eng.candidate_indices_kernel("tie", tasks, [(44.9, -93.2)], "wifi",
+                                 node_pad=8)
+    before = {sh.code: sh.arrays.packed_static(8)
+              for sh in eng._shard_cache["tie"].shards}
+    assert len(before) >= 2
+    # new replica joins region A only; region B's device cache must survive
+    tasks = tasks + [_TieTask("tie/t_new", caps["A0"])]
+    eng.invalidate("tie")
+    eng.candidate_indices_kernel("tie", tasks, [(44.9, -93.2)], "wifi",
+                                 node_pad=8)
+    after = {sh.code: sh.arrays.packed_static(8)
+             for sh in eng._shard_cache["tie"].shards}
+    changed = {c for c in before if after[c] is not before[c]}
+    kept = {c for c in before if after[c] is before[c]}
+    assert len(changed) == 1 and kept, \
+        "invalidation was not routed to the one changed region"
+
+
+# ---------------------------------------------------------------------------
+# pool-level parity (Fig 8/10 scenarios, host + device ticks)
+# ---------------------------------------------------------------------------
+
+def _fluid_system(n_nodes=24, seed=0, spread=0.5, shard=None):
+    rng = np.random.default_rng(seed)
+    nodes = {f"N{i}": NodeSpec(
+        f"N{i}", (44.97 + float(rng.uniform(-spread, spread)),
+                  -93.22 + float(rng.uniform(-spread, spread))),
+        proc_ms=float(rng.uniform(10, 30)),
+        slots=int(rng.integers(2, 9)),
+        dedicated=bool(rng.random() < 0.2))
+        for i in range(n_nodes)}
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False, shard_precision=shard)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def _run_pool(tick, shard, *, n_users=50, seed=0, until=12_000.0, fail=(),
+              border_cap=None):
+    sys_ = _fluid_system(seed=seed, shard=shard)
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
+                     -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick=tick,
+        shard_border_cap=border_cap if border_cap is not None else n_users)
+    sys_.sim.at(0.0, pool.start)
+    for node, t in fail:
+        sys_.fail_node(node, t)
+    sys_.sim.run(until=until)
+    return pool, sys_
+
+
+def _assert_decisions_equal(a, b):
+    assert a.ticks_run == b.ticks_run
+    assert a.requests_sent == b.requests_sent
+    assert a.failovers == b.failovers
+    np.testing.assert_array_equal(a.cand_task, b.cand_task)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.pending, b.pending)
+    assert list(zip(a.switch_t, a.switch_user, a.switch_from,
+                    a.switch_to)) == \
+        list(zip(b.switch_t, b.switch_user, b.switch_from, b.switch_to))
+
+
+def test_sharded_pool_ticks_match_unsharded_fig10_failover():
+    """Fig 10 regime with mid-window node deaths: the sharded host tick
+    reproduces the unsharded host tick, and the sharded fused device
+    tick reproduces the sharded host tick — full decision streams."""
+    fail = [("N1", 4_200.0), ("N5", 4_300.0)]
+    host_u, _ = _run_pool("host", None, fail=fail)
+    host_s, _ = _run_pool("host", 3, fail=fail)
+    dev_s, _ = _run_pool("device", 3, fail=fail)
+    _assert_decisions_equal(host_s, host_u)
+    _assert_decisions_equal(dev_s, host_s)
+    assert dev_s.failovers > 0
+    assert len(dev_s.switch_t) > 0
+
+
+def test_sharded_device_tick_compiles_once_under_churn():
+    """Churn inside existing regions (fail/recover + a replica join on a
+    node whose region already has a shard) must not retrace any fused
+    program — per-shard paddings absorb membership changes.  Same
+    seed/topology as the parity test above, so the sharded programs are
+    already compiled and only retraces would show up."""
+    from repro.core import fused_tick
+    pool_sys = _fluid_system(seed=0, shard=3)
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 50),
+                     -93.22 + rng.uniform(-.5, .5, 50)], axis=1)
+    pool = pool_sys.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device", shard_border_cap=50)
+    pool_sys.sim.at(0.0, pool.start)
+    pool_sys.sim.run(until=2_100.0)
+    counts0 = dict(fused_tick.COMPILE_COUNTS)
+    pool_sys.fail_node("N2", 2_200.0)
+    pool_sys.sim.run(until=4_300.0)
+    pool_sys.captains["N2"].recover()
+    cap = pool_sys.captains["N4"]
+    t = Task(f"{SERVICE}/t_join", SERVICE, captain=cap, status="running",
+             ready_at=pool_sys.sim.now)
+    cap.tasks[t.task_id] = t
+    pool_sys.am.register_task(t)
+    pool_sys.sim.run(until=8_100.0)
+    assert pool.ticks_run >= 3
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts0.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"sharded fused programs re-traced under churn: {delta}"
+
+
+def test_sharded_device_tick_border_capacity_guard():
+    """Users homed far outside every node region land in the border
+    band; a band larger than shard_border_cap must raise with the
+    remedy, not silently drop users."""
+    sys_ = _fluid_system(n_nodes=8, seed=1, shard=3)
+    locs = np.concatenate([
+        np.tile((44.97, -93.22), (4, 1)),
+        np.tile((10.0, 10.0), (6, 1))])     # no shard anywhere near
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device", shard_border_cap=2)
+    sys_.sim.at(0.0, pool.start)
+    with pytest.raises(RuntimeError, match="shard_border_cap"):
+        sys_.sim.run(until=4_100.0)
+
+
+def test_bench_sharded_selection_smoke_profile():
+    """The registered benchmark's --smoke profile runs in tier-1 (it
+    asserts sharded == global internally before timing)."""
+    from benchmarks.bench_sharded_selection import run
+    rows = run(smoke=True)
+    assert rows and rows[0][1] > 0
+    assert "work_frac=" in rows[1][2] and "shards=" in rows[1][2]

@@ -46,6 +46,7 @@ def test_wsd_schedule_phases():
     assert float(s(200)) <= float(s(100)) + 1e-12
 
 
+@pytest.mark.slow
 def test_microbatch_grads_match_full_batch():
     cfg = reduced(get_config("qwen3-1.7b"), num_layers=2)
     model = build_model(cfg)
@@ -66,8 +67,8 @@ def test_microbatch_grads_match_full_batch():
 
 @given(st.lists(st.floats(min_value=-100, max_value=100,
                           allow_nan=False), min_size=1, max_size=64))
-@settings(max_examples=50, deadline=None)
-def test_int8_compression_error_bound(xs):
+@settings(max_examples=6, deadline=None)    # tier-1 profile; each example
+def test_int8_compression_error_bound(xs):  # pays a fresh jit trace
     g = jnp.asarray(xs, jnp.float32)
     out = _int8_roundtrip(g)
     scale = max(abs(float(jnp.max(g))), abs(float(jnp.min(g)))) / 127.0
@@ -116,6 +117,7 @@ def test_checkpoint_atomic_and_checksummed(tmp_path):
         ck.restore(2, state)
 
 
+@pytest.mark.slow
 def test_trainer_restart_continues_identically(tmp_path):
     cfg = reduced(get_config("qwen3-1.7b"), num_layers=2)
     model = build_model(cfg)
