@@ -1,0 +1,212 @@
+"""Beacon fault-domain failover at population scale (control-plane churn).
+
+The first end-to-end scenario where the *control plane itself* is a
+failure domain: a multi-metro fleet (``n_regions`` cities at distinct
+precision-3 geohash cells, ``n_per_region`` nodes each) serves a
+region-clustered user population through the fluid ``ClientPool``; one
+metro's Beacon replica is killed mid-run and recovered later.  Users of
+the dead domain hand off to the nearest live Beacon's merged shard (the
+engine ownership map) while the dead domain's Captains re-register via
+heartbeat replay; on recovery everyone re-homes.
+
+Measured per case:
+
+* ``unavail_ms`` — the selection-unavailability window: Beacon death to
+  the last heartbeat replay, i.e. how long some pre-failure capacity was
+  unschedulable (``BeaconSet.convergence_ms``);
+* ``handoff_ms`` — decision latency of the first probe tick after the
+  kill (shard rebuild + routing + retrace transient) vs
+  ``steady_ms``, the median steady-state tick;
+* ``displaced_peak`` — peak fraction of (sampled) affected-region users
+  whose top-1 candidate differs from a same-instant no-failure
+  counterfactual (an unsharded engine over the same loads with nothing
+  hidden): the decision-level cost of surviving a Beacon loss.  It must
+  return to ~0 by the last window (``displaced_end`` — convergence).
+  ``out_of_region_peak`` is the stricter visible symptom (top-1 left
+  the home region entirely — only happens while fewer than the filter's
+  min-hits home nodes are visible), and ``cap_hidden_peak`` the peak
+  fraction of the affected region's nodes that were unschedulable.
+  ``failovers``/latency counters prove the data plane never stalled.
+
+``run(smoke=True)`` (or ``--smoke``) is the seconds-scale tier-1
+profile on the host tick; the full sweep drives 100k users × 4 regions
+× 1k nodes through the fused device tick — the acceptance shape.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import geohash
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.cluster import NodeSpec, Topology
+from repro.core.selection import CODE_PRECISION
+
+# the four metros of bench_sharded_selection, distinct precision-3 cells
+REGIONS = ((44.97, -93.22), (41.88, -87.63), (39.74, -104.99),
+           (32.78, -96.80))
+SHARD_PRECISION = 3
+SERVICE = "detect"
+PROBE_MS = 2000.0
+FRAME_MS = 500.0
+
+
+def _system(n_per_region: int, n_regions: int, seed: int) -> ArmadaSystem:
+    rng = np.random.default_rng(seed)
+    nodes = {}
+    for r in range(n_regions):
+        base = REGIONS[r % len(REGIONS)]
+        for i in range(n_per_region):
+            nid = f"R{r}N{i}"
+            nodes[nid] = NodeSpec(
+                nid, (base[0] + float(rng.uniform(-0.3, 0.3)),
+                      base[1] + float(rng.uniform(-0.3, 0.3))),
+                proc_ms=float(rng.uniform(10, 30)),
+                slots=int(rng.integers(2, 9)))
+    topo = Topology(nodes, {})
+    # heartbeat slower than the probe window, so the unavailability is
+    # observable at tick granularity (replays span multiple ticks)
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False,
+                        shard_precision=SHARD_PRECISION,
+                        beacon_heartbeat_ms=1.5 * PROBE_MS)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def _users(n_users: int, n_regions: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    region = rng.integers(0, n_regions, n_users)
+    base = np.asarray(REGIONS)[region % len(REGIONS)]
+    return base + rng.uniform(-0.3, 0.3, (n_users, 2))
+
+
+PROBE_SAMPLE = 4096          # affected users probed per window
+
+
+def _selection_impact(sys_, sample_locs: np.ndarray, ref_eng,
+                      region_code: int):
+    """(displaced, out_of_region): same-instant selection for the sampled
+    affected users through the live engine (ownership map + hidden) vs a
+    no-failure counterfactual (unsharded, nothing hidden) over the SAME
+    loads.  Pre-failure and post-convergence both are ~0 — the sharded
+    engine is decision-identical to the unsharded one then."""
+    tasks = sys_.am.tasks[SERVICE]
+    got = sys_.am.engine.candidate_indices(SERVICE, tasks, sample_locs,
+                                           "wifi")
+    want = ref_eng.candidate_indices(SERVICE, tasks, sample_locs, "wifi")
+    displaced = float((got[:, 0] != want[:, 0]).mean())
+    view = sys_.am.engine.service_view(SERVICE, tasks)
+    top1 = got[:, 0]
+    ok = top1 >= 0
+    safe = np.where(ok, top1, 0)
+    codes = geohash.encode_batch(view.lat[safe], view.lon[safe],
+                                 CODE_PRECISION) \
+        >> np.int64(5 * (CODE_PRECISION - SHARD_PRECISION))
+    return displaced, float((~ok | (codes != region_code)).mean())
+
+
+def _bench_case(n_users: int, n_per_region: int, n_regions: int,
+                tick: str, seed: int = 0):
+    n_nodes = n_per_region * n_regions
+    sys_ = _system(n_per_region, n_regions, seed)
+    locs = _users(n_users, n_regions, seed)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=FRAME_MS,
+        selection_backend="geo_topk" if tick == "device" else "numpy",
+        tick=tick, record_samples=False)
+    sys_.sim.at(0.0, pool.start)
+
+    # kill the busiest metro's Beacon after a warm period, recover later
+    region = sys_.beacons.busiest_region()
+    region_code = sys_.beacons.region_code(region)
+    u_codes = geohash.encode_batch(locs[:, 0], locs[:, 1], CODE_PRECISION) \
+        >> np.int64(5 * (CODE_PRECISION - SHARD_PRECISION))
+    affected = np.nonzero(u_codes == region_code)[0]
+
+    # kill just before a tick boundary: the next selection pass runs with
+    # the registration state freshly lost
+    w_fail, w_rec, w_end = 5, 10, 14
+    fail_t = w_fail * PROBE_MS - 100.0
+    recover_t = w_rec * PROBE_MS - 100.0
+    sys_.fail_beacon(region, fail_t)
+    sys_.recover_beacon(region, recover_t)
+
+    from repro.core.selection import SelectionEngine
+    ref_eng = SelectionEngine(top_n=sys_.am.top_n)
+    sample = affected[:PROBE_SAMPLE]
+    sample_locs = locs[sample]
+    home_nodes = [n for n, c in sys_.beacons.home.items()
+                  if c == region_code]
+
+    tick_ms: list = []
+    displaced: list = []
+    out_of_region: list = []
+    cap_hidden: list = []
+    for w in range(1, w_end + 1):       # window w ends after the tick at w
+        t0 = time.perf_counter()
+        sys_.sim.run(until=w * PROBE_MS + 200.0)
+        tick_ms.append((time.perf_counter() - t0) * 1e3)
+        d, o = _selection_impact(sys_, sample_locs, ref_eng, region_code)
+        displaced.append(d)
+        out_of_region.append(o)
+        hidden = sys_.am.engine.hidden_nodes
+        cap_hidden.append(
+            sum(1 for n in home_nodes if n in hidden) / len(home_nodes))
+    assert not sys_.sim.truncated
+
+    warm = sorted(tick_ms[1:w_fail - 1])        # skip the compile window
+    steady_ms = warm[len(warm) // 2] if warm else float("nan")
+    handoff_ms = tick_ms[w_fail - 1]            # first post-kill window
+    unavail = sys_.beacons.convergence_ms(fail_t)
+    outage = slice(w_fail - 1, w_rec - 1)
+    tag = (f"beacon_failover/u{n_users}_s{n_regions}x{n_per_region}"
+           f"/{tick}")
+    return [
+        (tag, handoff_ms,
+         f"unavail_ms={unavail:.1f};steady_ms={steady_ms:.1f};"
+         f"handoff_over_steady={handoff_ms / steady_ms:.2f}x;"
+         f"affected_users={affected.size};"
+         f"displaced_peak={max(displaced[outage]):.3f};"
+         f"displaced_end={displaced[-1]:.3f};"
+         f"out_of_region_peak={max(out_of_region[outage]):.3f};"
+         f"cap_hidden_peak={max(cap_hidden[outage]):.3f};"
+         f"failovers={pool.failovers};total_nodes={n_nodes};"
+         f"mean_latency_ms={pool.mean_latency():.1f}"),
+    ]
+
+
+def run(smoke: bool = False):
+    if smoke:
+        # host tick: exercises kill/replay/handoff/recover end-to-end
+        # without paying device-program compiles in tier-1 (the device
+        # path's decision identity is pinned by tests/test_beacon_failover)
+        sweep = [(2_000, 16, 4, "host")]
+    else:
+        sweep = [(20_000, 250, 4, "host"),      # numpy-engine pair
+                 (100_000, 1_000, 4, "device")]  # acceptance shape
+    rows = []
+    for n_users, n_per, n_regions, tick in sweep:
+        rows.extend(_bench_case(n_users, n_per, n_regions, tick))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale profile (small U/N, host tick)")
+    args = ap.parse_args()
+    print("name,ms_per_handoff_tick,derived")
+    for name, ms, derived in run(smoke=args.smoke):
+        print(f"{name},{ms:.1f},{derived}")

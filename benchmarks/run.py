@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_selection",          # Table 6
     "benchmarks.bench_selection_scale",    # engine scaling (beyond paper)
     "benchmarks.bench_sharded_selection",  # region-sharded control plane
+    "benchmarks.bench_beacon_failover",    # Beacon fault domains / handoff
     "benchmarks.bench_client_scale",       # client-pool scaling (beyond paper)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7
@@ -53,7 +54,14 @@ def main() -> None:
 
     out = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
     out.mkdir(parents=True, exist_ok=True)
-    (out / "results.json").write_text(json.dumps(all_rows, indent=1))
+    results = out / "results.json"
+    if args.only and results.exists():
+        # partial run: refresh the selected rows in place instead of
+        # clobbering every other benchmark's recorded results
+        prev = json.loads(results.read_text())
+        fresh = {r["name"] for r in all_rows}
+        all_rows = [r for r in prev if r["name"] not in fresh] + all_rows
+    results.write_text(json.dumps(all_rows, indent=1))
     with open(out / "results.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         for r in all_rows:

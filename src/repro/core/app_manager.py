@@ -301,9 +301,15 @@ class ApplicationManager:
         if len(tasks) <= spec.min_replicas:
             return
         # only probe captains that are still alive — a failed captain's
-        # queue is gone, so load() would report a bogus idle node
+        # queue is gone, so load() would report a bogus idle node — and
+        # still Beacon-visible: a node whose fault domain's Beacon died
+        # looks idle (its users handed off) but cannot be reached by the
+        # control plane; reclaiming it would destroy the very replicas
+        # the heartbeat replay is about to bring back
+        hidden = self.engine.hidden_nodes
         idle = [t for t in tasks
                 if t.captain is not None and t.captain.alive
+                and t.captain.node_id not in hidden
                 and t.captain.load() == 0]
         if idle:
             victim = idle[-1]

@@ -1,14 +1,42 @@
-"""Beacon (paper §3.1): the global entry point, plus system assembly.
+"""Beacon (paper §3.1): the entry point(s), plus system assembly.
 
 ``ArmadaSystem`` wires Simulator + Topology + Spinner + ApplicationManager
 + CargoManager and exposes the three interaction surfaces the paper gives
 Beacon: application deployment, user service discovery, and resource
 registration.
+
+Beacon fault domains (paper "Armada is robust", beyond the single
+immortal control plane): with ``shard_precision`` set, a ``BeaconSet``
+runs one ``Beacon`` replica per coarse geohash region — the same regions
+the ``SelectionEngine`` shards by — and each replica owns its region's
+node registrations and (through the engine's per-region ``_ShardSet``)
+its shard's node arrays.  Killing a replica (``fail_beacon``) loses its
+registration state:
+
+* its nodes become control-plane *hidden* — alive on the data plane
+  (warm connections and in-flight frames continue) but unschedulable —
+  until each Captain's heartbeat replay re-registers it with the
+  nearest live Beacon;
+* its *users* hand off: the engine's ownership map re-points the dead
+  region at the adopting Beacon, so every batched tick path (numpy,
+  kernel, fused device) routes those user chunks to the adopting
+  Beacon's merged shard, with the existing border-band escalation
+  covering cross-domain queries;
+* on ``recover_beacon`` the ownership map reverts (users re-home
+  immediately — the adopted nodes stay visible through the surviving
+  replica until they re-home at their next heartbeat).
+
+See ``docs/beacon_fault_domains.md`` for the ownership/handoff map and
+``benchmarks/bench_beacon_failover.py`` for the measured unavailability
+window.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional
 
+import numpy as np
+
+from repro.core import geohash
 from repro.core.app_manager import ApplicationManager, ServiceSpec
 from repro.core.captain import Captain
 from repro.core.client import Client
@@ -19,38 +47,357 @@ from repro.core.spinner import Image, Spinner
 from repro.core.storage.cargo import Cargo
 from repro.core.storage.cargo_manager import CargoManager
 
+HEARTBEAT_MS = 1000.0      # Captain -> Beacon heartbeat period (replay lag)
+
+
+class BeaconUnavailableError(RuntimeError):
+    """The addressed Beacon replica is down (its fault domain failed).
+
+    Batched pool queries never see this — the ``BeaconSet`` ownership map
+    hands their region off to the nearest live replica inside the
+    selection engine — but direct calls against a dead replica fail
+    loudly instead of serving stale registration state."""
+
 
 class Beacon:
-    """Request router: forwards to the right handler component."""
+    """Request router: forwards to the right handler component.
+
+    One instance is either the global entry point (``region=None``, the
+    unsharded system) or a per-region replica inside a ``BeaconSet``
+    (``region`` = Morton prefix code of its fault domain).  A replica
+    owns the node registrations of its domain (``registered_nodes``);
+    killing it loses that state until heartbeat replay rebuilds it on a
+    surviving replica."""
 
     def __init__(self, am: ApplicationManager, spinner: Spinner,
-                 cargo_manager: CargoManager):
+                 cargo_manager: CargoManager, *,
+                 region: Optional[int] = None,
+                 region_str: Optional[str] = None):
         self.am = am
         self.spinner = spinner
         self.cargo_manager = cargo_manager
+        self.region = region
+        self.region_str = region_str
+        self.alive = True
+        self.registered_nodes: Dict[str, Captain] = {}
+
+    def _check_alive(self):
+        if not self.alive:
+            raise BeaconUnavailableError(
+                f"Beacon replica {self.region_str or self.region!r} is "
+                "down — route through BeaconSet.beacon_for (pools hand "
+                "off automatically via the engine's ownership map)")
 
     # the three public surfaces (paper §3.1)
     def deploy_application(self, spec: ServiceSpec, **kw):
+        self._check_alive()
         return self.am.deploy_service(spec, **kw)
 
     def query_service(self, service_id: str, user_loc, user_net: str):
+        self._check_alive()
         return self.am.candidate_list(service_id, user_loc, user_net)
 
     def query_service_batch(self, service_id: str, user_locs, user_nets):
         """Batched service discovery: one vectorized selection pass over a
         whole user population; returns one ranked Task list per user."""
+        self._check_alive()
         return self.am.candidate_lists(service_id, user_locs, user_nets)
 
     def query_service_indices(self, service_id: str, user_locs, user_nets):
         """Index-space batched discovery for pools: (U, k) int32 positions
         into the service's task list, padded with -1."""
+        self._check_alive()
         return self.am.candidate_indices(service_id, user_locs, user_nets)
 
     def register_node(self, captain: Captain, runtime: str = "armada"):
+        self._check_alive()
+        self.registered_nodes[captain.node_id] = captain
         return self.spinner.captain_join(captain, runtime)
 
     def register_cargo(self, cargo: Cargo):
+        self._check_alive()
         return self.cargo_manager.cargo_join(cargo)
+
+
+class BeaconSet:
+    """Per-region Beacon replicas as injectable fault domains.
+
+    Each replica serves one Morton-prefix region at the engine's
+    ``shard_precision``.  The set maintains two pieces of control-plane
+    state and pushes both into the ``SelectionEngine`` on every change
+    (``set_beacon_routing``):
+
+    * the **ownership map** — home region -> serving region.  Identity
+      while a region's own Beacon is alive; on ``fail`` the dead domain
+      is re-pointed at the nearest live replica (haversine between
+      region cell centers, lowest code on ties), which merges its shard
+      arrays and serves its users' queries (the handoff path).  Reverts
+      on ``recover``.
+    * the **hidden set** — nodes whose registration was lost with their
+      Beacon and has not been replayed yet.  Each Captain re-registers
+      with the serving replica at its next heartbeat (staggered over
+      ``heartbeat_ms`` on the ``sim.substream("beacon")`` stream, so
+      injection never shifts data-plane RNG); visibility converges
+      node-by-node with no global rebuild.
+
+    ``events`` records the full fail/replay/recover timeline —
+    ``benchmarks/bench_beacon_failover.py`` derives the
+    selection-unavailability window from it.
+    """
+
+    def __init__(self, sim: Simulator, am: ApplicationManager,
+                 spinner: Spinner, cargo_manager: CargoManager, *,
+                 shard_precision: int,
+                 heartbeat_ms: float = HEARTBEAT_MS):
+        self.sim = sim
+        self.am = am
+        self.spinner = spinner
+        self.cargo_manager = cargo_manager
+        self.precision = int(shard_precision)
+        self.heartbeat_ms = heartbeat_ms
+        self.replicas: Dict[int, Beacon] = {}
+        self.home: Dict[str, int] = {}      # node -> home region code
+        # node -> region whose live Beacon knows it (None = lost/hidden)
+        self.serving: Dict[str, Optional[int]] = {}
+        self.events: List[dict] = []
+        self._centroids: Dict[int, tuple] = {}
+
+    # ---------------------------------------------------------- regions
+
+    def region_code(self, region) -> int:
+        """Coerce a region spec to a Morton prefix code: a base32 geohash
+        prefix (exactly ``shard_precision`` chars), a prefix code int, or
+        a (lat, lon) location."""
+        if isinstance(region, str):
+            if len(region) != self.precision:
+                raise ValueError(
+                    f"region prefix {region!r} must be exactly "
+                    f"{self.precision} geohash chars")
+            return geohash.str_to_code(region)
+        if isinstance(region, (int, np.integer)):
+            return int(region)
+        lat, lon = region
+        return int(geohash.encode_batch(
+            np.asarray([lat]), np.asarray([lon]), self.precision)[0])
+
+    def region_str(self, code: int) -> str:
+        return geohash.code_to_str(int(code), self.precision)
+
+    def _centroid(self, code: int) -> tuple:
+        c = self._centroids.get(code)
+        if c is None:
+            lat, lon, _, _ = geohash.decode(self.region_str(code))
+            c = (lat, lon)
+            self._centroids[code] = c
+        return c
+
+    def replica(self, code: int) -> Beacon:
+        rep = self.replicas.get(int(code))
+        if rep is None:
+            rep = Beacon(self.am, self.spinner, self.cargo_manager,
+                         region=int(code),
+                         region_str=self.region_str(code))
+            self.replicas[int(code)] = rep
+        return rep
+
+    def live_regions(self) -> List[int]:
+        return [c for c, r in self.replicas.items() if r.alive]
+
+    def busiest_region(self) -> str:
+        """Geohash prefix of the region homing the most Captains —
+        killing it maximizes the blast radius (the canonical
+        fault-injection target; ties break on the lowest code so the
+        benchmark and the test harness always kill the same domain)."""
+        counts: Dict[int, int] = {}
+        for code in self.home.values():
+            counts[code] = counts.get(code, 0) + 1
+        if not counts:
+            raise ValueError("busiest_region: no Captains registered")
+        return self.region_str(max(sorted(counts), key=lambda c: counts[c]))
+
+    def owner_of(self, code: int) -> Optional[int]:
+        """The region whose live Beacon serves ``code``'s domain: itself
+        while up, else the nearest live region (ties -> lowest code);
+        None when every Beacon is down (total control-plane loss)."""
+        code = int(code)
+        rep = self.replicas.get(code)
+        if rep is not None and rep.alive:
+            return code
+        live = self.live_regions()
+        if not live:
+            return None
+        lat, lon = self._centroid(code)
+        return min(live, key=lambda c: (geohash.distance_km(
+            lat, lon, *self._centroid(c)), c))
+
+    def beacon_for(self, loc) -> Beacon:
+        """The replica serving a location — home if alive, else the
+        nearest live one (what a client's bootstrap lookup returns)."""
+        owner = self.owner_of(self.region_code(tuple(loc)))
+        if owner is None:
+            raise BeaconUnavailableError(
+                "no live Beacon replica in any region")
+        return self.replica(owner)
+
+    # ----------------------------------------------------- registration
+
+    def register_node(self, captain: Captain, runtime: str = "armada"):
+        """Home a Captain in its region's fault domain and register it
+        with the replica currently serving that domain."""
+        code = self.region_code(tuple(captain.spec.loc))
+        self.replica(code)                  # domain exists even if empty
+        self.home[captain.node_id] = code
+        owner = self.owner_of(code)
+        if owner is None:
+            self.serving[captain.node_id] = None
+            self._push()
+            return None
+        rep = self.replica(owner)
+        self.serving[captain.node_id] = owner
+        dt = rep.register_node(captain, runtime)
+        self._push()
+        return dt
+
+    # -------------------------------------------------- fail / recover
+
+    def fail(self, region):
+        """Kill a region's Beacon replica: its registration state is
+        lost (nodes it served go hidden until heartbeat replay lands
+        them on the serving replica) and its users hand off to the
+        nearest live Beacon through the engine ownership map."""
+        code = self.region_code(region)
+        rep = self.replicas.get(code)
+        if rep is None or not rep.alive:
+            known = sorted(self.region_str(c) for c in self.live_regions())
+            raise ValueError(
+                f"fail_beacon: no live Beacon for region "
+                f"{self.region_str(code)!r} (live: {known})")
+        rep.alive = False
+        rep.registered_nodes.clear()
+        self.sim.log("beacon_fail", region=rep.region_str)
+        self.events.append({"t": self.sim.now, "kind": "beacon_fail",
+                            "region": rep.region_str})
+        lost = sorted(n for n, s in self.serving.items() if s == code)
+        rng = self.sim.substream("beacon")
+        for node in lost:
+            self.serving[node] = None
+            # replay at the Captain's next heartbeat (uniform phase)
+            self.sim.after(float(rng.uniform(0.0, self.heartbeat_ms)),
+                           self._reregister, node)
+        self._push()
+
+    def recover(self, region):
+        """Bring a region's Beacon back.  Ownership (and user routing)
+        reverts immediately; its nodes re-home from the adopting replica
+        at their next heartbeat — they stay visible through the adopter
+        meanwhile, so recovery has no second unavailability dip."""
+        code = self.region_code(region)
+        rep = self.replicas.get(code)
+        if rep is None or rep.alive:
+            raise ValueError(
+                f"recover_beacon: Beacon for region "
+                f"{self.region_str(code)!r} is not down")
+        rep.alive = True
+        self.sim.log("beacon_recover", region=rep.region_str)
+        self.events.append({"t": self.sim.now, "kind": "beacon_recover",
+                            "region": rep.region_str})
+        rng = self.sim.substream("beacon")
+        for node in sorted(n for n, h in self.home.items()
+                           if h == code and self.serving.get(n) != code):
+            self.sim.after(float(rng.uniform(0.0, self.heartbeat_ms)),
+                           self._rehome, node)
+        self._push()
+
+    def _reregister(self, node_id: str):
+        """Heartbeat replay: a Captain that lost its Beacon registers
+        with the replica currently serving its home domain."""
+        if self.serving.get(node_id) is not None:
+            return                          # already replayed elsewhere
+        cap = self.spinner.captains.get(node_id)
+        if cap is None:
+            return                          # node left the cluster for good
+        if not cap.alive:
+            # the node itself is churned out right now; its heartbeats
+            # resume when it recovers — keep polling at heartbeat cadence
+            self.sim.after(self.heartbeat_ms, self._reregister, node_id)
+            return
+        target = self.owner_of(self.home[node_id])
+        if target is None:                  # still no live Beacon: retry
+            self.sim.after(self.heartbeat_ms, self._reregister, node_id)
+            return
+        rep = self.replica(target)
+        rep.registered_nodes[node_id] = cap
+        self.serving[node_id] = target
+        self.sim.log("beacon_reregister", node=node_id,
+                     region=rep.region_str)
+        self.events.append({"t": self.sim.now, "kind": "reregister",
+                            "node": node_id, "region": rep.region_str})
+        self._push()
+
+    def _rehome(self, node_id: str):
+        """Post-recovery heartbeat: move a Captain's registration from
+        the adopting replica back to its (now live) home Beacon."""
+        home = self.home[node_id]
+        rep = self.replicas.get(home)
+        if rep is None or not rep.alive:
+            return                          # home died again meanwhile
+        cur = self.serving.get(node_id)
+        if cur == home:
+            return
+        cap = self.spinner.captains.get(node_id)
+        if cap is None:
+            return                          # left the cluster for good
+        if not cap.alive:
+            # node is churned out right now — don't touch its adopted
+            # registration (it must stay non-hidden for when it returns);
+            # re-home at a later heartbeat instead
+            self.sim.after(self.heartbeat_ms, self._rehome, node_id)
+            return
+        if cur is not None:
+            self.replica(cur).registered_nodes.pop(node_id, None)
+        rep.registered_nodes[node_id] = cap
+        self.serving[node_id] = home
+        self.events.append({"t": self.sim.now, "kind": "rehome",
+                            "node": node_id, "region": rep.region_str})
+        self._push()
+
+    # ------------------------------------------------------- engine push
+
+    def hidden_nodes(self) -> frozenset:
+        return frozenset(n for n, s in self.serving.items() if s is None)
+
+    def ownership(self) -> Dict[int, int]:
+        """Non-identity region -> serving-region entries (dead domains
+        only); regions with no live owner are omitted — their nodes are
+        hidden anyway and their users fall to the border pass."""
+        out = {}
+        for code, rep in self.replicas.items():
+            if rep.alive:
+                continue
+            owner = self.owner_of(code)
+            if owner is not None:
+                out[code] = owner
+        return out
+
+    def _push(self):
+        self.am.engine.set_beacon_routing(self.ownership(),
+                                          self.hidden_nodes())
+
+    def convergence_ms(self, fail_t: float) -> float:
+        """Selection-unavailability window of the failure at ``fail_t``:
+        time until the last lost Captain re-registered (after which every
+        pre-failure node is schedulable again).  Bounded at the NEXT
+        ``beacon_fail`` event, so replays belonging to a later, unrelated
+        failure never inflate this window."""
+        replays = []
+        for e in self.events:
+            if e["t"] < fail_t:
+                continue
+            if e["kind"] == "beacon_fail" and e["t"] > fail_t:
+                break                       # a later failure's replays
+            if e["kind"] == "reregister":
+                replays.append(e["t"])
+        return (max(replays) - fail_t) if replays else float("nan")
 
 
 class ArmadaSystem:
@@ -61,7 +408,8 @@ class ArmadaSystem:
                  cargo_nodes: Optional[List[str]] = None,
                  include_cloud_compute: bool = True,
                  trace_enabled: bool = True,
-                 shard_precision: Optional[int] = None):
+                 shard_precision: Optional[int] = None,
+                 beacon_heartbeat_ms: float = HEARTBEAT_MS):
         self.sim = Simulator(seed=seed, trace_enabled=trace_enabled)
         self.topo = topo
         self.spinner = Spinner(self.sim, topo)
@@ -70,6 +418,14 @@ class ArmadaSystem:
                                      self.cargo_manager,
                                      shard_precision=shard_precision)
         self.beacon = Beacon(self.am, self.spinner, self.cargo_manager)
+        # region-sharded systems get per-region Beacon fault domains; the
+        # global facade above still serves deployment/bootstrap calls
+        self.beacons: Optional[BeaconSet] = None
+        if shard_precision is not None:
+            self.beacons = BeaconSet(self.sim, self.am, self.spinner,
+                                     self.cargo_manager,
+                                     shard_precision=shard_precision,
+                                     heartbeat_ms=beacon_heartbeat_ms)
         self.captains: Dict[str, Captain] = {}
         self.cargos: Dict[str, Cargo] = {}
 
@@ -81,7 +437,10 @@ class ArmadaSystem:
                 continue
             cap = Captain(self.sim, topo, spec)
             self.captains[name] = cap
-            self.beacon.register_node(cap)
+            if self.beacons is not None:
+                self.beacons.register_node(cap)
+            else:
+                self.beacon.register_node(cap)
         for name in (cargo_nodes or []):
             cg = Cargo(self.sim, topo, topo.nodes[name])
             self.cargos[name] = cg
@@ -119,7 +478,43 @@ class ArmadaSystem:
         return task
 
     def fail_node(self, name: str, at_ms: float):
-        self.sim.at(at_ms, self.captains[name].fail)
+        """Schedule a node failure.  Unknown names raise immediately;
+        failing a node that is already down when the event fires raises
+        instead of silently re-running ``Captain.fail``'s no-op branch —
+        the scenario author almost certainly meant a different node or
+        forgot a recovery (``ChurnModel`` drives overlapping churn with
+        its own alive guard and is unaffected)."""
+        if name not in self.captains:
+            known = sorted(self.captains)
+            raise ValueError(
+                f"fail_node: unknown node {name!r} — known compute nodes: "
+                f"{known[:8]}{'...' if len(known) > 8 else ''}")
+        self.sim.at(at_ms, self._fail_captain, name)
+
+    def _fail_captain(self, name: str):
+        cap = self.captains[name]
+        if not cap.alive:
+            raise RuntimeError(
+                f"fail_node({name!r}): node is already failed at "
+                f"t={self.sim.now:.1f} ms — schedule a recovery first, "
+                "or use ChurnModel for overlapping fail/recover cycles")
+        cap.fail()
+
+    def fail_beacon(self, region, at_ms: float):
+        """Schedule a Beacon fault-domain failure (``region``: geohash
+        prefix string at shard_precision, prefix code, or (lat, lon))."""
+        if self.beacons is None:
+            raise RuntimeError(
+                "fail_beacon needs Beacon fault domains — construct "
+                "ArmadaSystem with shard_precision to get a BeaconSet")
+        self.sim.at(at_ms, self.beacons.fail, region)
+
+    def recover_beacon(self, region, at_ms: float):
+        if self.beacons is None:
+            raise RuntimeError(
+                "recover_beacon needs Beacon fault domains — construct "
+                "ArmadaSystem with shard_precision to get a BeaconSet")
+        self.sim.at(at_ms, self.beacons.recover, region)
 
     def fail_cargo(self, name: str, at_ms: float):
         self.sim.at(at_ms, self.cargos[name].fail)

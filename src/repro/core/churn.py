@@ -16,6 +16,10 @@ in the placement process."  This module implements it:
   policy, so replicas of latency-critical services prefer stable nodes —
   measurably fewer failovers per client at equal latency
   (tests/test_churn.py).
+* ``BeaconChurnModel`` extends churn to the control plane itself: it
+  drives ``BeaconSet`` fault-domain failures/recoveries (multi-Beacon
+  handoff + heartbeat replay) the same way ``ChurnModel`` drives node
+  churn.
 """
 from __future__ import annotations
 
@@ -155,6 +159,72 @@ class ChurnModel:
         if self.tracker:
             self.tracker.on_join(cap.node_id)
         self._schedule_failure(cap)
+
+
+class BeaconChurnModel:
+    """Control-plane churn: exponential fail/recover cycles per Beacon
+    fault domain (paper "Armada is robust" — users must survive
+    control-plane loss, not just node churn).
+
+    Drives ``BeaconSet.fail``/``recover`` in virtual time from per-region
+    exponential lifetimes, on the ``sim.substream("beacon_churn")`` RNG
+    stream so enabling it never shifts data-plane jitter draws.  With
+    ``spare_last`` (default) a failure that would kill the final live
+    Beacon is skipped and rescheduled — total control-plane loss is an
+    explicit scenario (``BeaconSet.fail`` by hand), not a default one.
+    """
+
+    def __init__(self, sim: Simulator, beacon_set, *,
+                 mttf_ms: float = 600_000.0, mttr_ms: float = 30_000.0,
+                 spare_last: bool = True, regions: tuple = ()):
+        self.sim = sim
+        self.beacons = beacon_set
+        self.mttf = mttf_ms
+        self.mttr = mttr_ms
+        self.spare_last = spare_last
+        self.regions = tuple(regions)       # default: every known domain
+        self.events: List[dict] = []
+
+    def start(self):
+        rng = self.sim.substream("beacon_churn")
+        codes = [self.beacons.region_code(r) for r in self.regions] \
+            or list(self.beacons.replicas)
+        for code in sorted(codes):
+            self._schedule_failure(code, rng)
+
+    def _schedule_failure(self, code: int, rng):
+        self.sim.after(float(rng.exponential(self.mttf)),
+                       self._fail, code, rng)
+
+    def _fail(self, code: int, rng):
+        rep = self.beacons.replicas.get(code)
+        if rep is None:
+            return
+        if not rep.alive:
+            # failed manually in the meantime: skip this cycle but keep
+            # the region's churn process alive (a silent early return
+            # would end its churn for the rest of the run)
+            self._schedule_failure(code, rng)
+            return
+        if self.spare_last and len(self.beacons.live_regions()) <= 1:
+            self._schedule_failure(code, rng)   # skip: last Beacon standing
+            return
+        self.beacons.fail(code)
+        self.events.append({"t": self.sim.now, "kind": "beacon_fail",
+                            "region": self.beacons.region_str(code)})
+        self.sim.after(float(rng.exponential(self.mttr)),
+                       self._recover, code, rng)
+
+    def _recover(self, code: int, rng):
+        rep = self.beacons.replicas.get(code)
+        if rep is None:
+            return
+        if not rep.alive:                   # still down: our recovery
+            self.beacons.recover(code)
+            self.events.append({"t": self.sim.now, "kind": "beacon_recover",
+                                "region": self.beacons.region_str(code)})
+        # recovered manually or by us — either way the cycle continues
+        self._schedule_failure(code, rng)
 
 
 def data_locality_policy(cargo_manager, service_id: str,

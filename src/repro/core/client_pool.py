@@ -54,6 +54,17 @@ user chunk to its home-region shard transparently — the host tick
 through the engine's sharded query paths, the device tick through
 per-shard fused scoring with a fixed-capacity cross-shard border pass
 (``shard_border_cap``); decisions stay identical to the unsharded pool.
+The same routing carries the multi-Beacon handoff: when a region's
+Beacon fault domain fails (``ArmadaSystem.fail_beacon``), the engine's
+ownership map re-points that region at the nearest live Beacon, so the
+pool's batched refresh — numpy, kernel, and fused device tick alike —
+hands the affected users off to the adopting shard without any per-user
+bookkeeping, and re-homes them when the Beacon recovers.  Nodes whose
+registration died with the Beacon drop out of the schedulable mask (a
+dynamic input — no jit-shape change) until their heartbeat replay
+lands; the data plane keeps serving actives throughout
+(tests/test_beacon_failover.py pins host/device decision identity
+across a kill/recover cycle).
 
 Scalar-parity notes (events transport) — the pool intentionally mirrors
 seed-code quirks so equivalence is exact: a user whose *initial*

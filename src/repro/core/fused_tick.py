@@ -506,8 +506,13 @@ class FusedTickDriver:
         self.nf = int(pool.probe_period // pool.frame_interval)
         self._stash_dirty = False       # an unfolded window is stashed
         # region sharding (engine-configured): static user→shard routing
-        # plus the two static knobs the jitted tick needs
-        self._u_shard = None            # (precision, (U,) home shard codes)
+        # plus the two static knobs the jitted tick needs.  Routing also
+        # depends on the engine's Beacon ownership map — a Beacon handoff
+        # (owner_version bump) re-routes the dead domain's users to the
+        # adopting shard, a one-time transient like a shard appearing
+        self._u_shard = None    # ((precision, owner_version), routed codes)
+        self._u_codes = None            # raw (U,) full-precision codes
+        self._owner_version = -1
         self.p_min = 0                  # 0 = unsharded scoring
         self.border_cap = 0
 
@@ -566,6 +571,7 @@ class FusedTickDriver:
             node_slots=jnp.asarray(slots),
             shards=self._build_shards())
         self._epoch = view.epoch
+        self._owner_version = pool.am.engine.owner_version
 
     def _build_shards(self) -> Optional[tuple]:
         """Per-shard index maps for the sharded scoring step (None when
@@ -583,12 +589,14 @@ class FusedTickDriver:
             self.p_min = 0
             self.border_cap = 0
             return None
-        if self._u_shard is None or self._u_shard[0] != shard_view.precision:
-            from repro.core import geohash
-            from repro.core.selection import CODE_PRECISION
-            codes = geohash.encode_batch(pool.locs[:, 0], pool.locs[:, 1],
-                                         CODE_PRECISION)
-            self._u_shard = (shard_view.precision, shard_view.route(codes))
+        route_key = (shard_view.precision, shard_view.owner_version)
+        if self._u_shard is None or self._u_shard[0] != route_key:
+            if self._u_codes is None:
+                from repro.core import geohash
+                from repro.core.selection import CODE_PRECISION
+                self._u_codes = geohash.encode_batch(
+                    pool.locs[:, 0], pool.locs[:, 1], CODE_PRECISION)
+            self._u_shard = (route_key, shard_view.route(self._u_codes))
         u_shard = self._u_shard[1]
         entries = []
         for sh in shard_view.shards:
@@ -645,9 +653,14 @@ class FusedTickDriver:
         pool = self.pool
         t0 = time.perf_counter()
         view = pool._view()
-        if view.epoch != self._epoch:
+        engine = pool.am.engine
+        if view.epoch != self._epoch \
+                or engine.owner_version != self._owner_version:
+            # node-epoch change, or a Beacon handoff/re-home re-routed
+            # regions (the transient: shard structure may retrace once)
             self._rebuild_static(view)
-        free, sched, alive = view.padded_dynamic(self.node_pad)
+        free, sched, alive = view.padded_dynamic(
+            self.node_pad, hidden=engine.hidden_nodes)
         need = np.int32(min(MIN_PROXIMITY_HITS, int(sched.sum())))
         deaths, n_deaths = self._drain_deaths()
         pool.phase_add("transport", t0)

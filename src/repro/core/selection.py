@@ -48,6 +48,17 @@ halves on arrays:
   ``repro.core.fused_tick`` fuses the same per-shard layout into the
   device-resident probe tick with jit-stable shapes under churn.
 
+* **Beacon fault domains** — a ``BeaconSet`` (``repro.core.beacon``)
+  pushes control-plane state into the engine via ``set_beacon_routing``:
+  an *ownership map* (dead region -> nearest live region; ``_ShardSet``
+  groups and routes through it, merging the dead domain's tasks into the
+  adopting shard and handing its users off — the multi-Beacon handoff)
+  and a *hidden set* (nodes whose registration died with their Beacon;
+  a dynamic schedulable-mask input with zero cache/jit impact).  While
+  nothing is hidden the owner-mapped engine remains decision-identical
+  to the unsharded one — nesting still holds for merged shards
+  (tests/test_beacon_failover.py).
+
 ``candidate_list_scalar`` preserves the pre-refactor scalar scorer
 verbatim; parity tests (``tests/test_selection.py``,
 ``tests/test_sharded_selection.py``) pin the engine's ranking against it
@@ -227,14 +238,22 @@ class _ServiceArrays:
             (t.captain is not None and t.captain.alive for t in self.tasks),
             bool, count=len(self.tasks))
 
-    def dynamic_state(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(mask, free): alive+running mask and free-slot fractions."""
+    def dynamic_state(self, hidden=None) -> Tuple[np.ndarray, np.ndarray]:
+        """(mask, free): alive+running mask and free-slot fractions.
+
+        ``hidden`` names nodes no live Beacon currently knows (their fault
+        domain's Beacon died and the heartbeat replay has not reached a
+        surviving replica yet): they stay alive on the data plane — warm
+        connections and in-flight frames are untouched — but drop out of
+        the schedulable mask, so selection cannot hand them to new users
+        until they re-register."""
         n = len(self.tasks)
         mask = np.zeros(n, bool)
         free = np.zeros(n)
         for i, t in enumerate(self.tasks):
             c = t.captain
-            if t.status == "running" and c is not None and c.alive:
+            if t.status == "running" and c is not None and c.alive \
+                    and not (hidden and c.node_id in hidden):
                 mask[i] = True
                 free[i] = c.free_fraction()
         return mask, free
@@ -283,13 +302,14 @@ class _ServiceArrays:
         sched[:st.n] = mask
         return free_p, sched
 
-    def padded_dynamic(self, node_pad: int = 256
+    def padded_dynamic(self, node_pad: int = 256, hidden=None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-tick (free, valid_sched, valid_alive) padded to match
         ``packed_static``: fp32 free fractions, schedulable mask (running
-        + alive — what selection scores) and alive mask (what the client
-        data plane may still talk to)."""
-        mask, free = self.dynamic_state()
+        + alive + Beacon-visible — what selection scores) and alive mask
+        (what the client data plane may still talk to; control-plane
+        ``hidden`` does NOT touch it)."""
+        mask, free = self.dynamic_state(hidden)
         free_p, sched = self.padded_sched(mask, free, node_pad)
         alive = np.zeros(free_p.shape[0], bool)
         alive[:len(self.tasks)] = self.alive_mask()
@@ -352,14 +372,27 @@ class _ShardSet:
     ``precision`` chars.  Rebuilt when the parent view changes, but
     shards whose own membership is unchanged adopt their predecessor's
     device caches — invalidation is effectively routed to the one shard
-    whose region actually changed."""
+    whose region actually changed.
+
+    ``owner`` maps home region codes to the region whose Beacon replica
+    currently *serves* them (Beacon fault domains — a dead domain's
+    regions are re-pointed at the nearest live Beacon).  Grouping and
+    routing both apply the map, so a failed domain's tasks merge into
+    the adopting Beacon's shard and its users hand off to the same shard
+    — decision-identical to the unsharded engine by the same nesting
+    argument: an owner-mapped user's ``p >= precision`` cells still lie
+    entirely inside their (merged) shard."""
 
     def __init__(self, parent: _ServiceArrays, precision: int,
-                 prev: Optional["_ShardSet"] = None):
+                 prev: Optional["_ShardSet"] = None,
+                 owner: Optional[Dict[int, int]] = None,
+                 owner_version: int = 0):
         self.parent_epoch = parent.epoch
         self.precision = precision
+        self.owner = dict(owner) if owner else None
+        self.owner_version = owner_version
         shift = 5 * (CODE_PRECISION - precision)
-        shard_code = parent.codes >> shift
+        shard_code = self._apply_owner(parent.codes >> shift)
         prev_by_code = {}
         if prev is not None and prev.precision == precision:
             prev_by_code = {s.code: s for s in prev.shards}
@@ -374,9 +407,24 @@ class _ShardSet:
                 sh.adopt(old)
             self.shards.append(sh)
 
+    def _apply_owner(self, codes: np.ndarray) -> np.ndarray:
+        """Map prefix codes through the Beacon ownership table (identity
+        for regions whose own Beacon is alive).  Vectorized over the
+        unique codes — the table is tiny, the arrays are not."""
+        if not self.owner:
+            return codes
+        uq, inv = np.unique(codes, return_inverse=True)
+        mapped = np.asarray([self.owner.get(int(c), int(c)) for c in uq],
+                            np.int64)
+        return mapped[inv]
+
     def route(self, u_codes: np.ndarray) -> np.ndarray:
-        """(U,) home-shard prefix code per user (full-precision codes)."""
-        return u_codes >> np.int64(5 * (CODE_PRECISION - self.precision))
+        """(U,) serving-shard prefix code per user (full-precision codes):
+        the home-region prefix mapped through Beacon ownership — a user
+        whose home Beacon is down routes to the adopting live Beacon's
+        merged shard (the multi-Beacon handoff path)."""
+        return self._apply_owner(
+            u_codes >> np.int64(5 * (CODE_PRECISION - self.precision)))
 
 
 # ---------------------------------------------------------------------------
@@ -397,8 +445,35 @@ class SelectionEngine:
         self.shard_precision = shard_precision
         self._cache: Dict[str, _ServiceArrays] = {}
         self._shard_cache: Dict[str, _ShardSet] = {}
+        # Beacon fault domains (set by a BeaconSet): region -> serving
+        # region for domains whose Beacon is down, plus the nodes no live
+        # Beacon currently knows.  ``owner_version`` bumps on every
+        # ownership change so shard sets (and the fused tick's static
+        # routing) rebuild exactly once per handoff/re-home.
+        self.hidden_nodes: frozenset = frozenset()
+        self._owner: Optional[Dict[int, int]] = None
+        self.owner_version = 0
 
     # ------------------------------------------------------------- caching
+
+    def set_beacon_routing(self, owner, hidden) -> None:
+        """Control-plane routing update from a ``BeaconSet``.
+
+        ``owner`` maps home region codes (Morton prefixes at
+        ``shard_precision``) to the region whose live Beacon serves them;
+        identity entries are dropped.  An ownership change bumps
+        ``owner_version`` — shard sets rebuild lazily on the next query,
+        with unchanged regions adopting their device caches, so a Beacon
+        handoff never triggers a global rebuild.  ``hidden`` names nodes
+        whose registration is lost (failed domain, heartbeat replay
+        pending): a purely *dynamic* input — it flows through the
+        schedulable mask without touching cached arrays or jit shapes."""
+        owner = {int(k): int(v) for k, v in (owner or {}).items()
+                 if int(k) != int(v)} or None
+        if owner != self._owner:
+            self._owner = owner
+            self.owner_version += 1
+        self.hidden_nodes = frozenset(hidden)
 
     def invalidate(self, service_id: Optional[str] = None):
         """Drop cached node arrays (replica set changed).  A per-service
@@ -425,8 +500,11 @@ class SelectionEngine:
     def _shards(self, service_id: str, arr: _ServiceArrays) -> _ShardSet:
         cur = self._shard_cache.get(service_id)
         if cur is None or cur.parent_epoch != arr.epoch \
-                or cur.precision != self.shard_precision:
-            cur = _ShardSet(arr, self.shard_precision, prev=cur)
+                or cur.precision != self.shard_precision \
+                or cur.owner_version != self.owner_version:
+            cur = _ShardSet(arr, self.shard_precision, prev=cur,
+                            owner=self._owner,
+                            owner_version=self.owner_version)
             self._shard_cache[service_id] = cur
         return cur
 
@@ -475,7 +553,7 @@ class SelectionEngine:
         u_total = len(users)
         nets = parse_nets(user_nets, u_total)
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state()
+        mask, free = arr.dynamic_state(self.hidden_nodes)
         run_ix = np.nonzero(mask)[0]
         out = np.full((u_total, k), -1, np.int32)   # always (U, k)
         if run_ix.size == 0:
@@ -614,7 +692,7 @@ class SelectionEngine:
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state()
+        mask, free = arr.dynamic_state(self.hidden_nodes)
         run_ix = np.nonzero(mask)[0]
         u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
                                        CODE_PRECISION)
@@ -680,7 +758,7 @@ class SelectionEngine:
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state()
+        mask, free = arr.dynamic_state(self.hidden_nodes)
         n_run = int(mask.sum())
         if n_run == 0:
             return None

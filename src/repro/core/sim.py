@@ -30,7 +30,9 @@ class Simulator:
         self.now = 0.0
         self._heap: List[_Event] = []
         self._seq = itertools.count()
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+        self._substreams: Dict[str, np.random.Generator] = {}
         # large-scale runs (100k+ users) disable tracing so the trace list
         # doesn't grow without bound; benchmarks keep the default
         self.trace_enabled = trace_enabled
@@ -90,6 +92,24 @@ class Simulator:
     def jitter(self, base: float, frac: float = 0.1) -> float:
         """Multiplicative noise around ``base`` (deterministic via rng)."""
         return float(base * (1.0 + frac * self.rng.standard_normal()))
+
+    def substream(self, name: str) -> np.random.Generator:
+        """Named RNG stream forked deterministically from the seed.
+
+        Control-plane injections (Beacon failures, heartbeat-replay
+        stagger) draw here instead of ``self.rng`` so they never shift
+        the data-plane jitter sequence — a run with an injected failure
+        stays draw-for-draw comparable to the same run without it, and
+        host/device tick runs that consume ``rng`` in pinned order stay
+        in lockstep when failures are added."""
+        gen = self._substreams.get(name)
+        if gen is None:
+            import zlib
+            gen = np.random.default_rng(
+                np.random.SeedSequence([self.seed & 0xFFFFFFFF,
+                                        zlib.crc32(name.encode())]))
+            self._substreams[name] = gen
+        return gen
 
     def jitter_batch(self, base: np.ndarray, frac: float = 0.1) -> np.ndarray:
         """Vectorized ``jitter``: one draw per element, bit-identical to the

@@ -1,6 +1,7 @@
 import os
 import sys
 import pathlib
+import time
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device; only launch/dryrun.py forces 512 host devices.
@@ -8,3 +9,33 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 for p in (str(ROOT / "src"), str(ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+# ---------------------------------------------------------------------------
+# tier-1 wall-clock budget
+# ---------------------------------------------------------------------------
+# The fast suite was deliberately trimmed to ~2 minutes (heavy sweeps live
+# behind `-m slow`); this guard fails a FULL green tier-1 run that exceeds
+# the budget, so slow tests can't silently creep back in.  Partial runs
+# (-k / file args / -x aborts / failing runs) are exempt — the budget is a
+# property of the whole suite, not of a debugging subset.  Override with
+# TIER1_BUDGET_S (0 disables).
+TIER1_BUDGET_S = float(os.environ.get("TIER1_BUDGET_S", "150"))
+_SESSION_T0 = time.monotonic()
+_FULL_SUITE_MIN_TESTS = 150         # below this it was a subset run
+
+
+def pytest_sessionfinish(session, exitstatus):
+    elapsed = time.monotonic() - _SESSION_T0
+    if (TIER1_BUDGET_S <= 0 or exitstatus != 0
+            or session.config.option.keyword
+            or session.config.option.markexpr != "not slow"
+            or getattr(session, "shouldstop", False)
+            or session.testscollected < _FULL_SUITE_MIN_TESTS):
+        return                  # not a full tier-1 run (see pytest.ini)
+    if elapsed > TIER1_BUDGET_S:
+        session.exitstatus = 1
+        print(f"\nERROR: tier-1 suite took {elapsed:.1f}s — over its "
+              f"{TIER1_BUDGET_S:.0f}s wall-clock budget. Move heavyweight "
+              "tests behind `-m slow` (see pytest.ini) or, if the budget "
+              "itself is wrong for this machine, set TIER1_BUDGET_S.",
+              file=sys.stderr)

@@ -1,0 +1,230 @@
+"""Beacon fault domains: fault-injection harness for multi-Beacon handoff.
+
+The paper's robustness story covers control-plane loss, not just node
+churn: a user must survive their Beacon dying.  These tests kill and
+recover per-region Beacon replicas (``ArmadaSystem.fail_beacon`` /
+``recover_beacon``) under the Fig. 8/10 fluid scenarios and pin:
+
+* **decision identity** — the host tick and the fused device tick make
+  identical decisions through the whole kill → heartbeat-replay →
+  recover → re-home cycle, including a mid-outage candidate snapshot
+  proving the handoff actually rerouted users;
+* **engine identity** — mid-outage, the sharded engine (ownership map +
+  hidden nodes) equals an unsharded engine given the same hidden set,
+  on both the numpy and kernel paths (the merged-shard nesting
+  argument);
+* **jit stability** — after the one-time handoff transient, no fused
+  program retraces per tick (and recovery reuses the pre-failure
+  traces);
+* the guard rails: dead replicas fail loudly, unknown regions raise,
+  and ``BeaconChurnModel`` never kills the last live Beacon.
+"""
+import numpy as np
+import pytest
+
+from repro.core.beacon import (ArmadaSystem, BeaconUnavailableError,
+                               detection_image)
+from repro.core.churn import BeaconChurnModel
+from repro.core.selection import SelectionEngine
+from tests.test_sharded_selection import (SERVICE, _assert_decisions_equal,
+                                          _fluid_system)
+
+PROBE = 2000.0
+
+
+def _busiest_region(sys_) -> str:
+    return sys_.beacons.busiest_region()
+
+
+def _run_kill_recover(tick, *, n_users=50, seed=0, fail_t=5_900.0,
+                      recover_t=10_100.0, until=16_000.0, node_fail=()):
+    """One Fig 8/10 fluid run with a Beacon killed and recovered mid-run.
+    Returns (pool, system, mid-outage candidate snapshots)."""
+    sys_ = _fluid_system(seed=seed, shard=3)
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
+                     -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick=tick, shard_border_cap=n_users)
+    sys_.sim.at(0.0, pool.start)
+    region = _busiest_region(sys_)
+    sys_.fail_beacon(region, fail_t)
+    sys_.recover_beacon(region, recover_t)
+    for node, t in node_fail:
+        sys_.fail_node(node, t)
+    snaps = {}
+    for label, t in (("pre", fail_t - 50.0),
+                     ("outage", fail_t + PROBE + 50.0),
+                     ("recovered", until - 50.0)):
+        sys_.sim.at(t, lambda l=label: snaps.__setitem__(
+            l, (pool.cand_task.copy(), pool.active.copy())))
+    sys_.sim.run(until=until)
+    return pool, sys_, snaps
+
+
+def test_beacon_kill_recover_host_device_decision_identity():
+    """Fig 10 regime + a Beacon kill/recover cycle (with node churn in
+    the middle): the fused device tick reproduces the host tick's full
+    decision stream, including the mid-outage handoff state."""
+    fail = [("N1", 6_200.0), ("N5", 6_300.0)]
+    host, hs, hsnap = _run_kill_recover("host", node_fail=fail)
+    dev, ds, dsnap = _run_kill_recover("device", node_fail=fail)
+    _assert_decisions_equal(dev, host)
+    for label in ("pre", "outage", "recovered"):
+        np.testing.assert_array_equal(hsnap[label][0], dsnap[label][0],
+                                      err_msg=f"cand@{label}")
+        np.testing.assert_array_equal(hsnap[label][1], dsnap[label][1],
+                                      err_msg=f"active@{label}")
+    # the scenario actually exercised the failure machinery
+    kinds = [e["kind"] for e in hs.beacons.events]
+    assert "beacon_fail" in kinds and "beacon_recover" in kinds
+    assert kinds.count("reregister") > 0 and kinds.count("rehome") > 0
+    assert hs.beacons.convergence_ms(5_900.0) > 0
+    # ... and the handoff visibly moved candidates, then re-homed them
+    assert not np.array_equal(hsnap["pre"][0], hsnap["outage"][0])
+    assert [e for e in ds.beacons.events] == [e for e in hs.beacons.events]
+
+
+def test_beacon_outage_keeps_data_plane_alive():
+    """Control-plane loss must not stall traffic: users keep their
+    actives and frames keep flowing while their Beacon is down."""
+    pool, sys_, snaps = _run_kill_recover("host", until=9_000.0,
+                                          recover_t=8_900.0)
+    cand, active = snaps["outage"]
+    assert (active >= 0).all(), "users lost their actives during an outage"
+    assert (cand >= 0).any(axis=1).all(), \
+        "handoff left users without candidates (border pass should serve)"
+    assert np.isfinite(pool.mean_latency())
+
+
+def test_sharded_engine_matches_unsharded_during_outage():
+    """Mid-outage (hidden nodes + ownership map live), the sharded
+    engine must equal an unsharded engine over the same hidden set —
+    numpy path exactly, kernel path against the unsharded kernel."""
+    sys_ = _fluid_system(seed=0, shard=3)
+    region = _busiest_region(sys_)
+    sys_.fail_beacon(region, 1_000.0)
+    sys_.sim.run(until=1_400.0)       # mid-replay: some nodes still hidden
+    eng = sys_.am.engine
+    assert eng.hidden_nodes and eng._owner, "outage not in flight"
+    tasks = sys_.am.tasks[SERVICE]
+    rng = np.random.default_rng(7)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 120),
+                     -93.22 + rng.uniform(-.5, .5, 120)], axis=1)
+    ref = SelectionEngine(top_n=3)
+    ref.set_beacon_routing(None, eng.hidden_nodes)
+    want = ref.candidate_indices(SERVICE, tasks, locs, "wifi")
+    got = eng.candidate_indices(SERVICE, tasks, locs, "wifi")
+    np.testing.assert_array_equal(got, want)
+    wk = ref.candidate_indices_kernel(SERVICE, tasks, locs, "wifi")
+    gk = eng.candidate_indices_kernel(SERVICE, tasks, locs, "wifi")
+    np.testing.assert_array_equal(gk, wk)
+    # convergence: once every node re-registered, decisions return to the
+    # no-failure sharded engine's
+    sys_.sim.run(until=3_000.0)
+    assert not eng.hidden_nodes
+    fresh = SelectionEngine(top_n=3, shard_precision=3)
+    want2 = fresh.candidate_indices(SERVICE, tasks, locs, "wifi")
+    got2 = eng.candidate_indices(SERVICE, tasks, locs, "wifi")
+    np.testing.assert_array_equal(got2, want2)
+
+
+def test_beacon_handoff_compiles_once_not_per_tick():
+    """The kill and the recover each get at most one trace per fused
+    program (the handoff transient: shard structure changes); every
+    steady tick in between and after reuses the compiled programs."""
+    from repro.core import fused_tick
+    sys_ = _fluid_system(seed=0, shard=3)
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 50),
+                     -93.22 + rng.uniform(-.5, .5, 50)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device", shard_border_cap=50)
+    sys_.sim.at(0.0, pool.start)
+    region = _busiest_region(sys_)
+    sys_.fail_beacon(region, 4_100.0)
+    sys_.recover_beacon(region, 12_100.0)
+
+    sys_.sim.run(until=6_050.0)       # first post-kill tick: transient paid
+    counts0 = dict(fused_tick.COMPILE_COUNTS)
+    sys_.sim.run(until=12_050.0)      # steady outage ticks
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts0.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"handoff retraced per tick during the outage: {delta}"
+    sys_.sim.run(until=14_050.0)      # first post-recover tick
+    counts1 = dict(fused_tick.COMPILE_COUNTS)
+    sys_.sim.run(until=18_050.0)
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts1.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"re-home retraced per tick after recovery: {delta}"
+    assert pool.ticks_run >= 8
+
+
+def test_beacon_guard_rails():
+    sys_ = _fluid_system(seed=0, shard=3)
+    bs = sys_.beacons
+    region = _busiest_region(sys_)
+    with pytest.raises(ValueError, match="no live Beacon"):
+        bs.fail("zzz")                      # unknown region
+    with pytest.raises(ValueError, match="exactly 3 geohash chars"):
+        bs.fail("zzzzzz")
+    with pytest.raises(ValueError, match="not down"):
+        bs.recover(region)
+    bs.fail(region)
+    with pytest.raises(ValueError, match="no live Beacon"):
+        bs.fail(region)                     # already dead
+    dead = bs.replicas[bs.region_code(region)]
+    with pytest.raises(BeaconUnavailableError, match="down"):
+        dead.query_service_indices(SERVICE, [(44.97, -93.22)], "wifi")
+    # bootstrap lookups route around the dead replica
+    center = dead.region_str
+    import repro.core.geohash as geohash
+    lat, lon, _, _ = geohash.decode(center)
+    assert bs.beacon_for((lat, lon)).alive
+    # unsharded systems have no fault domains to kill
+    from repro.core.cluster import real_world
+    flat = ArmadaSystem(real_world(), seed=0)
+    with pytest.raises(RuntimeError, match="shard_precision"):
+        flat.fail_beacon("9zv", 100.0)
+
+
+def test_beacon_churn_model_spares_last_replica():
+    sys_ = _fluid_system(seed=0, shard=3)
+    churn = BeaconChurnModel(sys_.sim, sys_.beacons, mttf_ms=3_000.0,
+                             mttr_ms=2_000.0)
+    churn.start()
+    sys_.sim.run(until=60_000.0)
+    kinds = [e["kind"] for e in churn.events]
+    assert kinds.count("beacon_fail") >= 2, "churn model never fired"
+    assert kinds.count("beacon_recover") >= 1
+    assert len(sys_.beacons.live_regions()) >= 1
+    # replay the event log: at no point was every Beacon dead
+    live = len(sys_.beacons.replicas)
+    low = live
+    for e in churn.events:
+        live += -1 if e["kind"] == "beacon_fail" else 1
+        low = min(low, live)
+    assert low >= 1, "spare_last failed: control plane fully lost"
+
+
+def test_bench_beacon_failover_smoke_profile():
+    """The registered benchmark's --smoke profile runs in tier-1 and
+    records a real unavailability window."""
+    from benchmarks.bench_beacon_failover import run
+    rows = run(smoke=True)
+    assert rows
+    derived = {name: d for name, _, d in rows}
+    unavail = [d for d in derived.values() if "unavail_ms=" in d]
+    assert unavail, f"no unavailability window recorded: {derived}"
+    ms = float(unavail[0].split("unavail_ms=")[1].split(";")[0])
+    # replay stagger is uniform over the bench's 1.5x-probe heartbeat
+    assert 0.0 < ms <= 3_000.0
+    # the outage visibly displaced decisions, and convergence restored them
+    d = unavail[0]
+    peak = float(d.split("displaced_peak=")[1].split(";")[0])
+    end = float(d.split("displaced_end=")[1].split(";")[0])
+    assert peak > 0.0 and end == 0.0

@@ -16,9 +16,12 @@ ARCHS = list(assigned_archs())
 # tier-1 keeps one fast representative per model family (plus the paper's
 # armada service models, tested separately below); the heavyweight reduced
 # configs run under `-m slow` — they dominated tier-1 wall time without
-# covering different code paths than their small siblings
+# covering different code paths than their small siblings (minicpm-2b is
+# the dense-transformer family's tier-1 representative; qwen3-1.7b and
+# llama3-405b are the same family at higher cost)
 _HEAVY = {"whisper-large-v3", "xlstm-1.3b", "zamba2-7b", "deepseek-moe-16b",
-          "qwen2-vl-2b", "grok-1-314b", "qwen3-14b"}
+          "qwen2-vl-2b", "grok-1-314b", "qwen3-14b", "qwen3-1.7b",
+          "llama3-405b"}
 ARCHS_TIERED = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY
                 else a for a in ARCHS]
 

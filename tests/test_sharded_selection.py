@@ -309,6 +309,85 @@ def test_sharded_device_tick_border_capacity_guard():
         sys_.sim.run(until=4_100.0)
 
 
+# ---------------------------------------------------------------------------
+# adversarial topologies (satellite: degenerate shard layouts)
+# ---------------------------------------------------------------------------
+
+def _paths_match_unsharded(tasks, users, top_n, precisions=(1, 2, 3, 4)):
+    """Numpy + kernel sharded paths against the unsharded engine."""
+    want = SelectionEngine(top_n=top_n).candidate_indices(
+        "tie", tasks, users, "wifi")
+    want_k = SelectionEngine(top_n=top_n).candidate_indices_kernel(
+        "tie", tasks, users, "wifi", node_pad=8)
+    for precision in precisions:
+        eng = SelectionEngine(top_n=top_n, shard_precision=precision)
+        got = eng.candidate_indices("tie", tasks, users, "wifi")
+        np.testing.assert_array_equal(got, want, err_msg=f"p={precision}")
+        gk = eng.candidate_indices_kernel("tie", tasks, users, "wifi",
+                                          node_pad=8)
+        np.testing.assert_array_equal(gk, want_k, err_msg=f"p={precision}")
+    return want
+
+
+def test_all_invalid_shard_escalates_to_border():
+    """A shard whose nodes are ALL dead (every captain failed) must not
+    strand its users: they escalate to the cross-shard pass and land on
+    the other region, exactly like the unsharded engine."""
+    specs = [NodeSpec(f"A{i}", (44.9 + 0.02 * i, -93.2), proc_ms=20.0,
+                      slots=2) for i in range(3)] + \
+            [NodeSpec(f"B{i}", (32.8 + 0.02 * i, -96.8), proc_ms=20.0,
+                      slots=2) for i in range(3)]
+    tasks = _tie_tasks(specs)
+    for t in tasks[:3]:
+        t.captain.fail()                    # region A: all invalid
+    users = [(44.9, -93.2), (44.91, -93.21), (32.8, -96.8)]
+    want = _paths_match_unsharded(tasks, users, top_n=3)
+    # the dead region's users really did cross shards
+    assert {int(i) for i in want[0] if i >= 0} <= {3, 4, 5}
+    assert (want[0] >= 0).any()
+
+
+def test_service_with_no_nodes_in_home_region():
+    """Users homed in a region with zero replicas anywhere near: their
+    home shard does not exist, so every path must agree with the global
+    fallback (no filter) of the unsharded engine."""
+    specs = [NodeSpec(f"B{i}", (32.8 + 0.02 * i, -96.8), proc_ms=20.0,
+                      slots=2) for i in range(4)]
+    tasks = _tie_tasks(specs)
+    users = [(60.0, 10.0), (44.9, -93.2), (32.8, -96.8)]
+    want = _paths_match_unsharded(tasks, users, top_n=3)
+    assert (want >= 0).all()                # everyone is served
+
+
+def test_single_node_global_topology():
+    """One replica on Earth: k_eff collapses to 1, every user shares the
+    single shard or the border pass — all paths agree."""
+    tasks = _tie_tasks([NodeSpec("only", (44.9, -93.2), proc_ms=20.0,
+                                 slots=2)])
+    users = [(44.9, -93.2), (-33.9, 151.2)]
+    want = _paths_match_unsharded(tasks, users, top_n=3)
+    np.testing.assert_array_equal(want, [[0, -1, -1], [0, -1, -1]])
+
+
+def test_device_tick_all_border_matches_unsharded_device():
+    """A population homed entirely outside every node region (the whole
+    pool rides the fixed-capacity border pass every tick) must decide
+    exactly like the unsharded fused tick."""
+    def run(shard):
+        sys_ = _fluid_system(seed=0, shard=shard)
+        rng = np.random.default_rng(9)
+        locs = np.stack([10.0 + rng.uniform(-.2, .2, 50),
+                         10.0 + rng.uniform(-.2, .2, 50)], axis=1)
+        pool = sys_.make_client_pool(
+            SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+            selection_backend="geo_topk", tick="device",
+            shard_border_cap=50)
+        sys_.sim.at(0.0, pool.start)
+        sys_.sim.run(until=6_100.0)
+        return pool
+    _assert_decisions_equal(run(3), run(None))
+
+
 def test_bench_sharded_selection_smoke_profile():
     """The registered benchmark's --smoke profile runs in tier-1 (it
     asserts sharded == global internally before timing)."""

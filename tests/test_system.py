@@ -88,3 +88,24 @@ def test_consistency_ordering():
     assert rows["fig12/read/volunteer"] == rows["fig13/read/volunteer"]
     # paper Fig 12b: volunteer strong writes rival/exceed cloud latency
     assert rows["fig12/write/volunteer"] > 0.8 * rows["fig12/write/cloud"]
+
+
+def test_fail_node_rejects_unknown_and_already_failed():
+    """Fault-injection hygiene: an unknown node name raises at schedule
+    time (with the known names), and a second failure scheduled while
+    the node is already down raises when it fires instead of silently
+    re-running the no-op branch — a scenario author who double-kills a
+    node almost always meant a different node or forgot the recovery."""
+    sys_ = realworld_system(seed=0, autoscale=False)
+    with pytest.raises(ValueError, match="unknown node 'nope'"):
+        sys_.fail_node("nope", 1_000.0)
+    sys_.fail_node("V1", 1_000.0)
+    sys_.fail_node("V1", 2_000.0)          # fires while V1 is still down
+    with pytest.raises(RuntimeError, match="already failed"):
+        sys_.sim.run(until=3_000.0)
+    assert not sys_.captains["V1"].alive
+    # an explicit recovery re-arms the next failure cleanly
+    sys_.captains["V1"].recover()
+    sys_.fail_node("V1", 4_000.0)
+    sys_.sim.run(until=5_000.0)
+    assert not sys_.captains["V1"].alive
