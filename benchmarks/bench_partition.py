@@ -1,0 +1,240 @@
+"""Split-brain partitions + data-locality-aware failover at scale.
+
+The partition analogue of ``bench_beacon_failover``: a multi-metro fleet
+(4 cities, ``n_per_region`` compute nodes + 3 Cargo nodes each) serves a
+region-clustered population through the fluid ``ClientPool``; a
+data-backed service has its three Cargo replicas placed in the busiest
+metro, whose Beacon is then CUT OFF (not killed) mid-run and healed
+later.  While the partition holds, the majority re-homes the cut metro's
+users AND the ``CargoManager`` re-places a data replica near the
+adopting region; the minority replica keeps accepting work (a late-join
+Captain plus two staged replica spawns, one of which conflicts), so
+registration state diverges until the heal-time merge.
+
+Measured per case:
+
+* ``reconcile_ms`` — heal-to-merge reconciliation latency (the log
+  exchange window scales with divergence size);
+* ``divergence`` / ``lww`` / ``staged`` / ``conflicts`` — split-brain
+  divergence size and how the merge resolved it;
+* ``local_frac_pre`` / ``local_frac_handoff`` — fraction of affected
+  users whose ACTIVE replica sits within the data-local radius of a
+  Cargo replica, before the cut and after the handoff re-placement.
+  ``local_frac_no_replace`` is the counterfactual against the ORIGINAL
+  placement only: what data locality the handed-off users would have
+  had if the ``CargoManager`` had not followed them;
+* ``failovers`` / ``mean_latency_ms`` — the data plane never stalled.
+
+``run(smoke=True)`` (or ``--smoke``) is the seconds-scale tier-1
+profile on the host tick; the full sweep drives 100k users × 4 regions
+through the fused device tick (the acceptance shape).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import geohash
+from repro.core.app_manager import ServiceSpec, Task
+from repro.core.beacon import ArmadaSystem, detection_image
+from repro.core.captain import Captain
+from repro.core.cluster import NodeSpec, Topology
+from repro.core.selection import CODE_PRECISION
+
+REGIONS = ((44.97, -93.22), (41.88, -87.63), (39.74, -104.99),
+           (32.78, -96.80))
+SHARD_PRECISION = 3
+SERVICE = "detect"
+PROBE_MS = 2000.0
+FRAME_MS = 500.0
+CARGOS_PER_REGION = 3
+N_RECORDS = 200
+
+
+def _system(n_per_region: int, n_regions: int, seed: int) -> ArmadaSystem:
+    rng = np.random.default_rng(seed)
+    nodes = {}
+    cargo_names = []
+    for r in range(n_regions):
+        base = REGIONS[r % len(REGIONS)]
+        for i in range(n_per_region):
+            nid = f"R{r}N{i}"
+            nodes[nid] = NodeSpec(
+                nid, (base[0] + float(rng.uniform(-0.3, 0.3)),
+                      base[1] + float(rng.uniform(-0.3, 0.3))),
+                proc_ms=float(rng.uniform(10, 30)),
+                slots=int(rng.integers(2, 9)))
+        for i in range(CARGOS_PER_REGION):  # proc_ms=0: storage-only
+            cid = f"R{r}C{i}"
+            nodes[cid] = NodeSpec(
+                cid, (base[0] + float(rng.uniform(-0.05, 0.05)),
+                      base[1] + float(rng.uniform(-0.05, 0.05))),
+                proc_ms=0.0, storage_gb=64.0)
+            cargo_names.append(cid)
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False,
+                        cargo_nodes=cargo_names,
+                        shard_precision=SHARD_PRECISION,
+                        beacon_heartbeat_ms=1.5 * PROBE_MS)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+def _users(n_users: int, n_regions: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    region = rng.integers(0, n_regions, n_users)
+    base = np.asarray(REGIONS)[region % len(REGIONS)]
+    return base + rng.uniform(-0.3, 0.3, (n_users, 2))
+
+
+def _stage_minority_work(sys_, region: str):
+    """Mid-partition control-plane activity on the cut side: one Captain
+    joins through the minority replica, one staged spawn that will apply
+    at reconcile, one that will be dropped as a duplicate."""
+    bs = sys_.beacons
+    code = bs.region_code(region)
+    lat, lon, _, _ = geohash.decode(region)
+    spec = NodeSpec("NJ0", (lat, lon), proc_ms=15.0, slots=4)
+    sys_.topo.nodes["NJ0"] = spec
+    cap = Captain(sys_.sim, sys_.topo, spec)
+    sys_.captains["NJ0"] = cap
+    bs.register_node(cap)
+    rep = bs.replicas[code]
+    rep.register_task(Task(f"{SERVICE}/t_join", SERVICE, captain=cap))
+    occ = next(n for n in sorted(bs.home)
+               if bs.home[n] == code and n in sys_.captains
+               and n != "NJ0" and sys_.captains[n].tasks)
+    rep.register_task(Task(f"{SERVICE}/t_dup", SERVICE,
+                           captain=sys_.captains[occ]))
+
+
+def _local_frac(pool, view, locs_tuple, affected) -> float:
+    """Fraction of affected users whose CURRENT TOP-1 CANDIDATE is
+    data-local to the given Cargo replica locations.  Candidates, not
+    actives: existing users keep their warm replica through a partition
+    (data-plane continuity), so the handoff shows up in what selection
+    hands out — the replica any new/failed-over request lands on."""
+    bits = view.locality_bits(locs_tuple)
+    top1 = pool.cand_task[affected, 0]
+    ok = top1 >= 0
+    if not ok.any():
+        return float("nan")
+    return float(bits[top1[ok]].mean())
+
+
+def _bench_case(n_users: int, n_per_region: int, n_regions: int,
+                tick: str, seed: int = 0):
+    n_nodes = n_per_region * n_regions
+    sys_ = _system(n_per_region, n_regions, seed)
+    region = sys_.beacons.busiest_region()
+    region_code = sys_.beacons.region_code(region)
+    lat, lon, _, _ = geohash.decode(region)
+
+    # the data-backed store lives entirely in the victim metro
+    spec = ServiceSpec(SERVICE, detection_image(), need_storage=True,
+                       locations=[(lat, lon)])
+    initial = {f"k{i}": b"x" * 8 for i in range(N_RECORDS)}
+    chosen = sys_.cargo_manager.store_register(spec, initial=initial)
+    orig_locs = tuple(sorted((float(c.spec.loc[0]), float(c.spec.loc[1]))
+                             for c in chosen))
+
+    locs = _users(n_users, n_regions, seed)
+    u_codes = geohash.encode_batch(locs[:, 0], locs[:, 1], CODE_PRECISION) \
+        >> np.int64(5 * (CODE_PRECISION - SHARD_PRECISION))
+    affected = np.nonzero(u_codes == region_code)[0]
+
+    # Unlike a Beacon crash (heartbeat replays restore some of the
+    # region's nodes within the first window, keeping its users
+    # satisfied in-shard), a partition hides the victim's nodes for the
+    # whole cut — its entire population legitimately rides the
+    # cross-shard border pass.  Size the band for that instead of the
+    # U/8 default (cost is O(border_cap x N) per tick).
+    border_cap = -(-(affected.size + 1024) // 128) * 128
+    # ...and their candidates hop across the remote fleet window to
+    # window while cut off, so they touch far more distinct nodes than
+    # a crash-and-replay run — give the EMA table headroom too.
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=FRAME_MS,
+        selection_backend="geo_topk" if tick == "device" else "numpy",
+        tick=tick, record_samples=False, shard_border_cap=border_cap,
+        ema_slots=128 if tick == "device" else None)
+    sys_.sim.at(0.0, pool.start)
+
+    # cut just before a tick boundary; heal five windows later
+    w_fail, w_rec, w_end = 5, 10, 14
+    fail_t = w_fail * PROBE_MS - 100.0
+    heal_t = w_rec * PROBE_MS - 100.0
+    sys_.partition_beacon(region, fail_t).heal_at(heal_t)
+    sys_.sim.at(fail_t + 2_000.0, _stage_minority_work, sys_, region)
+
+    tick_ms: list = []
+    frac_live: list = []
+    frac_orig: list = []
+    for w in range(1, w_end + 1):
+        t0 = time.perf_counter()
+        sys_.sim.run(until=w * PROBE_MS + 200.0)
+        tick_ms.append((time.perf_counter() - t0) * 1e3)
+        view = sys_.am.engine.service_view(SERVICE,
+                                           sys_.am.tasks[SERVICE])
+        live_locs, _ = sys_.am.engine.data_locality[SERVICE]
+        frac_live.append(_local_frac(pool, view, live_locs, affected))
+        frac_orig.append(_local_frac(pool, view, orig_locs, affected))
+    assert not sys_.sim.truncated
+
+    rec = next(e for e in sys_.beacons.events
+               if e["kind"] == "beacon_reconcile")
+    replaced = sum(1 for c in sys_.cargo_manager.placements[SERVICE]
+                   if c.node_id not in {x.node_id for x in chosen})
+    warm = sorted(tick_ms[1:w_fail - 1])
+    steady_ms = warm[len(warm) // 2] if warm else float("nan")
+    split_ms = tick_ms[w_fail - 1]              # first post-cut window
+    tag = f"partition/u{n_users}_s{n_regions}x{n_per_region}/{tick}"
+    return [
+        (tag, split_ms,
+         f"reconcile_ms={rec['latency_ms']:.1f};"
+         f"divergence={rec['divergence']};lww={rec['lww']};"
+         f"staged={rec['staged']};conflicts={rec['conflicts']};"
+         f"local_frac_pre={frac_live[w_fail - 2]:.3f};"
+         f"local_frac_handoff={frac_live[w_rec - 2]:.3f};"
+         f"local_frac_no_replace={frac_orig[w_rec - 2]:.3f};"
+         f"replicas_added={replaced};steady_ms={steady_ms:.1f};"
+         f"split_over_steady={split_ms / steady_ms:.2f}x;"
+         f"affected_users={affected.size};"
+         f"failovers={pool.failovers};total_nodes={n_nodes};"
+         f"mean_latency_ms={pool.mean_latency():.1f}"),
+    ]
+
+
+def run(smoke: bool = False):
+    if smoke:
+        # host tick: the full cut -> diverge -> heal -> reconcile cycle
+        # without device-program compiles in tier-1 (device decision
+        # identity is pinned by tests/test_partition.py)
+        sweep = [(2_000, 16, 4, "host")]
+    else:
+        sweep = [(100_000, 250, 4, "device")]   # acceptance shape
+    rows = []
+    for n_users, n_per, n_regions, tick in sweep:
+        rows.extend(_bench_case(n_users, n_per, n_regions, tick))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale profile (small U/N, host tick)")
+    args = ap.parse_args()
+    print("name,ms_per_split_tick,derived")
+    for name, ms, derived in run(smoke=args.smoke):
+        print(f"{name},{ms:.1f},{derived}")

@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_selection_scale",    # engine scaling (beyond paper)
     "benchmarks.bench_sharded_selection",  # region-sharded control plane
     "benchmarks.bench_beacon_failover",    # Beacon fault domains / handoff
+    "benchmarks.bench_partition",          # split-brain + data locality
     "benchmarks.bench_client_scale",       # client-pool scaling (beyond paper)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7

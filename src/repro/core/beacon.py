@@ -26,6 +26,17 @@ registration state:
   immediately — the adopted nodes stay visible through the surviving
   replica until they re-home at their next heartbeat).
 
+Network partitions (split-brain) are a separate fault from replica
+death: ``BeaconSet.partition`` cuts one or more regions' replicas off
+from the majority WITHOUT killing them.  A partitioned replica keeps
+accepting registrations and (staged) deployments from the Captains on
+its side, so registration state *diverges*; the majority re-homes the
+cut domain's users through the same ownership map a failure uses.
+``heal`` merges the divergent logs — last-writer-wins on heartbeat
+sequence for node registrations, staged task spawns applied or dropped
+as conflicts — and reverts ownership with a single engine push (at most
+one fused-tick retrace).  See ``docs/partition_tolerance.md``.
+
 See ``docs/beacon_fault_domains.md`` for the ownership/handoff map and
 ``benchmarks/bench_beacon_failover.py`` for the measured unavailability
 window.
@@ -48,6 +59,8 @@ from repro.core.storage.cargo import Cargo
 from repro.core.storage.cargo_manager import CargoManager
 
 HEARTBEAT_MS = 1000.0      # Captain -> Beacon heartbeat period (replay lag)
+RECONCILE_BASE_MS = 50.0       # heal: fixed log-exchange round trip
+RECONCILE_PER_ENTRY_MS = 0.5   # heal: per divergence-log-entry merge cost
 
 
 class BeaconUnavailableError(RuntimeError):
@@ -80,6 +93,14 @@ class Beacon:
         self.region_str = region_str
         self.alive = True
         self.registered_nodes: Dict[str, Captain] = {}
+        # ---- split-brain state (only a BeaconSet replica uses these) ----
+        self.partitioned = False
+        # divergence log: registrations accepted while cut off
+        self.reg_log: List[dict] = []
+        # node -> last registration sequence this replica saw (LWW merge)
+        self.hb_last: Dict[str, int] = {}
+        # deploys accepted while cut off, applied (or dropped) at heal
+        self.pending_tasks: List[object] = []
 
     def _check_alive(self):
         if not self.alive:
@@ -113,6 +134,22 @@ class Beacon:
         self._check_alive()
         self.registered_nodes[captain.node_id] = captain
         return self.spinner.captain_join(captain, runtime)
+
+    def register_task(self, task):
+        """Out-of-band replica spawn through this entry point.  A
+        partitioned replica cannot reach the global engine state, so it
+        *stages* the spawn in its divergence log; the heal-time
+        reconciliation applies it (or drops it as a conflict if the
+        majority side placed the same service on that Captain
+        meanwhile)."""
+        self._check_alive()
+        if self.partitioned:
+            self.pending_tasks.append(task)
+            self.am.sim.log("partition_stage", region=self.region_str,
+                            task=task.task_id)
+            return task
+        self.am.register_task(task)
+        return task
 
     def register_cargo(self, cargo: Cargo):
         self._check_alive()
@@ -161,6 +198,13 @@ class BeaconSet:
         self.serving: Dict[str, Optional[int]] = {}
         self.events: List[dict] = []
         self._centroids: Dict[int, tuple] = {}
+        # ---------------- split-brain (partition) state -----------------
+        # region code -> reachability group id (>0); absent = majority (0)
+        self.partition_of: Dict[int, int] = {}
+        self._next_gid = 1
+        # node -> global monotonic registration sequence (LWW clock)
+        self.hb_seq: Dict[str, int] = {}
+        self._heal_pending: set = set()
 
     # ---------------------------------------------------------- regions
 
@@ -215,15 +259,35 @@ class BeaconSet:
             raise ValueError("busiest_region: no Captains registered")
         return self.region_str(max(sorted(counts), key=lambda c: counts[c]))
 
-    def owner_of(self, code: int) -> Optional[int]:
-        """The region whose live Beacon serves ``code``'s domain: itself
-        while up, else the nearest live region (ties -> lowest code);
-        None when every Beacon is down (total control-plane loss)."""
+    def _coerce_regions(self, regions) -> List[int]:
+        """A region spec, a (lat, lon) pair, or an iterable of either —
+        normalized to a list of prefix codes."""
+        if isinstance(regions, (str, int, np.integer)):
+            return [self.region_code(regions)]
+        regions = list(regions)
+        if (len(regions) == 2
+                and all(isinstance(x, (float, np.floating))
+                        for x in regions)):
+            return [self.region_code(tuple(regions))]   # one (lat, lon)
+        return [self.region_code(r) for r in regions]
+
+    def group_of(self, code: int) -> int:
+        """Reachability group of a region: 0 = majority, >0 = the
+        partition group it was cut into."""
+        return self.partition_of.get(int(code), 0)
+
+    def owner_of(self, code: int, group: int = 0) -> Optional[int]:
+        """The region whose live Beacon serves ``code``'s domain *within
+        a reachability group*: itself while up and in-group, else the
+        nearest live in-group region (ties -> lowest code); None when the
+        group has no live Beacon.  ``group=0`` (the majority side) is
+        what user routing and the engine ownership map use; a partitioned
+        Captain resolves against its own side's group."""
         code = int(code)
         rep = self.replicas.get(code)
-        if rep is not None and rep.alive:
+        if rep is not None and rep.alive and self.group_of(code) == group:
             return code
-        live = self.live_regions()
+        live = [c for c in self.live_regions() if self.group_of(c) == group]
         if not live:
             return None
         lat, lon = self._centroid(code)
@@ -232,8 +296,11 @@ class BeaconSet:
 
     def beacon_for(self, loc) -> Beacon:
         """The replica serving a location — home if alive, else the
-        nearest live one (what a client's bootstrap lookup returns)."""
-        owner = self.owner_of(self.region_code(tuple(loc)))
+        nearest live one on the same side of any partition (a bootstrap
+        lookup from inside a cut-off region reaches that side's replica,
+        not the unreachable majority)."""
+        code = self.region_code(tuple(loc))
+        owner = self.owner_of(code, group=self.group_of(code))
         if owner is None:
             raise BeaconUnavailableError(
                 "no live Beacon replica in any region")
@@ -241,13 +308,27 @@ class BeaconSet:
 
     # ----------------------------------------------------- registration
 
+    def _record(self, rep: Beacon, node_id: str):
+        """Stamp a registration on ``rep`` with the next global sequence
+        number (the LWW clock for heal-time merges); while the replica is
+        partitioned the entry also lands in its divergence log."""
+        seq = self.hb_seq.get(node_id, 0) + 1
+        self.hb_seq[node_id] = seq
+        rep.hb_last[node_id] = seq
+        if rep.partitioned:
+            rep.reg_log.append({"t": self.sim.now, "node": node_id,
+                                "seq": seq})
+
     def register_node(self, captain: Captain, runtime: str = "armada"):
         """Home a Captain in its region's fault domain and register it
-        with the replica currently serving that domain."""
+        with the replica currently serving that domain.  A Captain
+        joining inside a partitioned region registers with its side's
+        replica — it stays hidden from the majority until heal."""
         code = self.region_code(tuple(captain.spec.loc))
         self.replica(code)                  # domain exists even if empty
         self.home[captain.node_id] = code
-        owner = self.owner_of(code)
+        group = self.group_of(code)
+        owner = self.owner_of(code, group=group)
         if owner is None:
             self.serving[captain.node_id] = None
             self._push()
@@ -255,6 +336,12 @@ class BeaconSet:
         rep = self.replica(owner)
         self.serving[captain.node_id] = owner
         dt = rep.register_node(captain, runtime)
+        self._record(rep, captain.node_id)
+        if group != 0:
+            rng = self.sim.substream("beacon")
+            self.sim.after(float(rng.uniform(0.0, self.heartbeat_ms)),
+                           self._partition_heartbeat,
+                           captain.node_id, group)
         self._push()
         return dt
 
@@ -274,6 +361,14 @@ class BeaconSet:
                 f"{self.region_str(code)!r} (live: {known})")
         rep.alive = False
         rep.registered_nodes.clear()
+        if code in self.partition_of:
+            # a partitioned replica dying collapses the split-brain into
+            # a plain failure: its divergence log dies with it
+            self.partition_of.pop(code, None)
+            self._heal_pending.discard(code)
+            rep.partitioned = False
+            rep.reg_log.clear()
+            rep.pending_tasks.clear()
         self.sim.log("beacon_fail", region=rep.region_str)
         self.events.append({"t": self.sim.now, "kind": "beacon_fail",
                             "region": rep.region_str})
@@ -284,6 +379,11 @@ class BeaconSet:
             # replay at the Captain's next heartbeat (uniform phase)
             self.sim.after(float(rng.uniform(0.0, self.heartbeat_ms)),
                            self._reregister, node)
+        owner = self.owner_of(code, group=0)
+        if owner is not None:
+            # the adopting region inherits this domain's users — give
+            # them a nearby data replica too (no-op without stores)
+            self.cargo_manager.on_domain_handoff(self._centroid(owner))
         self._push()
 
     def recover(self, region):
@@ -308,6 +408,215 @@ class BeaconSet:
                            self._rehome, node)
         self._push()
 
+    # ------------------------------------------------ partition / heal
+
+    def partition(self, regions) -> int:
+        """Cut one or more regions' replicas off from the majority
+        (split-brain) WITHOUT killing them.  Returns the reachability
+        group id.
+
+        Majority side: the cut domains' users hand off through the
+        ownership map exactly like a failure, their nodes go hidden, and
+        the ``CargoManager`` re-places data replicas near each adopting
+        region.  Minority side: each cut replica keeps serving its own
+        Captains — registrations and staged deploys accumulate in its
+        divergence log until ``heal``."""
+        codes = self._coerce_regions(regions)
+        for code in codes:
+            rep = self.replicas.get(code)
+            if rep is None or not rep.alive:
+                known = sorted(self.region_str(c)
+                               for c in self.live_regions())
+                raise ValueError(
+                    f"partition: no live Beacon for region "
+                    f"{self.region_str(code)!r} (live: {known})")
+            if code in self.partition_of:
+                raise ValueError(
+                    f"partition: region {self.region_str(code)!r} is "
+                    "already partitioned — heal it first")
+        majority = [c for c in self.live_regions()
+                    if c not in self.partition_of and c not in codes]
+        if not majority:
+            raise ValueError(
+                "partition: refusing to cut off every majority region — "
+                "at least one live group-0 Beacon must remain")
+        gid = self._next_gid
+        self._next_gid += 1
+        rng = self.sim.substream("beacon")
+        for code in codes:
+            self.partition_of[code] = gid
+            rep = self.replicas[code]
+            rep.partitioned = True
+            self.sim.log("beacon_partition", region=rep.region_str,
+                         group=gid)
+            self.events.append({"t": self.sim.now,
+                                "kind": "beacon_partition",
+                                "region": rep.region_str, "group": gid})
+        cut = set(codes)
+        for node, home in sorted(self.home.items()):
+            cur = self.serving.get(node)
+            if home in cut:
+                # the Captain is physically on the minority side: its
+                # heartbeats reach only its home replica from now on.
+                # If a majority adopter was serving it, that adopter
+                # keeps a now-stale record (divergence, resolved by LWW
+                # at heal).
+                rep = self.replicas[home]
+                cap = self.spinner.captains.get(node)
+                if cap is not None:
+                    rep.registered_nodes[node] = cap
+                self.serving[node] = home
+                self._record(rep, node)
+                self.sim.after(
+                    float(rng.uniform(0.0, self.heartbeat_ms)),
+                    self._partition_heartbeat, node, gid)
+            elif cur in cut:
+                # majority-side Captain adopted by a now-cut replica:
+                # unreachable — hidden until heartbeat replay lands it
+                # on a majority Beacon (the minority keeps its stale
+                # record for LWW).
+                self.serving[node] = None
+                self.sim.after(
+                    float(rng.uniform(0.0, self.heartbeat_ms)),
+                    self._reregister, node)
+        for code in codes:
+            owner = self.owner_of(code, group=0)
+            if owner is not None:
+                self.cargo_manager.on_domain_handoff(
+                    self._centroid(owner))
+        self._push()
+        return gid
+
+    def _partition_heartbeat(self, node_id: str, gid: int):
+        """Minority-side heartbeat: while the partition holds, a cut-off
+        Captain keeps refreshing its registration on its home replica,
+        advancing its LWW sequence (so at heal the side that actually
+        heard the node last wins the merge)."""
+        home = self.home.get(node_id)
+        if home is None or self.partition_of.get(home) != gid:
+            return                          # healed / collapsed meanwhile
+        rep = self.replicas.get(home)
+        if rep is None or not rep.alive:
+            return
+        cap = self.spinner.captains.get(node_id)
+        if cap is not None and cap.alive:
+            rep.registered_nodes[node_id] = cap
+            self.serving[node_id] = home
+            self._record(rep, node_id)
+        self.sim.after(self.heartbeat_ms, self._partition_heartbeat,
+                       node_id, gid)
+
+    def heal(self, regions=None) -> float:
+        """Reconnect partitioned regions (all of them by default).  The
+        replicas first exchange divergence logs — a latency of
+        ``RECONCILE_BASE_MS + RECONCILE_PER_ENTRY_MS × divergence`` —
+        then ``_reconcile`` merges state and reverts ownership in one
+        engine push.  Until the merge lands, routing still treats the
+        regions as cut (that window IS the reconciliation latency the
+        benchmark measures).  Returns the scheduled exchange delay."""
+        if regions is None:
+            codes = sorted(self.partition_of)
+        else:
+            codes = self._coerce_regions(regions)
+        if not codes:
+            raise ValueError("heal: no region is partitioned")
+        for code in codes:
+            if code not in self.partition_of:
+                raise ValueError(
+                    f"heal: region {self.region_str(code)!r} is not "
+                    "partitioned")
+            if code in self._heal_pending:
+                raise ValueError(
+                    f"heal: region {self.region_str(code)!r} is already "
+                    "reconciling")
+        divergence = sum(
+            len(self.replicas[c].reg_log)
+            + len(self.replicas[c].pending_tasks) for c in codes)
+        delay = RECONCILE_BASE_MS + RECONCILE_PER_ENTRY_MS * divergence
+        self._heal_pending.update(codes)
+        self.sim.log("beacon_heal",
+                     regions=[self.region_str(c) for c in codes],
+                     divergence=divergence)
+        self.events.append({"t": self.sim.now, "kind": "beacon_heal",
+                            "regions": [self.region_str(c)
+                                        for c in codes],
+                            "divergence": divergence})
+        self.sim.after(delay, self._reconcile, codes, self.sim.now)
+        return delay
+
+    def _reconcile(self, codes: List[int], heal_t: float):
+        """Merge a healed partition's divergent state back into the
+        majority:
+
+        * node registrations — last-writer-wins on the heartbeat
+          sequence: whichever replica heard the node most recently keeps
+          it, every other holder drops its stale record;
+        * staged task spawns — applied through the ApplicationManager
+          (one engine invalidation each, shapes stay within the node
+          pad) unless the Captain died or the majority placed the same
+          service there meanwhile (a conflict, dropped and logged).
+
+        One ``_push`` at the end reverts ownership and un-hides the
+        minority's nodes: at most one fused-tick retrace per heal."""
+        lww = conflicts = applied = 0
+        divergence = sum(
+            len(self.replicas[c].reg_log)
+            + len(self.replicas[c].pending_tasks) for c in codes)
+        for code in codes:
+            rep = self.replicas[code]
+            rep.partitioned = False
+            self.partition_of.pop(code, None)
+            self._heal_pending.discard(code)
+        for code in codes:
+            rep = self.replicas[code]
+            for node in sorted(rep.registered_nodes):
+                holders = [(c, r) for c, r in self.replicas.items()
+                           if r.alive and node in r.registered_nodes]
+                if len(holders) <= 1:
+                    continue
+                winner_code, winner = max(
+                    holders, key=lambda cr: (cr[1].hb_last.get(node, 0),
+                                             -cr[0]))
+                for c, r in holders:
+                    if r is not winner:
+                        r.registered_nodes.pop(node, None)
+                self.serving[node] = winner_code
+                lww += 1
+            for task in rep.pending_tasks:
+                cap = task.captain
+                if cap is None or not cap.alive:
+                    conflicts += 1
+                    self.sim.log("reconcile_conflict", task=task.task_id,
+                                 reason="captain_dead")
+                    continue
+                existing = self.am.tasks.get(task.service_id, ())
+                if any(t.captain is cap and t.status == "running"
+                       for t in existing):
+                    conflicts += 1
+                    self.sim.log("reconcile_conflict", task=task.task_id,
+                                 reason="duplicate_placement")
+                    continue
+                task.status = "running"
+                task.ready_at = self.sim.now
+                cap.tasks[task.task_id] = task
+                self.am.register_task(task)
+                applied += 1
+            rep.reg_log.clear()
+            rep.pending_tasks.clear()
+        latency = self.sim.now - heal_t
+        self.sim.log("beacon_reconcile",
+                     regions=[self.region_str(c) for c in codes],
+                     divergence=divergence, lww=lww,
+                     conflicts=conflicts, staged=applied,
+                     latency_ms=latency)
+        self.events.append({"t": self.sim.now, "kind": "beacon_reconcile",
+                            "regions": [self.region_str(c)
+                                        for c in codes],
+                            "divergence": divergence, "lww": lww,
+                            "conflicts": conflicts, "staged": applied,
+                            "latency_ms": latency})
+        self._push()
+
     def _reregister(self, node_id: str):
         """Heartbeat replay: a Captain that lost its Beacon registers
         with the replica currently serving its home domain."""
@@ -321,13 +630,15 @@ class BeaconSet:
             # resume when it recovers — keep polling at heartbeat cadence
             self.sim.after(self.heartbeat_ms, self._reregister, node_id)
             return
-        target = self.owner_of(self.home[node_id])
+        home = self.home[node_id]
+        target = self.owner_of(home, group=self.group_of(home))
         if target is None:                  # still no live Beacon: retry
             self.sim.after(self.heartbeat_ms, self._reregister, node_id)
             return
         rep = self.replica(target)
         rep.registered_nodes[node_id] = cap
         self.serving[node_id] = target
+        self._record(rep, node_id)
         self.sim.log("beacon_reregister", node=node_id,
                      region=rep.region_str)
         self.events.append({"t": self.sim.now, "kind": "reregister",
@@ -354,9 +665,14 @@ class BeaconSet:
             self.sim.after(self.heartbeat_ms, self._rehome, node_id)
             return
         if cur is not None:
-            self.replica(cur).registered_nodes.pop(node_id, None)
+            cross = self.group_of(cur) != self.group_of(home)
+            if not cross:
+                self.replica(cur).registered_nodes.pop(node_id, None)
+            # across a partition the adopter is unreachable: its stale
+            # record stays until heal-time LWW drops it
         rep.registered_nodes[node_id] = cap
         self.serving[node_id] = home
+        self._record(rep, node_id)
         self.events.append({"t": self.sim.now, "kind": "rehome",
                             "node": node_id, "region": rep.region_str})
         self._push()
@@ -364,17 +680,23 @@ class BeaconSet:
     # ------------------------------------------------------- engine push
 
     def hidden_nodes(self) -> frozenset:
-        return frozenset(n for n, s in self.serving.items() if s is None)
+        """Nodes invisible to majority-side selection: registration lost
+        (``serving is None``) or only reachable through a partitioned
+        replica (serving region's group != 0)."""
+        return frozenset(n for n, s in self.serving.items()
+                         if s is None or self.group_of(s) != 0)
 
     def ownership(self) -> Dict[int, int]:
-        """Non-identity region -> serving-region entries (dead domains
-        only); regions with no live owner are omitted — their nodes are
-        hidden anyway and their users fall to the border pass."""
+        """Non-identity region -> serving-region entries: dead domains
+        AND partitioned domains (whose users the majority re-homes the
+        same way); regions with no live majority owner are omitted —
+        their nodes are hidden anyway and their users fall to the border
+        pass."""
         out = {}
         for code, rep in self.replicas.items():
-            if rep.alive:
+            if rep.alive and self.group_of(code) == 0:
                 continue
-            owner = self.owner_of(code)
+            owner = self.owner_of(code, group=0)
             if owner is not None:
                 out[code] = owner
         return out
@@ -417,6 +739,8 @@ class ArmadaSystem:
         self.am = ApplicationManager(self.sim, topo, self.spinner,
                                      self.cargo_manager,
                                      shard_precision=shard_precision)
+        # storage placements feed the selection score (data locality)
+        self.cargo_manager.attach_engine(self.am.engine)
         self.beacon = Beacon(self.am, self.spinner, self.cargo_manager)
         # region-sharded systems get per-region Beacon fault domains; the
         # global facade above still serves deployment/bootstrap calls
@@ -516,8 +840,52 @@ class ArmadaSystem:
                 "ArmadaSystem with shard_precision to get a BeaconSet")
         self.sim.at(at_ms, self.beacons.recover, region)
 
+    def partition_beacon(self, regions, at_ms: float) -> "PartitionHandle":
+        """Schedule a split-brain: cut ``regions`` (one spec or a list)
+        off from the majority at ``at_ms``.  Region specs are validated
+        at schedule time (liveness is checked when the event fires).
+        Returns a handle whose ``heal_at(ms)`` schedules the heal."""
+        if self.beacons is None:
+            raise RuntimeError(
+                "partition_beacon needs Beacon fault domains — construct "
+                "ArmadaSystem with shard_precision to get a BeaconSet")
+        self.beacons._coerce_regions(regions)    # parse errors fail now
+        self.sim.at(at_ms, self.beacons.partition, regions)
+        return PartitionHandle(self, regions)
+
     def fail_cargo(self, name: str, at_ms: float):
-        self.sim.at(at_ms, self.cargos[name].fail)
+        """Schedule a Cargo node failure — same contract as
+        ``fail_node``: unknown names raise immediately, failing an
+        already-dead Cargo raises when the event fires."""
+        if name not in self.cargos:
+            known = sorted(self.cargos)
+            raise ValueError(
+                f"fail_cargo: unknown cargo {name!r} — known cargo "
+                f"nodes: {known[:8]}{'...' if len(known) > 8 else ''}")
+        self.sim.at(at_ms, self._fail_cargo, name)
+
+    def _fail_cargo(self, name: str):
+        cg = self.cargos[name]
+        if not cg.alive:
+            raise RuntimeError(
+                f"fail_cargo({name!r}): cargo is already failed at "
+                f"t={self.sim.now:.1f} ms — the scenario author almost "
+                "certainly meant a different node")
+        cg.fail()
+        self.cargo_manager.on_cargo_fail(cg)
+
+
+class PartitionHandle:
+    """Ticket returned by ``ArmadaSystem.partition_beacon``: remembers
+    which regions were cut so the matching heal is one call."""
+
+    def __init__(self, system: "ArmadaSystem", regions):
+        self.system = system
+        self.regions = regions
+
+    def heal_at(self, at_ms: float):
+        self.system.sim.at(at_ms, self.system.beacons.heal, self.regions)
+        return self
 
 
 def detection_image() -> Image:

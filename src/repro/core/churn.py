@@ -20,6 +20,9 @@ in the placement process."  This module implements it:
   drives ``BeaconSet`` fault-domain failures/recoveries (multi-Beacon
   handoff + heartbeat replay) the same way ``ChurnModel`` drives node
   churn.
+* ``PartitionChurnModel`` drives split-brain cuts and heals
+  (``BeaconSet.partition``/``heal``) — divergence and reconciliation
+  under stochastic network partitions instead of crashes.
 """
 from __future__ import annotations
 
@@ -225,6 +228,74 @@ class BeaconChurnModel:
                                 "region": self.beacons.region_str(code)})
         # recovered manually or by us — either way the cycle continues
         self._schedule_failure(code, rng)
+
+
+class PartitionChurnModel:
+    """Stochastic split-brain: exponential partition/heal cycles per
+    Beacon fault domain, the network-cut analogue of
+    ``BeaconChurnModel``'s replica crashes.
+
+    Runs on the ``sim.substream("partition_churn")`` RNG stream so
+    enabling it never shifts data-plane jitter draws.  With
+    ``spare_majority`` (default) a cut that would leave no live
+    majority-side Beacon is skipped and rescheduled — ``BeaconSet``
+    rejects such cuts anyway, and churn should never abort a run.  Each
+    partition heals after an exponential ``heal_ms`` unless the replica
+    failed or was healed manually meanwhile (the group-id check makes
+    the heal idempotent against manual interference)."""
+
+    def __init__(self, sim: Simulator, beacon_set, *,
+                 mtbp_ms: float = 600_000.0, heal_ms: float = 30_000.0,
+                 spare_majority: bool = True, regions: tuple = ()):
+        self.sim = sim
+        self.beacons = beacon_set
+        self.mtbp = mtbp_ms                 # mean time between partitions
+        self.heal = heal_ms
+        self.spare_majority = spare_majority
+        self.regions = tuple(regions)       # default: every known domain
+        self.events: List[dict] = []
+
+    def start(self):
+        rng = self.sim.substream("partition_churn")
+        codes = [self.beacons.region_code(r) for r in self.regions] \
+            or list(self.beacons.replicas)
+        for code in sorted(codes):
+            self._schedule_cut(code, rng)
+
+    def _schedule_cut(self, code: int, rng):
+        self.sim.after(float(rng.exponential(self.mtbp)),
+                       self._cut, code, rng)
+
+    def _live_majority_without(self, code: int) -> int:
+        return sum(1 for c in self.beacons.live_regions()
+                   if c != code and c not in self.beacons.partition_of)
+
+    def _cut(self, code: int, rng):
+        b = self.beacons
+        rep = b.replicas.get(code)
+        if rep is None:
+            return
+        if (not rep.alive or code in b.partition_of
+                or (self.spare_majority
+                    and self._live_majority_without(code) < 1)):
+            # dead, already cut, or would empty the majority: skip this
+            # cycle but keep the region's churn process alive
+            self._schedule_cut(code, rng)
+            return
+        gid = b.partition(code)
+        self.events.append({"t": self.sim.now, "kind": "partition",
+                            "region": b.region_str(code), "group": gid})
+        self.sim.after(float(rng.exponential(self.heal)),
+                       self._heal, code, gid, rng)
+
+    def _heal(self, code: int, gid: int, rng):
+        b = self.beacons
+        if b.partition_of.get(code) == gid and code not in b._heal_pending:
+            b.heal(code)
+            self.events.append({"t": self.sim.now, "kind": "heal",
+                                "region": b.region_str(code)})
+        # else: replica died (partition collapsed) or healed manually
+        self._schedule_cut(code, rng)
 
 
 def data_locality_policy(cargo_manager, service_id: str,

@@ -353,7 +353,8 @@ class ClientPool:
                  tick: str = "host",
                  rtt_model: Callable = default_rtt_model,
                  record_samples: bool = True,
-                 shard_border_cap: Optional[int] = None):
+                 shard_border_cap: Optional[int] = None,
+                 ema_slots: Optional[int] = None):
         if transport not in ("events", "fluid"):
             raise ValueError(f"unknown transport {transport!r}")
         if selection_backend not in ("numpy", "geo_topk"):
@@ -410,6 +411,10 @@ class ClientPool:
         # device tick + region-sharded engine: rows reserved for the
         # cross-shard border pass (None = FusedTickDriver's U/8 default)
         self.shard_border_cap = shard_border_cap
+        # device tick: per-user EMA node slots (None = driver default);
+        # raise for scenarios where users sample many distinct nodes —
+        # e.g. a long partition scoring a region against remote metros
+        self.ema_slots = ema_slots
 
         if client_ids is not None:
             self.client_ids: Optional[List[str]] = list(client_ids)
@@ -509,7 +514,8 @@ class ClientPool:
         then hand the probe-tick chain to the fused device driver."""
         from repro.core.fused_tick import FusedTickDriver
         self._refresh(sel, initial=True)
-        self._dev = FusedTickDriver(self)
+        self._dev = FusedTickDriver(self) if self.ema_slots is None \
+            else FusedTickDriver(self, ema_slots=self.ema_slots)
         self._dev.init_state()
         self._dev.tick()
 
@@ -1127,6 +1133,25 @@ class ClientPool:
         """(k, 2) locations of running users (ApplicationManager's
         autoscale user-grouping protocol)."""
         return self.locs[self.running]
+
+    def data_local_fraction(self, users=None) -> float:
+        """Fraction of the given users (default: all) whose ACTIVE
+        replica sits within ``DATA_LOCAL_RADIUS_KM`` of one of the
+        service's Cargo replicas — the in-situ-data-access success rate
+        (paper §3.4).  nan when the service has no data-locality entry
+        in the engine or none of the users is active."""
+        entry = self.am.engine.data_locality.get(self.service_id)
+        if entry is None:
+            return float("nan")
+        locs, _ = entry
+        view = self._view()
+        bits = view.locality_bits(locs)
+        act = self.active if users is None \
+            else self.active[np.asarray(users, np.int64)]
+        ok = act >= 0
+        if not ok.any():
+            return float("nan")
+        return float(bits[act[ok]].mean())
 
     def active_node(self, u: int) -> Optional[str]:
         t = int(self.active[u])

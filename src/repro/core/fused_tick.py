@@ -660,7 +660,8 @@ class FusedTickDriver:
             # regions (the transient: shard structure may retrace once)
             self._rebuild_static(view)
         free, sched, alive = view.padded_dynamic(
-            self.node_pad, hidden=engine.hidden_nodes)
+            self.node_pad, hidden=engine.hidden_nodes,
+            locality=engine.data_locality.get(pool.service_id))
         need = np.int32(min(MIN_PROXIMITY_HITS, int(sched.sum())))
         deaths, n_deaths = self._drain_deaths()
         pool.phase_add("transport", t0)

@@ -80,6 +80,17 @@ W_RESOURCE = 0.5
 W_AFFINITY = 0.2
 W_PROXIMITY = 0.3
 
+# data-locality preference (paper §3.4 in-situ data access): bonus for nodes
+# within DATA_LOCAL_RADIUS_KM of an alive Cargo replica of the service's
+# store.  Folded into the free-fraction vector (scaled by 1/W_RESOURCE) in
+# ``_ServiceArrays.dynamic_state`` — the single dynamic-input injection point
+# shared by the numpy, geo_topk-kernel and fused-device tick paths — so all
+# three stay decision-identical without touching kernel code.  Off (exact
+# pre-existing scores) unless a CargoManager pushed placements for the
+# service via ``SelectionEngine.set_data_locality``.
+W_DATA = 0.15
+DATA_LOCAL_RADIUS_KM = 50.0
+
 PROXIMITY_PRECISION = 4       # max geohash chars the proximity filter uses
 MIN_PROXIMITY_HITS = 4        # widen the cell until this many replicas hit
 CODE_PRECISION = 9            # full-precision Morton codes (45 bits)
@@ -212,6 +223,7 @@ class _ServiceArrays:
         self.fingerprint = _fingerprint(tasks)
         self.epoch = next(_EPOCH)       # bumps on every rebuild
         self._packed: Dict[int, PackedStatic] = {}
+        self._local_bits: Dict[tuple, np.ndarray] = {}
         n = len(self.tasks)
         self.lat = np.empty(n)
         self.lon = np.empty(n)
@@ -238,7 +250,27 @@ class _ServiceArrays:
             (t.captain is not None and t.captain.alive for t in self.tasks),
             bool, count=len(self.tasks))
 
-    def dynamic_state(self, hidden=None) -> Tuple[np.ndarray, np.ndarray]:
+    def locality_bits(self, locs: tuple) -> np.ndarray:
+        """(T,) float64 data-locality bits: 1.0 where the task's node sits
+        within ``DATA_LOCAL_RADIUS_KM`` of any of the given Cargo replica
+        locations.  Depends only on static node positions, so it is cached
+        per replica-location tuple on this view."""
+        bits = self._local_bits.get(locs)
+        if bits is None:
+            if not locs:
+                bits = np.zeros(len(self.tasks))
+            else:
+                pts = np.asarray(locs, np.float64).reshape(-1, 2)
+                d = geohash.distance_km_batch(
+                    self.lat[:, None], self.lon[:, None],
+                    pts[None, :, 0], pts[None, :, 1])
+                bits = (d.min(axis=1) <= DATA_LOCAL_RADIUS_KM
+                        ).astype(np.float64)
+            self._local_bits[locs] = bits
+        return bits
+
+    def dynamic_state(self, hidden=None, locality=None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
         """(mask, free): alive+running mask and free-slot fractions.
 
         ``hidden`` names nodes no live Beacon currently knows (their fault
@@ -246,7 +278,16 @@ class _ServiceArrays:
         surviving replica yet): they stay alive on the data plane — warm
         connections and in-flight frames are untouched — but drop out of
         the schedulable mask, so selection cannot hand them to new users
-        until they re-register."""
+        until they re-register.
+
+        ``locality`` is an optional ``(replica_locs, weight)`` pair from
+        ``SelectionEngine.set_data_locality``: the data-locality bonus is
+        folded into ``free`` here, scaled by ``1/W_RESOURCE`` so the final
+        Algorithm-1 score gains exactly ``weight`` per data-local node.
+        This is the single injection point every tick path (numpy scorer,
+        geo_topk kernel, fused device tick) draws its dynamic node state
+        from — folding the term here keeps them decision-identical by
+        construction."""
         n = len(self.tasks)
         mask = np.zeros(n, bool)
         free = np.zeros(n)
@@ -256,6 +297,10 @@ class _ServiceArrays:
                     and not (hidden and c.node_id in hidden):
                 mask[i] = True
                 free[i] = c.free_fraction()
+        if locality is not None:
+            locs, weight = locality
+            free = free + (weight / W_RESOURCE) * self.locality_bits(locs) \
+                * mask
         return mask, free
 
     def packed_static(self, node_pad: int = 256) -> PackedStatic:
@@ -302,14 +347,16 @@ class _ServiceArrays:
         sched[:st.n] = mask
         return free_p, sched
 
-    def padded_dynamic(self, node_pad: int = 256, hidden=None
+    def padded_dynamic(self, node_pad: int = 256, hidden=None,
+                       locality=None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-tick (free, valid_sched, valid_alive) padded to match
-        ``packed_static``: fp32 free fractions, schedulable mask (running
-        + alive + Beacon-visible — what selection scores) and alive mask
-        (what the client data plane may still talk to; control-plane
-        ``hidden`` does NOT touch it)."""
-        mask, free = self.dynamic_state(hidden)
+        ``packed_static``: fp32 free fractions (data-locality bonus folded
+        in when ``locality`` is set — see ``dynamic_state``), schedulable
+        mask (running + alive + Beacon-visible — what selection scores)
+        and alive mask (what the client data plane may still talk to;
+        control-plane ``hidden`` does NOT touch it)."""
+        mask, free = self.dynamic_state(hidden, locality)
         free_p, sched = self.padded_sched(mask, free, node_pad)
         alive = np.zeros(free_p.shape[0], bool)
         alive[:len(self.tasks)] = self.alive_mask()
@@ -453,8 +500,28 @@ class SelectionEngine:
         self.hidden_nodes: frozenset = frozenset()
         self._owner: Optional[Dict[int, int]] = None
         self.owner_version = 0
+        # data-locality preference (set by a CargoManager): per-service
+        # (replica_locs, weight) — a purely dynamic input like ``hidden``,
+        # folded into the free-fraction vector so every tick path scores
+        # it identically (no jit-shape or cache impact)
+        self.data_locality: Dict[str, Tuple[tuple, float]] = {}
 
     # ------------------------------------------------------------- caching
+
+    def set_data_locality(self, service_id: str, replica_locs,
+                          weight: float = W_DATA) -> None:
+        """Data-placement update from a ``CargoManager``: the (lat, lon)
+        locations of the service's alive Cargo replicas.  Nodes within
+        ``DATA_LOCAL_RADIUS_KM`` of any replica gain ``weight`` on their
+        Algorithm-1 score, so failover and handoff prefer nodes that can
+        reach the service's store in situ (paper §3.4).  Pass an empty /
+        None ``replica_locs`` to clear the preference."""
+        if not replica_locs:
+            self.data_locality.pop(service_id, None)
+        else:
+            self.data_locality[service_id] = (
+                tuple(tuple(map(float, p)) for p in replica_locs),
+                float(weight))
 
     def set_beacon_routing(self, owner, hidden) -> None:
         """Control-plane routing update from a ``BeaconSet``.
@@ -553,7 +620,8 @@ class SelectionEngine:
         u_total = len(users)
         nets = parse_nets(user_nets, u_total)
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state(self.hidden_nodes)
+        mask, free = arr.dynamic_state(self.hidden_nodes,
+                                       self.data_locality.get(service_id))
         run_ix = np.nonzero(mask)[0]
         out = np.full((u_total, k), -1, np.int32)   # always (U, k)
         if run_ix.size == 0:
@@ -692,7 +760,8 @@ class SelectionEngine:
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state(self.hidden_nodes)
+        mask, free = arr.dynamic_state(self.hidden_nodes,
+                                       self.data_locality.get(service_id))
         run_ix = np.nonzero(mask)[0]
         u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
                                        CODE_PRECISION)
@@ -758,7 +827,8 @@ class SelectionEngine:
         users = np.asarray(user_locs, np.float64).reshape(-1, 2)
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
-        mask, free = arr.dynamic_state(self.hidden_nodes)
+        mask, free = arr.dynamic_state(self.hidden_nodes,
+                                       self.data_locality.get(service_id))
         n_run = int(mask.sum())
         if n_run == 0:
             return None

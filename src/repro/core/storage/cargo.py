@@ -22,6 +22,14 @@ from repro.core.sim import Simulator
 LOOKUP_MS = 2.0          # descriptor match against 1000-entry store
 WRITE_MS = 1.5
 RECORD_BYTES = 8 + 128 * 8
+TIMEOUT_MS = 250.0       # client-side give-up on an unresponsive Cargo
+
+
+class CargoUnavailableError(RuntimeError):
+    """The addressed Cargo node is down: the request timed out.  Delivered
+    to the caller's ``on_error`` callback (or signalled through ``on_done``
+    when none was given) so Captains can retry against another replica
+    from their ``cargo_discover`` candidate list instead of hanging."""
 
 
 class Cargo:
@@ -49,14 +57,42 @@ class Cargo:
 
     # ---------------------------------------------------------------- I/O
 
+    def _timeout(self, t0: float, op: str, key: str, on_error, fallback):
+        """Deliver an explicit dead-node failure after the client-side
+        timeout: ``on_error(CargoUnavailableError)`` when the caller gave
+        one, else ``fallback`` (a sentinel through ``on_done`` — the
+        caller must never hang on a dead Cargo)."""
+        def _fire():
+            self.sim.log("cargo_timeout", node=self.node_id, op=op, key=key)
+            if on_error is not None:
+                on_error(CargoUnavailableError(
+                    f"cargo {self.node_id} is down ({op} {key!r} timed "
+                    f"out after {self.sim.now - t0:.1f} ms)"))
+            else:
+                fallback()
+        self.sim.after(max(0.0, t0 + TIMEOUT_MS - self.sim.now), _fire)
+
     def read(self, service_id: str, key: str, requester_id: str,
-             on_done: Callable):
-        """Latency = RTT + lookup.  on_done(value, ms)."""
+             on_done: Callable, on_error: Optional[Callable] = None):
+        """Latency = RTT + lookup.  on_done(value, ms).
+
+        A dead Cargo (at request time or mid-flight) times out after
+        ``TIMEOUT_MS``: ``on_error(CargoUnavailableError)`` when given,
+        else ``on_done(None, ms)`` — never a silent hang."""
         rtt = self.sim.jitter(self.topo.rtt(requester_id, self.node_id), 0.08)
         t0 = self.sim.now
 
+        def _fail():
+            self._timeout(t0, "read", key, on_error,
+                          lambda: on_done(None, self.sim.now - t0))
+
+        if not self.alive:
+            _fail()
+            return
+
         def _lookup():
             if not self.alive:
+                _fail()
                 return
             val = self.stores.get(service_id, {}).get(key)
             self.sim.after(rtt / 2, lambda: on_done(val, self.sim.now - t0))
@@ -64,13 +100,28 @@ class Cargo:
         self.sim.after(rtt / 2 + self.sim.jitter(LOOKUP_MS, 0.2), _lookup)
 
     def write(self, service_id: str, key: str, value: bytes,
-              requester_id: str, consistency: str, on_done: Callable):
-        """Write + replicate.  on_done(ms)."""
+              requester_id: str, consistency: str, on_done: Callable,
+              on_error: Optional[Callable] = None):
+        """Write + replicate.  on_done(ms).
+
+        A dead Cargo times out after ``TIMEOUT_MS``:
+        ``on_error(CargoUnavailableError)`` when given, else
+        ``on_done(nan)`` (a nan latency marks the failed write) — never a
+        silent hang."""
         rtt = self.sim.jitter(self.topo.rtt(requester_id, self.node_id), 0.08)
         t0 = self.sim.now
 
+        def _fail():
+            self._timeout(t0, "write", key, on_error,
+                          lambda: on_done(float("nan")))
+
+        if not self.alive:
+            _fail()
+            return
+
         def _apply():
             if not self.alive:
+                _fail()
                 return
             self.stores.setdefault(service_id, {})[key] = value
             peers = [p for p in self.peers.get(service_id, ()) if p.alive]
@@ -106,7 +157,13 @@ class Cargo:
 
         def _arrive():
             if not peer.alive:
-                on_acked()                      # skip dead replica
+                # skip the dead replica but keep cascading from here —
+                # returning without forwarding used to orphan every
+                # replica downstream of one dead peer
+                if cascade:
+                    self._propagate(service_id, key, value, cascade[0],
+                                    lambda: None, cascade=cascade[1:])
+                on_acked()
                 return
             peer.stores.setdefault(service_id, {})[key] = value
             if cascade:

@@ -6,6 +6,16 @@ locations; Cargo_Discover hands a Captain a geo-ranked candidate list and
 the Captain probes them (the same 2-step idea as service selection).  When
 compute auto-scaling spawns replicas far from existing data, the manager
 cascades a new data replica onto a nearby Cargo.
+
+Data-locality feedback into selection (paper §3.4 in-situ data access):
+whenever a service's replica placement changes — registration, storage
+auto-scaling, a Cargo death, or a handoff re-placement — the manager
+pushes the alive replica locations into the ``SelectionEngine``
+(``set_data_locality``), so every tick path prefers compute nodes within
+``DATA_LOCAL_RADIUS_KM`` of the service's store.  ``on_domain_handoff``
+is the control-plane hook: when a Beacon partition or failure re-homes a
+domain's users to an adopting region, the manager re-places a data
+replica near that region so the handed-off users can land data-local.
 """
 from __future__ import annotations
 
@@ -14,26 +24,56 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core import geohash
 from repro.core.cluster import Topology
+from repro.core.selection import DATA_LOCAL_RADIUS_KM, W_DATA
 from repro.core.sim import Simulator
 from repro.core.storage.cargo import Cargo
 
 
 class CargoManager:
     def __init__(self, sim: Simulator, topo: Topology, *,
-                 replicas: int = 3, top_n: int = 3):
+                 replicas: int = 3, top_n: int = 3,
+                 locality_weight: float = W_DATA):
         self.sim = sim
         self.topo = topo
         self.replicas = replicas
         self.top_n = top_n
+        self.locality_weight = locality_weight
         self.cargos: Dict[str, Cargo] = {}
         self.placements: Dict[str, List[Cargo]] = {}    # service -> replicas
         self.specs: Dict[str, object] = {}
+        self.engine = None              # SelectionEngine (attach_engine)
 
     # --------------------------------------------------------- registration
+
+    def attach_engine(self, engine):
+        """Wire the selection engine that receives data-locality pushes
+        (done by ``ArmadaSystem``); replays current placements so a late
+        attach is equivalent to an early one."""
+        self.engine = engine
+        for service_id in self.placements:
+            self._push_locality(service_id)
+
+    def _push_locality(self, service_id: str):
+        """Publish the service's alive replica locations as a selection
+        score preference (no-op until an engine is attached)."""
+        if self.engine is None:
+            return
+        locs = tuple(sorted(
+            (float(c.spec.loc[0]), float(c.spec.loc[1]))
+            for c in self.placements.get(service_id, ()) if c.alive))
+        self.engine.set_data_locality(service_id, locs,
+                                      weight=self.locality_weight)
 
     def cargo_join(self, cargo: Cargo):
         self.cargos[cargo.node_id] = cargo
         self.sim.log("cargo_join", node=cargo.node_id)
+
+    def on_cargo_fail(self, cargo: Cargo):
+        """A Cargo died: its replicas stop contributing data locality
+        (``cargo_discover`` already skips dead nodes per call)."""
+        for service_id, reps in self.placements.items():
+            if any(c is cargo for c in reps):
+                self._push_locality(service_id)
 
     def _rank_by_location(self, loc, need_mb: float,
                           exclude=()) -> List[Cargo]:
@@ -56,6 +96,7 @@ class CargoManager:
         self.specs[spec.service_id] = spec
         self.sim.log("store_register", service=spec.service_id,
                      cargos=[c.node_id for c in chosen])
+        self._push_locality(spec.service_id)
         return chosen
 
     # ------------------------------------------------------------ discovery
@@ -70,37 +111,55 @@ class CargoManager:
 
     # --------------------------------------------------------- auto-scaling
 
-    def on_new_task(self, spec, task):
-        """Compute layer grew: ensure low-latency data access nearby."""
+    def _ensure_replica_near(self, spec, loc, reason: str) -> bool:
+        """Place one more data replica near ``loc`` unless an alive
+        replica is already within ``DATA_LOCAL_RADIUS_KM``.  The copy is
+        asynchronous (bulk-transfer model); locality re-publishes when it
+        lands.  Returns True when a copy was started."""
         service_id = spec.service_id
         reps = self.placements.get(service_id, [])
         if not reps:
-            return
-        cap_loc = task.captain.spec.loc
+            return False
         nearest = min(
             (geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
-                                 cap_loc[0], cap_loc[1])
+                                 loc[0], loc[1])
              for c in reps if c.alive), default=float("inf"))
-        if nearest <= 50.0:                      # close enough
-            return
+        if nearest <= DATA_LOCAL_RADIUS_KM:      # close enough
+            return False
         ranked = self._rank_by_location(
-            cap_loc, spec.storage_capacity_mb,
+            loc, spec.storage_capacity_mb,
             exclude=[c.node_id for c in reps])
         if not ranked:
-            return
+            return False
         new = ranked[0]
-        src = reps[0]
+        src = next((c for c in reps if c.alive), reps[0])
         data = dict(src.stores.get(service_id, {}))
         hop = self.topo.rtt(src.node_id, new.node_id)
         xfer = len(data) * 1.0e-3 + hop          # bulk copy model
 
         def _done():
-            group = reps + [new]
+            group = self.placements.get(service_id, []) + [new]
             new.provision(service_id, group, data)
             for c in group:
                 c.peers[service_id] = [p for p in group if p is not c]
             self.placements[service_id] = group
             self.sim.log("storage_scale", service=service_id,
-                         node=new.node_id)
+                         node=new.node_id, reason=reason)
+            self._push_locality(service_id)
 
         self.sim.after(xfer, _done)
+        return True
+
+    def on_new_task(self, spec, task):
+        """Compute layer grew: ensure low-latency data access nearby."""
+        self._ensure_replica_near(spec, task.captain.spec.loc, "autoscale")
+
+    def on_domain_handoff(self, loc) -> int:
+        """A Beacon handoff (partition or failure) re-homed a domain's
+        users near ``loc`` (the adopting region's centroid): re-place a
+        data replica for every registered store that has none nearby, so
+        post-handoff requests can land data-local.  Returns the number of
+        copies started."""
+        return sum(self._ensure_replica_near(self.specs[sid], loc,
+                                             "handoff")
+                   for sid in sorted(self.placements))

@@ -1,0 +1,408 @@
+"""Partition-tolerant control plane: split-brain divergence + reconciliation.
+
+A network partition is a different fault from a replica crash: the cut
+replica keeps RUNNING — it accepts registrations and staged deploys from
+the Captains on its side, so control-plane state *diverges* — while the
+majority re-homes the cut domain's users through the same ownership map
+a failure uses.  These tests pin:
+
+* **decision identity** — host tick vs fused device tick through a full
+  partition → divergence → heal → reconcile cycle (with a data-locality
+  score term active), including mid-partition snapshots and a late-join
+  Captain + staged deploys on the minority side;
+* **partition semantics** — hidden minority nodes, ownership handoff,
+  staged deploys invisible until reconcile, LWW registration merge for
+  records that diverged across the cut, conflict-dropped spawns;
+* **jit stability** — steady partition ticks and steady post-reconcile
+  ticks retrace nothing (the cut and the merge each pay at most one
+  transient);
+* the data-locality preference itself (numpy + kernel + sharded paths,
+  off-by-default) and the guard rails (``PartitionChurnModel`` never
+  empties the majority; bad partition/heal calls fail loudly).
+"""
+import numpy as np
+import pytest
+
+from repro.core import geohash
+from repro.core.app_manager import Task
+from repro.core.beacon import ArmadaSystem
+from repro.core.captain import Captain
+from repro.core.churn import PartitionChurnModel
+from repro.core.cluster import NodeSpec, real_world
+from repro.core.selection import SelectionEngine
+from tests.test_sharded_selection import (SERVICE, _assert_decisions_equal,
+                                          _fluid_system, _tie_tasks)
+
+DATA_LOC = ((44.97, -93.22),)           # metro center: some nodes local
+
+
+# ---------------------------------------------------------------------------
+# full-cycle decision identity (tentpole)
+# ---------------------------------------------------------------------------
+
+def _stage_minority_work(sys_, region):
+    """Mid-partition activity on the cut side: a Captain joins through
+    the minority replica and two replica spawns are staged — one lands
+    on the fresh Captain (applies at reconcile), one duplicates an
+    existing placement (conflict, dropped at reconcile)."""
+    bs = sys_.beacons
+    code = bs.region_code(region)
+    lat, lon, _, _ = geohash.decode(region)
+    spec = NodeSpec("NJ0", (lat, lon), proc_ms=15.0, slots=4)
+    sys_.topo.nodes["NJ0"] = spec
+    cap = Captain(sys_.sim, sys_.topo, spec)
+    sys_.captains["NJ0"] = cap
+    bs.register_node(cap)
+    rep = bs.replicas[code]
+    rep.register_task(Task(f"{SERVICE}/t_join", SERVICE, captain=cap))
+    occ = next(n for n in sorted(bs.home)
+               if bs.home[n] == code and n != "NJ0")
+    rep.register_task(Task(f"{SERVICE}/t_dup", SERVICE,
+                           captain=sys_.captains[occ]))
+
+
+def _run_partition_cycle(tick, *, n_users=50, seed=0, cut_t=5_900.0,
+                         heal_t=10_100.0, until=16_000.0):
+    sys_ = _fluid_system(seed=seed, shard=3)
+    # activate the data-locality score term so identity covers it too
+    sys_.am.engine.set_data_locality(SERVICE, DATA_LOC, weight=0.15)
+    rng = np.random.default_rng(seed + 1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
+                     -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick=tick, shard_border_cap=n_users)
+    sys_.sim.at(0.0, pool.start)
+    region = sys_.beacons.busiest_region()
+    sys_.partition_beacon(region, cut_t).heal_at(heal_t)
+    sys_.sim.at(7_000.0, _stage_minority_work, sys_, region)
+    snaps = {}
+    for label, t in (("pre", cut_t - 50.0),
+                     ("split", cut_t + 2_050.0),
+                     ("reconciled", until - 50.0)):
+        sys_.sim.at(t, lambda l=label: snaps.__setitem__(
+            l, (pool.cand_task.copy(), pool.active.copy())))
+    sys_.sim.run(until=until)
+    return pool, sys_, snaps
+
+
+def test_partition_heal_host_device_decision_identity():
+    host, hs, hsnap = _run_partition_cycle("host")
+    dev, ds, dsnap = _run_partition_cycle("device")
+    _assert_decisions_equal(dev, host)
+    for label in ("pre", "split", "reconciled"):
+        np.testing.assert_array_equal(hsnap[label][0], dsnap[label][0],
+                                      err_msg=f"cand@{label}")
+        np.testing.assert_array_equal(hsnap[label][1], dsnap[label][1],
+                                      err_msg=f"active@{label}")
+    assert hs.beacons.events == ds.beacons.events
+    # the cut visibly displaced routing, state genuinely diverged, and
+    # the merge resolved the staged spawns one-applied one-dropped
+    assert not np.array_equal(hsnap["pre"][0], hsnap["split"][0])
+    rec = next(e for e in hs.beacons.events
+               if e["kind"] == "beacon_reconcile")
+    assert rec["divergence"] > 0 and rec["latency_ms"] > 0
+    assert rec["staged"] == 1 and rec["conflicts"] == 1
+    ids = [t.task_id for t in hs.am.tasks[SERVICE]]
+    assert f"{SERVICE}/t_join" in ids and f"{SERVICE}/t_dup" not in ids
+    # the data-locality metric is live on this population
+    frac = host.data_local_fraction()
+    assert np.isfinite(frac) and 0.0 <= frac <= 1.0
+
+
+def test_partition_keeps_data_plane_alive():
+    """Split-brain must not stall traffic on either side: every user
+    keeps an active replica and frames keep flowing mid-partition."""
+    pool, sys_, snaps = _run_partition_cycle("host", until=9_000.0,
+                                             heal_t=8_900.0)
+    cand, active = snaps["split"]
+    assert (active >= 0).all(), "users lost actives during the partition"
+    assert (cand >= 0).any(axis=1).all()
+    assert np.isfinite(pool.mean_latency())
+
+
+# ---------------------------------------------------------------------------
+# partition semantics (divergence, staged deploys, reconciliation)
+# ---------------------------------------------------------------------------
+
+def test_partition_semantics_and_reconcile():
+    sys_ = _fluid_system(seed=0, shard=3)
+    bs = sys_.beacons
+    sys_.sim.run(until=100.0)
+    region = bs.busiest_region()
+    code = bs.region_code(region)
+    minority = sorted(n for n, h in bs.home.items() if h == code)
+    gid = bs.partition(region)
+    assert gid >= 1 and bs.partition_of[code] == gid
+    # minority nodes hidden from majority selection; users handed off
+    assert set(minority) <= set(bs.hidden_nodes())
+    own = bs.ownership()
+    assert own[code] != code and bs.group_of(own[code]) == 0
+    # a bootstrap lookup from inside the cut reaches the cut replica
+    lat, lon, _, _ = geohash.decode(region)
+    assert bs.beacon_for((lat, lon)).region == code
+    # a deploy through the minority replica stages — invisible globally
+    rep = bs.replicas[code]
+    t = Task("svc2/s0", "svc2", captain=sys_.captains[minority[0]])
+    rep.register_task(t)
+    assert t not in sys_.am.tasks.get("svc2", [])
+    assert t in rep.pending_tasks
+    # heal: ownership stays cut during the log exchange (the measurable
+    # reconciliation window), then one merge reverts everything
+    delay = bs.heal(region)
+    assert delay > 0 and code in bs.partition_of
+    sys_.sim.run(until=sys_.sim.now + delay + 10.0)
+    assert code not in bs.partition_of
+    assert not bs.hidden_nodes() and bs.ownership() == {}
+    assert all(bs.serving[n] == code for n in minority)
+    assert t in sys_.am.tasks["svc2"] and t.status == "running"
+    rec = bs.events[-1]
+    assert rec["kind"] == "beacon_reconcile"
+    assert rec["staged"] == 1 and rec["divergence"] >= len(minority)
+    assert rec["latency_ms"] >= delay
+
+
+def test_partition_lww_merge_drops_stale_adopter_records():
+    """Divergent registrations across the cut: nodes adopted by the
+    majority during an earlier crash get reclaimed by their recovered
+    home replica on the minority side — at heal, last-writer-wins keeps
+    the minority's fresher record and drops the adopter's stale one."""
+    sys_ = _fluid_system(seed=0, shard=3)
+    bs = sys_.beacons
+    sys_.sim.run(until=100.0)
+    region = bs.busiest_region()
+    code = bs.region_code(region)
+    minority = sorted(n for n, h in bs.home.items() if h == code)
+    bs.fail(region)
+    sys_.sim.run(until=2_500.0)         # heartbeat replay: all adopted
+    assert all(bs.serving[n] not in (None, code) for n in minority)
+    bs.recover(region)
+    bs.partition(region)                # cut lands before any re-home
+    bs.heal(region)
+    sys_.sim.run(until=10_000.0)
+    rec = next(e for e in reversed(bs.events)
+               if e["kind"] == "beacon_reconcile")
+    assert rec["lww"] >= 1
+    for n in minority:
+        assert bs.serving[n] == code
+        holders = [c for c, r in bs.replicas.items()
+                   if n in r.registered_nodes]
+        assert holders == [code], f"stale adopter record survived: {n}"
+
+
+def test_partitioned_replica_crash_collapses_to_plain_failure():
+    sys_ = _fluid_system(seed=0, shard=3)
+    bs = sys_.beacons
+    sys_.sim.run(until=100.0)
+    region = bs.busiest_region()
+    code = bs.region_code(region)
+    bs.partition(region)
+    rep = bs.replicas[code]
+    rep.register_task(Task("svc2/s1", "svc2",
+                           captain=next(iter(sys_.captains.values()))))
+    assert rep.reg_log and rep.pending_tasks
+    bs.fail(region)                     # the divergence log dies with it
+    assert code not in bs.partition_of
+    assert not rep.reg_log and not rep.pending_tasks
+    with pytest.raises(ValueError, match="not partitioned"):
+        bs.heal(region)
+    sys_.sim.run(until=4_000.0)         # replay lands nodes on adopters
+    assert not bs.hidden_nodes()
+
+
+# ---------------------------------------------------------------------------
+# jit stability: at most one transient per cut / per merge
+# ---------------------------------------------------------------------------
+
+def test_partition_heal_compiles_once_not_per_tick():
+    from repro.core import fused_tick
+    sys_ = _fluid_system(seed=0, shard=3)
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 50),
+                     -93.22 + rng.uniform(-.5, .5, 50)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device", shard_border_cap=50)
+    sys_.sim.at(0.0, pool.start)
+    region = sys_.beacons.busiest_region()
+    sys_.partition_beacon(region, 4_100.0).heal_at(12_100.0)
+
+    sys_.sim.run(until=6_050.0)         # first post-cut tick: transient
+    counts0 = dict(fused_tick.COMPILE_COUNTS)
+    sys_.sim.run(until=12_050.0)        # steady split-brain ticks
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts0.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"partition retraced per tick: {delta}"
+    sys_.sim.run(until=14_050.0)        # reconcile transient paid here
+    counts1 = dict(fused_tick.COMPILE_COUNTS)
+    sys_.sim.run(until=18_050.0)
+    delta = {k: fused_tick.COMPILE_COUNTS[k] - counts1.get(k, 0)
+             for k in fused_tick.COMPILE_COUNTS}
+    assert all(v == 0 for v in delta.values()), \
+        f"reconcile retraced per tick: {delta}"
+    assert pool.ticks_run >= 8
+
+
+# ---------------------------------------------------------------------------
+# data-locality score preference (selection layer, off by default)
+# ---------------------------------------------------------------------------
+
+def test_data_locality_prefers_node_near_cargo():
+    """Two replicas in a pure tie (equidistant, same free/net): the
+    data-locality term breaks it toward the node within
+    DATA_LOCAL_RADIUS_KM of the service's store, identically on the
+    numpy, kernel, and sharded paths; clearing it restores the baseline
+    argsort order bit-for-bit."""
+    specs = [NodeSpec("far", (45.7, -93.0), proc_ms=20.0, slots=2),
+             NodeSpec("near", (44.3, -93.0), proc_ms=20.0, slots=2)]
+    tasks = _tie_tasks(specs)
+    users = [(45.0, -93.0)]
+    base = SelectionEngine(top_n=2).candidate_indices(
+        "tie", tasks, users, "wifi")
+    np.testing.assert_array_equal(base, [[0, 1]])   # tie -> task order
+    data_at = ((44.3, -93.0),)
+    for precision in (None, 1, 3):
+        eng = SelectionEngine(top_n=2, shard_precision=precision)
+        eng.set_data_locality("tie", data_at)
+        got = eng.candidate_indices("tie", tasks, users, "wifi")
+        np.testing.assert_array_equal(got, [[1, 0]],
+                                      err_msg=f"numpy p={precision}")
+        gk = eng.candidate_indices_kernel("tie", tasks, users, "wifi",
+                                          node_pad=8)
+        np.testing.assert_array_equal(gk, [[1, 0]],
+                                      err_msg=f"kernel p={precision}")
+    eng = SelectionEngine(top_n=2)
+    eng.set_data_locality("tie", data_at)
+    eng.set_data_locality("tie", ())                # placement lost
+    np.testing.assert_array_equal(
+        eng.candidate_indices("tie", tasks, users, "wifi"), base)
+
+
+def test_cargo_placements_feed_selection_via_manager():
+    """ArmadaSystem wiring: store_register pushes placements into the
+    engine; a Cargo death re-publishes without the dead replica."""
+    from repro.core.app_manager import ServiceSpec
+    from repro.core.beacon import facerec_image
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=9, compute_nodes=["V3", "V4", "V5"],
+                        cargo_nodes=["V1", "V2", "D6", "Cloud"])
+    spec = ServiceSpec("face", facerec_image(), need_storage=True,
+                       locations=[topo.nodes["V3"].loc])
+    chosen = sys_.cargo_manager.store_register(spec, initial={"k0": b"x"})
+    locs, weight = sys_.am.engine.data_locality["face"]
+    assert len(locs) == len(chosen) == 3 and weight > 0
+    sys_.fail_cargo(chosen[0].node_id, 10.0)
+    sys_.sim.run(until=20.0)
+    locs2, _ = sys_.am.engine.data_locality["face"]
+    assert len(locs2) == 2
+    assert tuple(map(float, chosen[0].spec.loc)) not in locs2
+
+
+# ---------------------------------------------------------------------------
+# stochastic partitions + guard rails
+# ---------------------------------------------------------------------------
+
+def test_partition_churn_model_spares_majority():
+    sys_ = _fluid_system(seed=0, shard=3)
+    churn = PartitionChurnModel(sys_.sim, sys_.beacons, mtbp_ms=3_000.0,
+                                heal_ms=2_000.0)
+    churn.start()
+    sys_.sim.run(until=60_000.0)
+    kinds = [e["kind"] for e in churn.events]
+    assert kinds.count("partition") >= 2, "partition churn never fired"
+    assert kinds.count("heal") >= 1
+    # every cut got reconciled by the end (or is still in flight alone)
+    assert len(sys_.beacons.partition_of) <= 1
+    assert any(e["kind"] == "beacon_reconcile"
+               for e in sys_.beacons.events)
+    # replay: the majority side was never emptied
+    total = len(sys_.beacons.replicas)
+    cut = set()
+    for e in churn.events:
+        if e["kind"] == "partition":
+            cut.add(e["region"])
+            assert len(cut) < total, "majority emptied by partition churn"
+        else:
+            cut.discard(e["region"])
+
+
+def test_partition_guard_rails():
+    sys_ = _fluid_system(seed=0, shard=3)
+    bs = sys_.beacons
+    region = bs.busiest_region()
+    with pytest.raises(ValueError, match="no live Beacon"):
+        bs.partition("zzz")                 # unknown region
+    with pytest.raises(ValueError, match="exactly 3 geohash chars"):
+        bs.partition("zzzzzz")
+    with pytest.raises(ValueError, match="no region is partitioned"):
+        bs.heal()
+    with pytest.raises(ValueError, match="not partitioned"):
+        bs.heal(region)
+    with pytest.raises(ValueError, match="every majority region"):
+        bs.partition(list(bs.replicas))     # would cut off everyone
+    bs.partition(region)
+    with pytest.raises(ValueError, match="already partitioned"):
+        bs.partition(region)
+    bs.heal(region)
+    with pytest.raises(ValueError, match="already reconciling"):
+        bs.heal(region)
+    # a dead replica cannot be partitioned (it is failed, not cut)
+    other = next(bs.region_str(c) for c in sorted(bs.replicas)
+                 if c != bs.region_code(region) and bs.replicas[c].alive)
+    bs.fail(other)
+    with pytest.raises(ValueError, match="no live Beacon"):
+        bs.partition(other)
+    # schedule-time validation + unsharded systems
+    with pytest.raises(ValueError, match="exactly 3 geohash chars"):
+        sys_.partition_beacon("zz", 100.0)
+    flat = ArmadaSystem(real_world(), seed=0)
+    with pytest.raises(RuntimeError, match="shard_precision"):
+        flat.partition_beacon("9zv", 100.0)
+
+
+def test_device_tick_ema_slots_passthrough():
+    """``ClientPool(ema_slots=...)`` reaches the fused driver — a table
+    too small for even one candidate refresh overflows loudly (the
+    remedy named in the error is actually settable), and a sized table
+    leaves decisions identical to the default."""
+    import repro.core.fused_tick  # noqa: F401 — jax presence gate
+    sys_ = _fluid_system(seed=1, shard=3)
+    rng = np.random.default_rng(2)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 16),
+                     -93.22 + rng.uniform(-.5, .5, 16)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="geo_topk", tick="device", shard_border_cap=16,
+        ema_slots=1)
+    sys_.sim.at(0.0, pool.start)
+    with pytest.raises(RuntimeError, match="ema_slots"):
+        sys_.sim.run(until=4_100.0)
+
+    def run(slots):
+        s = _fluid_system(seed=1, shard=3)
+        p = s.make_client_pool(
+            SERVICE, locs=locs, transport="fluid",
+            frame_interval_ms=500.0, selection_backend="geo_topk",
+            tick="device", shard_border_cap=16, ema_slots=slots)
+        s.sim.at(0.0, p.start)
+        s.sim.run(until=6_100.0)
+        return p
+    _assert_decisions_equal(run(64), run(None))
+
+
+def test_bench_partition_smoke_profile():
+    """The registered benchmark's --smoke profile runs in tier-1 and
+    records split-brain divergence, reconciliation latency, and the
+    data-local failover fraction."""
+    from benchmarks.bench_partition import run
+    rows = run(smoke=True)
+    assert rows
+    derived = {name: d for name, _, d in rows}
+    rec = [d for d in derived.values() if "reconcile_ms=" in d]
+    assert rec, f"no reconciliation metrics recorded: {derived}"
+    d = rec[0]
+    assert float(d.split("reconcile_ms=")[1].split(";")[0]) > 0.0
+    assert float(d.split("divergence=")[1].split(";")[0]) > 0.0
+    frac = float(d.split("local_frac_handoff=")[1].split(";")[0])
+    assert 0.0 <= frac <= 1.0

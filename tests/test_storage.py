@@ -3,9 +3,11 @@ data-access-point selection, failover, and storage auto-scaling."""
 import numpy as np
 import pytest
 
-from repro.core.app_manager import ServiceSpec
+from repro.core import geohash
+from repro.core.app_manager import ServiceSpec, Task
 from repro.core.beacon import ArmadaSystem, facerec_image
 from repro.core.cluster import real_world
+from repro.core.storage.cargo import TIMEOUT_MS, CargoUnavailableError
 
 
 def _system(cargo_nodes=("V1", "V2", "D6", "Cloud")):
@@ -77,6 +79,130 @@ def test_dead_replica_skipped_not_blocking():
     alive = [c for c in chosen if c.alive]
     for c in alive:
         assert c.stores["face"].get("k2") == b"v2"
+
+
+def test_dead_cargo_read_write_deliver_errors_not_silence():
+    """I/O against a dead Cargo must never hang the caller: with an
+    ``on_error`` the timeout delivers ``CargoUnavailableError``; without
+    one the sentinel rides ``on_done`` (None value / nan latency)."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    dead = chosen[0]
+    dead.fail()
+    errs, reads, writes = [], [], []
+    dead.read("face", "k0", "V3", lambda v, ms: reads.append((v, ms)),
+              on_error=errs.append)
+    dead.write("face", "kx", b"v", "V3", "eventual",
+               lambda ms: writes.append(ms), on_error=errs.append)
+    sys_.sim.run(until=TIMEOUT_MS + 50.0)
+    assert len(errs) == 2 and not reads and not writes
+    assert all(isinstance(e, CargoUnavailableError) for e in errs)
+    # fallback sentinels when no on_error was given
+    dead.read("face", "k0", "V3", lambda v, ms: reads.append((v, ms)))
+    dead.write("face", "ky", b"v", "V3", "eventual",
+               lambda ms: writes.append(ms))
+    sys_.sim.run(until=sys_.sim.now + TIMEOUT_MS + 50.0)
+    assert reads == [(None, pytest.approx(TIMEOUT_MS))]
+    assert len(writes) == 1 and np.isnan(writes[0])
+
+
+def test_cargo_dying_mid_read_times_out():
+    """Death between request and lookup (in-flight) hits the same
+    timeout path as death at request time."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    errs, reads = [], []
+    chosen[0].read("face", "k0", "V3",
+                   lambda v, ms: reads.append(v), on_error=errs.append)
+    sys_.sim.at(1.0, chosen[0].fail)        # dies before the lookup lands
+    sys_.sim.run(until=TIMEOUT_MS + 50.0)
+    assert len(errs) == 1 and not reads
+
+
+def test_dead_peer_mid_cascade_does_not_orphan_downstream():
+    """Eventual-consistency cascade with the middle replica dying while
+    the update is in flight to it: the chain must skip the corpse and
+    still reach every replica downstream of it."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    acked = []
+    chosen[0].write("face", "kc", b"vc", "V3", "eventual", acked.append)
+    # the local apply lands ~rtt/2 + write (<13 ms); the first hop needs
+    # >=16 ms more — kill the middle replica inside that window
+    sys_.sim.at(14.0, chosen[1].fail)
+    sys_.sim.run(until=2_000.0)
+    assert acked, "eventual write never acked"
+    assert chosen[0].stores["face"].get("kc") == b"vc"
+    assert chosen[1].stores["face"].get("kc") is None, \
+        "test setup: the middle replica was meant to die pre-arrival"
+    assert chosen[2].stores["face"].get("kc") == b"vc", \
+        "cascade died with the middle replica instead of skipping it"
+
+
+def test_fail_cargo_guard_rails():
+    """``fail_cargo`` has ``fail_node`` parity: unknown names raise at
+    schedule time, an already-dead Cargo raises when the event fires."""
+    sys_ = _system()
+    with pytest.raises(ValueError, match="unknown cargo"):
+        sys_.fail_cargo("nope", 100.0)
+    sys_.fail_cargo("V1", 100.0)
+    sys_.fail_cargo("V1", 200.0)            # fires against a corpse
+    with pytest.raises(RuntimeError, match="already failed"):
+        sys_.sim.run(until=300.0)
+    assert not sys_.cargos["V1"].alive
+
+
+def test_cargo_discover_orders_strictly_by_distance():
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    loc = sys_.topo.nodes["V5"].loc
+    cands = sys_.cargo_manager.cargo_discover("face", loc)
+    dists = [geohash.distance_km(c.spec.loc[0], c.spec.loc[1],
+                                 loc[0], loc[1]) for c in cands]
+    assert dists == sorted(dists)
+    assert len(cands) == 3
+    # a dead access point drops out of the candidate list
+    cands[0].fail()
+    cands2 = sys_.cargo_manager.cargo_discover("face", loc)
+    assert cands[0] not in cands2 and len(cands2) == 2
+
+
+def test_store_register_respects_capacity():
+    """Placement ranks by distance among cargos WITH room: a store too
+    big for the 2 GB volunteers lands on the only node that fits it."""
+    sys_ = _system()
+    spec = ServiceSpec("big", facerec_image(), need_storage=True,
+                       storage_capacity_mb=10_000.0,
+                       locations=[sys_.topo.nodes["V3"].loc])
+    chosen = sys_.cargo_manager.store_register(spec)
+    assert [c.node_id for c in chosen] == ["Cloud"]
+
+
+def test_on_new_task_replaces_only_when_far():
+    """Storage auto-scaling reacts to a far compute spawn with one new
+    data replica (and republishes locality); a nearby spawn is a no-op."""
+    topo = real_world()
+    sys_ = ArmadaSystem(topo, seed=9,
+                        compute_nodes=["V3", "V4", "V5", "Cloud"],
+                        cargo_nodes=["V1", "V2", "D6", "Cloud"])
+    spec, chosen = _register(sys_)
+    near = Task("face/near", "face", captain=sys_.captains["V4"],
+                status="running")
+    sys_.cargo_manager.on_new_task(spec, near)
+    sys_.sim.run(until=5_000.0)
+    assert len(sys_.cargo_manager.placements["face"]) == 3   # no-op
+    far = Task("face/far", "face", captain=sys_.captains["Cloud"],
+               status="running")
+    sys_.cargo_manager.on_new_task(spec, far)
+    sys_.sim.run(until=10_000.0)
+    placements = sys_.cargo_manager.placements["face"]
+    assert len(placements) == 4
+    new = placements[-1]
+    assert new.node_id == "Cloud"
+    assert new.stores["face"]["k0"] == b"v0"    # data actually copied
+    assert all(new in c.peers["face"] for c in placements[:-1])
+    locs, _ = sys_.am.engine.data_locality["face"]
+    assert len(locs) == 4
 
 
 def test_storage_autoscaling_follows_compute():
