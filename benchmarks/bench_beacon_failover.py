@@ -54,7 +54,8 @@ PROBE_MS = 2000.0
 FRAME_MS = 500.0
 
 
-def _system(n_per_region: int, n_regions: int, seed: int) -> ArmadaSystem:
+def _system(n_per_region: int, n_regions: int, seed: int,
+            discovery_ms: float = 0.0) -> ArmadaSystem:
     rng = np.random.default_rng(seed)
     nodes = {}
     for r in range(n_regions):
@@ -72,7 +73,8 @@ def _system(n_per_region: int, n_regions: int, seed: int) -> ArmadaSystem:
     sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
                         include_cloud_compute=False,
                         shard_precision=SHARD_PRECISION,
-                        beacon_heartbeat_ms=1.5 * PROBE_MS)
+                        beacon_heartbeat_ms=1.5 * PROBE_MS,
+                        discovery_ms=discovery_ms)
     sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
     sys_.am.tasks[SERVICE] = []
     sys_.am.users[SERVICE] = []
@@ -118,9 +120,9 @@ def _selection_impact(sys_, sample_locs: np.ndarray, ref_eng,
 
 
 def _bench_case(n_users: int, n_per_region: int, n_regions: int,
-                tick: str, seed: int = 0):
+                tick: str, seed: int = 0, discovery_ms: float = 0.0):
     n_nodes = n_per_region * n_regions
-    sys_ = _system(n_per_region, n_regions, seed)
+    sys_ = _system(n_per_region, n_regions, seed, discovery_ms)
     locs = _users(n_users, n_regions, seed)
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, transport="fluid", frame_interval_ms=FRAME_MS,
@@ -169,13 +171,19 @@ def _bench_case(n_users: int, n_per_region: int, n_regions: int,
     warm = sorted(tick_ms[1:w_fail - 1])        # skip the compile window
     steady_ms = warm[len(warm) // 2] if warm else float("nan")
     handoff_ms = tick_ms[w_fail - 1]            # first post-kill window
-    unavail = sys_.beacons.convergence_ms(fail_t)
+    conv = sys_.beacons.convergence_ms(fail_t)
+    # client-perceived unavailability: heartbeat-replay convergence and
+    # the clients' post-failover Beacon re-discovery window run
+    # concurrently from the kill instant — the window ends when both have
+    # (discovery only gates candidate refresh; probing never stalls)
+    unavail = max(conv, discovery_ms)
     outage = slice(w_fail - 1, w_rec - 1)
     tag = (f"beacon_failover/u{n_users}_s{n_regions}x{n_per_region}"
-           f"/{tick}")
+           f"/{tick}" + (f"/disc{discovery_ms:.0f}" if discovery_ms else ""))
     return [
         (tag, handoff_ms,
-         f"unavail_ms={unavail:.1f};steady_ms={steady_ms:.1f};"
+         f"unavail_ms={unavail:.1f};beacon_conv_ms={conv:.1f};"
+         f"discovery_ms={discovery_ms:.1f};steady_ms={steady_ms:.1f};"
          f"handoff_over_steady={handoff_ms / steady_ms:.2f}x;"
          f"affected_users={affected.size};"
          f"displaced_peak={max(displaced[outage]):.3f};"
@@ -192,13 +200,17 @@ def run(smoke: bool = False):
         # host tick: exercises kill/replay/handoff/recover end-to-end
         # without paying device-program compiles in tier-1 (the device
         # path's decision identity is pinned by tests/test_beacon_failover)
-        sweep = [(2_000, 16, 4, "host")]
+        # — second case charges a 500 ms client-side discovery window
+        sweep = [(2_000, 16, 4, "host", 0.0),
+                 (2_000, 16, 4, "host", 500.0)]
     else:
-        sweep = [(20_000, 250, 4, "host"),      # numpy-engine pair
-                 (100_000, 1_000, 4, "device")]  # acceptance shape
+        sweep = [(20_000, 250, 4, "host", 0.0),       # numpy-engine pair
+                 (20_000, 250, 4, "host", 500.0),     # + discovery window
+                 (100_000, 1_000, 4, "device", 0.0)]  # acceptance shape
     rows = []
-    for n_users, n_per, n_regions, tick in sweep:
-        rows.extend(_bench_case(n_users, n_per, n_regions, tick))
+    for n_users, n_per, n_regions, tick, disc in sweep:
+        rows.extend(_bench_case(n_users, n_per, n_regions, tick,
+                                discovery_ms=disc))
     return rows
 
 

@@ -137,16 +137,21 @@ def run(smoke: bool = False):
     rows = []
     for n_users, n_nodes, n_ticks, mode in sweep:
         rows.extend(_bench_case(n_users, n_nodes, n_ticks, mode=mode))
-    if not smoke:
-        # headline speedups: fused device tick vs both host ticks
-        per_tick = {r[0].rsplit("/", 1)[1]: r[1] for r in rows
-                    if r[0].startswith("client_scale/u100000_n1000/")}
-        for base in ("numpy", "geo_topk"):
-            if base in per_tick and "device" in per_tick:
-                ratio = per_tick[base] / per_tick["device"]
-                rows.append((
-                    f"client_scale/u100000_n1000/speedup_device_vs_{base}",
-                    float("nan"), f"speedup={ratio:.2f}x"))
+    return rows
+
+
+def derive(us_by_name):
+    """Headline speedups (device tick vs both host ticks), recomputed by
+    the runner over the merged result set so ``--only`` partial runs can
+    never pair a fresh measurement with a stale one."""
+    pre = "client_scale/u100000_n1000/"
+    rows = []
+    dev = us_by_name.get(pre + "device")
+    for base in ("numpy", "geo_topk"):
+        b = us_by_name.get(pre + base)
+        if b and dev and b == b and dev == dev:
+            rows.append((f"{pre}speedup_device_vs_{base}",
+                         float("nan"), f"speedup={b / dev:.2f}x"))
     return rows
 
 
@@ -156,5 +161,8 @@ if __name__ == "__main__":
                     help="seconds-scale profile (small U/N)")
     args = ap.parse_args()
     print("name,ms_per_tick,derived")
-    for name, ms, derived in run(smoke=args.smoke):
+    rows = run(smoke=args.smoke)
+    for name, ms, derived in rows:
+        print(f"{name},{ms:.1f},{derived}")
+    for name, ms, derived in derive({n: m * 1e3 for n, m, _ in rows}):
         print(f"{name},{ms:.1f},{derived}")

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_beacon_failover",    # Beacon fault domains / handoff
     "benchmarks.bench_partition",          # split-brain + data locality
     "benchmarks.bench_client_scale",       # client-pool scaling (beyond paper)
+    "benchmarks.bench_mesh_scale",         # mesh-sharded pool (multi-device)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7
     "benchmarks.bench_node_scaling",       # Fig 8
@@ -40,11 +41,11 @@ def main() -> None:
 
     all_rows = []
     print("name,us_per_call,derived")
-    for modname in MODULES:
+    mods = {m: importlib.import_module(m) for m in MODULES}
+    for modname, mod in mods.items():
         if args.only and args.only not in modname:
             continue
         t0 = time.time()
-        mod = importlib.import_module(modname)
         rows = mod.run()
         for name, ms, derived in rows:
             us = ms * 1e3 if ms == ms else float("nan")   # ms -> us
@@ -61,7 +62,22 @@ def main() -> None:
         # clobbering every other benchmark's recorded results
         prev = json.loads(results.read_text())
         fresh = {r["name"] for r in all_rows}
-        all_rows = [r for r in prev if r["name"] not in fresh] + all_rows
+        all_rows = [r for r in prev if r["name"] not in fresh
+                    and not r.get("derived_row")] + all_rows
+    # Cross-benchmark ratios (speedup rows, weak scaling) are recomputed
+    # from the *merged* measurements by each module's ``derive`` hook —
+    # a partial ``--only`` run can therefore never leave a stale ratio
+    # computed against rows it did not re-measure.
+    us_by_name = {r["name"]: r["us_per_call"] for r in all_rows}
+    for modname, mod in mods.items():
+        fn = getattr(mod, "derive", None)
+        if fn is None:
+            continue
+        for name, ms, derived in fn(us_by_name):
+            us = ms * 1e3 if ms == ms else float("nan")
+            print(f"{name},{us:.1f},{derived}")
+            all_rows.append({"name": name, "us_per_call": us,
+                             "derived": derived, "derived_row": True})
     results.write_text(json.dumps(all_rows, indent=1))
     with open(out / "results.csv", "w") as f:
         f.write("name,us_per_call,derived\n")

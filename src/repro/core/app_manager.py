@@ -102,9 +102,15 @@ class ApplicationManager:
     def _spawn_task(self, spec: ServiceSpec, location,
                     selection: str = "armada") -> Optional[Task]:
         task = Task(f"{spec.service_id}/t{next(self._ids)}", spec.service_id)
+        # Beacon-scoped scheduling: a partitioned / dead fault domain's
+        # captains are hidden from selection — keep autoscale from landing
+        # replicas on nodes this Beacon group cannot reach.
+        hidden = self.engine.hidden_nodes
+        pf = (lambda c: c.node_id not in hidden) if hidden else None
         dt = self.spinner.deploy_task(task, spec.image, location,
                                       selection=selection,
-                                      on_ready=self._task_ready)
+                                      on_ready=self._task_ready,
+                                      policy_filter=pf)
         if dt is None:
             return None
         self.tasks[spec.service_id].append(task)

@@ -731,7 +731,8 @@ class ArmadaSystem:
                  include_cloud_compute: bool = True,
                  trace_enabled: bool = True,
                  shard_precision: Optional[int] = None,
-                 beacon_heartbeat_ms: float = HEARTBEAT_MS):
+                 beacon_heartbeat_ms: float = HEARTBEAT_MS,
+                 discovery_ms: float = 0.0):
         self.sim = Simulator(seed=seed, trace_enabled=trace_enabled)
         self.topo = topo
         self.spinner = Spinner(self.sim, topo)
@@ -741,6 +742,10 @@ class ArmadaSystem:
                                      shard_precision=shard_precision)
         # storage placements feed the selection score (data locality)
         self.cargo_manager.attach_engine(self.am.engine)
+        # client-side Beacon discovery window: charged by every
+        # ClientPool on bootstrap and on handoff-driven re-discovery
+        self.discovery_ms = float(discovery_ms)
+        self.am.engine.discovery_ms = self.discovery_ms
         self.beacon = Beacon(self.am, self.spinner, self.cargo_manager)
         # region-sharded systems get per-region Beacon fault domains; the
         # global facade above still serves deployment/bootstrap calls

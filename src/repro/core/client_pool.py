@@ -354,9 +354,13 @@ class ClientPool:
                  rtt_model: Callable = default_rtt_model,
                  record_samples: bool = True,
                  shard_border_cap: Optional[int] = None,
-                 ema_slots: Optional[int] = None):
+                 ema_slots: Optional[int] = None,
+                 mesh=None):
         if transport not in ("events", "fluid"):
             raise ValueError(f"unknown transport {transport!r}")
+        if mesh is not None and tick != "device":
+            raise ValueError("mesh=... shards the fused device tick "
+                             "across devices — pass tick='device'")
         if selection_backend not in ("numpy", "geo_topk"):
             raise ValueError(
                 f"unknown selection_backend {selection_backend!r}")
@@ -415,6 +419,18 @@ class ClientPool:
         # raise for scenarios where users sample many distinct nodes —
         # e.g. a long partition scoring a region against remote metros
         self.ema_slots = ema_slots
+        # device tick: shard the population across a device mesh — a
+        # jax.sharding.Mesh with one axis, or an int device count
+        # (resolved against jax.devices() at start)
+        self.mesh = mesh
+        # client-side Beacon discovery (engine.discovery_ms): bootstrap
+        # pays one window before the first selection; a handoff charges
+        # per-user windows that gate candidate refreshes only
+        self._discovered = False
+        self._disc_until: Optional[np.ndarray] = None
+        self._disc_route: Optional[np.ndarray] = None
+        self._disc_codes: Optional[np.ndarray] = None
+        self._disc_owner_version = -1
 
         if client_ids is not None:
             self.client_ids: Optional[List[str]] = list(client_ids)
@@ -496,6 +512,13 @@ class ClientPool:
     def start(self):
         """Start every user (one simulator event; schedule with
         ``sim.at(t, pool.start)`` like a scalar client's ``start``)."""
+        dms = float(getattr(self.am.engine, "discovery_ms", 0.0))
+        if dms > 0 and not self._discovered:
+            # bootstrap Beacon discovery: one window before the first
+            # selection can be requested (previously free)
+            self._discovered = True
+            self.sim.after(dms, self.start)
+            return
         self.running[:] = True
         self.am.user_join(self.service_id, self)
         sel = np.arange(self.n_users)
@@ -511,11 +534,24 @@ class ClientPool:
 
     def _start_device(self, sel: np.ndarray):
         """Host-side initial selection (same code path as the host tick),
-        then hand the probe-tick chain to the fused device driver."""
-        from repro.core.fused_tick import FusedTickDriver
+        then hand the probe-tick chain to the fused device driver — the
+        single-device one, or the mesh-sharded one (``mesh=...``)."""
+        from repro.core.fused_tick import FusedTickDriver, MeshTickDriver
         self._refresh(sel, initial=True)
-        self._dev = FusedTickDriver(self) if self.ema_slots is None \
-            else FusedTickDriver(self, ema_slots=self.ema_slots)
+        kw = {} if self.ema_slots is None else {"ema_slots": self.ema_slots}
+        if self.mesh is not None:
+            mesh = self.mesh
+            if isinstance(mesh, int):
+                import jax
+                from jax.sharding import Mesh
+                if not 1 <= mesh <= len(jax.devices()):
+                    raise ValueError(
+                        f"mesh={mesh} devices requested, "
+                        f"{len(jax.devices())} available")
+                mesh = Mesh(np.asarray(jax.devices()[:mesh]), ("users",))
+            self._dev = MeshTickDriver(self, mesh, **kw)
+        else:
+            self._dev = FusedTickDriver(self, **kw)
         self._dev.init_state()
         self._dev.tick()
 
@@ -1009,7 +1045,10 @@ class ClientPool:
         if sel.size:
             if not first:
                 t0 = time.perf_counter()
-                self._refresh(sel)
+                r_ok = self._discovery_refresh_mask()
+                r_sel = sel if r_ok is None else sel[r_ok[sel]]
+                if r_sel.size:
+                    self._refresh(r_sel)
                 self.phase_add("selection", t0)
             t0 = time.perf_counter()
             self._switch_step(sel)
@@ -1117,6 +1156,40 @@ class ClientPool:
     def _retry_fluid(self, users: List[int]):
         sel = np.asarray(users, np.int64)
         self._refresh(sel, initial=True)
+
+    def _discovery_refresh_mask(self) -> Optional[np.ndarray]:
+        """(U,) bool gate for the candidate refresh, or None when Beacon
+        discovery is free (``engine.discovery_ms == 0``).  A user whose
+        serving region changed (Beacon handoff / re-home, detected via
+        ``owner_version``) must re-discover its Beacon first: candidate
+        refreshes are suppressed until ``now + discovery_ms`` while
+        probes and frames keep flowing to the stale candidates — the
+        same gate feeds both the host tick and the fused device tick."""
+        eng = self.am.engine
+        dms = float(getattr(eng, "discovery_ms", 0.0))
+        if dms <= 0:
+            return None
+        if eng.owner_version != self._disc_owner_version:
+            view = eng.shard_view(self.service_id,
+                                  self.am.tasks.get(self.service_id, ()))
+            if view is not None:
+                if self._disc_codes is None:
+                    from repro.core.selection import CODE_PRECISION
+                    self._disc_codes = geohash.encode_batch(
+                        self.locs[:, 0], self.locs[:, 1], CODE_PRECISION)
+                route = view.route(self._disc_codes)
+                if self._disc_route is not None:
+                    changed = route != self._disc_route
+                    if changed.any():
+                        if self._disc_until is None:
+                            self._disc_until = np.zeros(self.n_users)
+                        self._disc_until[changed] = self.sim.now + dms
+                self._disc_route = route
+            self._disc_owner_version = eng.owner_version
+        if self._disc_until is None or \
+                not (self._disc_until > self.sim.now).any():
+            return None
+        return self._disc_until <= self.sim.now
 
     # ------------------------------------------------------------- metrics
 

@@ -345,7 +345,7 @@ def _sharded_candidates(static, free, sched, need, k, p_min, border_cap,
 
 
 def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
-               alpha, margin, p_min, border_cap):
+               alpha, margin, refresh_ok, p_min, border_cap):
     COMPILE_COUNTS["tick"] += 1
     u, k = state.cand.shape
     rows = jnp.arange(u)
@@ -363,8 +363,12 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
     # 3. candidate refresh: fused scoring + top-k (lax.top_k — the exact
     #    op the geo_topk kernel path dispatches to, same min-index ties) —
     #    one (U, Tp) pass unsharded, or per-shard (U_s, Ts_pad) passes
-    #    plus the fixed-capacity border pass when the engine is sharded
+    #    plus the fixed-capacity border pass when the engine is sharded.
+    #    ``refresh_ok`` gates the refresh only: users inside a Beacon
+    #    re-discovery window keep (and keep probing) their stale
+    #    candidates, exactly like the host tick's filtered ``_refresh``
     tick_mask = state.running & state.ticking
+    refresh_mask = tick_mask & refresh_ok
     if static.shards is None:
         scores = score_matrix(
             static.user_lat, static.user_lon, static.user_net,
@@ -375,8 +379,8 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
         border_overflow = jnp.zeros((), bool)
     else:
         new_cand, border_overflow = _sharded_candidates(
-            static, free, sched, need, k, p_min, border_cap, tick_mask)
-    cand = jnp.where(tick_mask[:, None], new_cand, cand)
+            static, free, sched, need, k, p_min, border_cap, refresh_mask)
+    cand = jnp.where(refresh_mask[:, None], new_cand, cand)
 
     # users who lost every candidate re-enter initial selection: active
     # is the best-base-RTT candidate (Client start semantics)
@@ -484,6 +488,87 @@ _fused_flush = jax.jit(_flush_impl, donate_argnums=_DONATE)
 
 
 # ---------------------------------------------------------------------------
+# mesh-sharded programs (ClientPool(mesh=...))
+# ---------------------------------------------------------------------------
+
+class MeshPrograms(NamedTuple):
+    tick: object
+    traffic: object
+    flush: object
+
+
+def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
+                        sharded: bool) -> MeshPrograms:
+    """Build the shard_map-wrapped tick/traffic/flush programs for one
+    mesh layout.  Each device runs the *same* ``_tick_impl`` body over
+    its own (Ud, ...) user block — the block's shards collapse into one
+    synthetic union shard whose task list is that device's concatenated
+    region task lists (see ``MeshTickDriver``), which is exactly the
+    per-shard loop because at ``p >= shard_precision`` a user's prefix
+    cells only ever match home-region tasks.  The border band stays a
+    *local* fixed-capacity pass against the replicated full node set
+    (replicating O(N) node columns is far cheaper than a cross-device
+    gather at edge-fleet sizes), so the body needs no collectives at
+    all: one SPMD program serves every device, and churn — which changes
+    task-list *content*, never shapes — re-traces nothing."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ps_u = P(users_axis)        # leading dim sharded over the population
+    ps_r = P()                  # replicated
+    static_spec = FusedTickStatic(
+        user_lat=ps_u, user_lon=ps_u, user_net=ps_u, user_code20=ps_u,
+        task_lat=ps_r, task_lon=ps_r, task_aff=ps_r, task_code20=ps_r,
+        task_cloud=ps_r, task_node=ps_r, node_proc=ps_r, node_slots=ps_r,
+        shards=None)
+
+    def tick_body(state, static, local_task, free, sched, alive, need,
+                  deaths, n_deaths, alpha, margin, refresh_ok):
+        COMPILE_COUNTS["mesh_tick"] += 1
+        if sharded:
+            ud = state.cand.shape[0]
+            st = static._replace(shards=(ShardIx(
+                user_ix=jnp.arange(ud, dtype=jnp.int32),
+                task_ix=local_task[0]),))
+        else:
+            st = static
+        new_state, outs = _tick_impl(
+            state, st, free, sched, alive, need, deaths, n_deaths,
+            alpha, margin, refresh_ok, p_min, border_cap)
+        # lift per-device () scalars to (1,) so the global outputs carry
+        # one element per device ((D,) — reduced on the host)
+        return new_state, outs._replace(
+            border_overflow=outs.border_overflow.reshape(1))
+
+    def traffic_body(state, static, work0, net_rate, probe_ok, frame_ok,
+                     e1p, e2p, e3p, e1f, e2f, e3f, scale, frame_interval):
+        COMPILE_COUNTS["mesh_traffic"] += 1
+        return _traffic_impl(state, static, work0, net_rate, probe_ok,
+                             frame_ok, e1p, e2p, e3p, e1f, e2f, e3f,
+                             scale, frame_interval)
+
+    def flush_body(state, static, deaths, n_deaths, alpha):
+        COMPILE_COUNTS["mesh_flush"] += 1
+        return _flush_impl(state, static, deaths, n_deaths, alpha)
+
+    tick = jax.jit(shard_map(
+        tick_body, mesh=mesh,
+        in_specs=(ps_u, static_spec, ps_u, ps_r, ps_r, ps_r, ps_r,
+                  ps_r, ps_r, ps_r, ps_r, ps_u),
+        out_specs=ps_u, check_rep=False), donate_argnums=_DONATE)
+    traffic = jax.jit(shard_map(
+        traffic_body, mesh=mesh,
+        in_specs=(ps_u, static_spec, ps_r, ps_r, ps_u, ps_u,
+                  ps_u, ps_u, ps_u, ps_u, ps_u, ps_u, ps_r, ps_r),
+        out_specs=ps_u, check_rep=False), donate_argnums=_DONATE)
+    flush = jax.jit(shard_map(
+        flush_body, mesh=mesh,
+        in_specs=(ps_u, static_spec, ps_r, ps_r, ps_r),
+        out_specs=ps_u, check_rep=False), donate_argnums=_DONATE)
+    return MeshPrograms(tick=tick, traffic=traffic, flush=flush)
+
+
+# ---------------------------------------------------------------------------
 # host-side driver
 # ---------------------------------------------------------------------------
 
@@ -515,6 +600,7 @@ class FusedTickDriver:
         self._owner_version = -1
         self.p_min = 0                  # 0 = unsharded scoring
         self.border_cap = 0
+        self._all_refresh = None        # cached all-True refresh mask
 
     def _default_border_cap(self) -> int:
         """Fixed border-band capacity: the cross-shard pass costs
@@ -542,7 +628,9 @@ class FusedTickDriver:
         npad = self.node_pad
         return max(npad, -(-len(self.pool._node_ids) // npad) * npad)
 
-    def _rebuild_static(self, view):
+    def _host_static_arrays(self, view):
+        """Shared host-side assembly of the per-pool constants: packed
+        task arrays, node->task map, node proc/slots, packed users."""
         pool = self.pool
         st = view.packed_static(self.node_pad)
         np_cap = self._node_cap()
@@ -562,6 +650,12 @@ class FusedTickDriver:
                 proc[i] = cap.spec.proc_ms
                 slots[i] = max(cap.spec.slots, 1)
         ulat, ulon, unet, ucode = self._packed_user()
+        return st, tn, proc, slots, ulat, ulon, unet, ucode
+
+    def _rebuild_static(self, view):
+        pool = self.pool
+        st, tn, proc, slots, ulat, ulon, unet, ucode = \
+            self._host_static_arrays(view)
         self.static = FusedTickStatic(
             user_lat=jnp.asarray(ulat), user_lon=jnp.asarray(ulon),
             user_net=jnp.asarray(unet), user_code20=jnp.asarray(ucode),
@@ -649,6 +743,33 @@ class FusedTickDriver:
         arr[:len(deaths)] = deaths
         return arr, np.int32(len(deaths))
 
+    def _refresh_mask(self):
+        """(U,) bool — False for users inside a Beacon re-discovery
+        window (``discovery_ms``); they keep their stale candidates for
+        the tick, exactly like the host tick's filtered ``_refresh``."""
+        m = self.pool._discovery_refresh_mask()
+        if m is None:
+            if self._all_refresh is None:
+                self._all_refresh = np.ones(self.pool.n_users, bool)
+            m = self._all_refresh
+        return m
+
+    def _run_tick(self, free, sched, alive, need, deaths, n_deaths):
+        """Run the tick program; returns per-user decision arrays in the
+        pool's (original) user order."""
+        pool = self.pool
+        self.state, outs = _fused_tick(
+            self.state, self.static, free, sched, alive, need, deaths,
+            n_deaths, pool.alpha, pool.switch_margin, self._refresh_mask(),
+            p_min=self.p_min, border_cap=self.border_cap)
+        self._stash_dirty = False       # tick folded the previous window
+        if bool(np.asarray(outs.border_overflow).any()):
+            raise RuntimeError(
+                f"fused tick: border band exceeded {self.border_cap} "
+                "users — restart the pool with a larger shard_border_cap "
+                "(or a coarser shard_precision)")
+        return outs
+
     def tick(self):
         pool = self.pool
         t0 = time.perf_counter()
@@ -667,36 +788,27 @@ class FusedTickDriver:
         pool.phase_add("transport", t0)
 
         t0 = time.perf_counter()
-        self.state, outs = _fused_tick(
-            self.state, self.static, free, sched, alive, need, deaths,
-            n_deaths, pool.alpha, pool.switch_margin,
-            p_min=self.p_min, border_cap=self.border_cap)
-        self._stash_dirty = False       # tick folded the previous window
-        if bool(outs.border_overflow):
-            raise RuntimeError(
-                f"fused tick: border band exceeded {self.border_cap} "
-                "users — restart the pool with a larger shard_border_cap "
-                "(or a coarser shard_precision)")
-        cand = np.asarray(outs.cand)
-        active = np.asarray(outs.active)
-        probe_ok = np.asarray(outs.probe_ok)
-        frame_ok = np.asarray(outs.frame_ok)
-        confirm = np.asarray(outs.confirm)
+        outs = self._run_tick(free, sched, alive, need, deaths, n_deaths)
+        cand = self._pull(outs.cand)
+        active = self._pull(outs.active)
+        probe_ok = self._pull(outs.probe_ok)
+        frame_ok = self._pull(outs.frame_ok)
+        confirm = self._pull(outs.confirm)
         pool.phase_add("fused_tick", t0)
 
         t0 = time.perf_counter()
         # mirrors + switch records (scalar-identical timestamps/order)
         pool.cand_task = cand
         pool.active = active
-        pool.pending = np.asarray(outs.pending)
-        pool.failovers = int(outs.failovers)
+        pool.pending = self._pull(outs.pending)
+        pool.failovers = int(np.asarray(outs.failovers).sum())
         self.check_overflow()
         rows = np.nonzero(confirm)[0]
         # per-switch records match the host tick's (time, user, from, to)
         # stream; population-scale runs opt out via record_samples=False
         # (the host tick has no such toggle — it pays the append cost)
         if rows.size and pool.record_samples:
-            from_node = np.asarray(outs.from_node)
+            from_node = self._pull(outs.from_node)
             now = pool.sim.now
             for u in rows:
                 pool.switch_t.append(now)
@@ -755,13 +867,28 @@ class FusedTickDriver:
             return dp, df
 
         (e1p, e1f), (e2p, e2f), (e3p, e3f) = map(split, eps)
+        self._push_traffic(work0, net_rate, probe_ok, frame_ok,
+                           ((e1p, e1f), (e2p, e2f), (e3p, e3f)))
+        self._stash_dirty = True
+
+    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):
+        pool = self.pool
+        (e1p, e1f), (e2p, e2f), (e3p, e3f) = splits
         self.state = _fused_traffic(
             self.state, self.static, work0, net_rate, probe_ok, frame_ok,
             e1p, e2p, e3p, e1f, e2f, e3f, pool.workload_scale,
             pool.frame_interval)
-        self._stash_dirty = True
 
     # ------------------------------------------------------- maintenance
+
+    def _pull(self, arr) -> np.ndarray:
+        """Device per-user array -> host numpy in pool (original) user
+        order; the mesh driver overrides with the inverse permutation."""
+        return np.asarray(arr)
+
+    def _run_flush(self, deaths, n_deaths):
+        self.state = _fused_flush(self.state, self.static, deaths,
+                                  n_deaths, self.pool.alpha)
 
     def flush(self):
         """Process queued breaks + fold the open window (metric reads).
@@ -770,18 +897,19 @@ class FusedTickDriver:
             return
         deaths, n_deaths = self._drain_deaths()
         self._stash_dirty = False
-        self.state = _fused_flush(self.state, self.static, deaths,
-                                  n_deaths, self.pool.alpha)
+        self._run_flush(deaths, n_deaths)
         pool = self.pool
-        pool.cand_task = np.asarray(self.state.cand)
-        pool.active = np.asarray(self.state.active)
-        pool.failovers = int(self.state.failovers)
+        pool.cand_task = self._pull(self.state.cand)
+        pool.active = self._pull(self.state.active)
+        pool.failovers = int(np.asarray(self.state.failovers).sum())
 
     def sync_aggregates(self):
         self.flush()
         pool = self.pool
-        pool.frame_count = np.asarray(self.state.frame_count, np.int64)
-        pool.frame_sum = np.asarray(self.state.frame_sum, np.float64)
+        pool.frame_count = self._pull(self.state.frame_count)\
+            .astype(np.int64)
+        pool.frame_sum = self._pull(self.state.frame_sum)\
+            .astype(np.float64)
 
     def reset_aggregates(self):
         self.flush()
@@ -796,17 +924,336 @@ class FusedTickDriver:
         self.deaths.append(int(node_ix))
 
     def check_overflow(self):
-        if bool(self.state.ema_overflow):
+        if bool(np.asarray(self.state.ema_overflow).any()):
             raise RuntimeError(
                 f"fused tick: a user outgrew its {self.ema_slots} EMA "
                 "slots — restart the pool with a larger ema_slots")
+
+    def _row(self, u: int) -> int:
+        """Pool user index -> device state row (mesh driver permutes)."""
+        return u
 
     def ema_dict(self, u: int):
         """Per-user node-id -> EMA map (tests/metrics; mirrors
         ``_EmaTable.as_dict``)."""
         self.flush()
-        nodes = np.asarray(self.state.ema_nodes[u])
-        vals = np.asarray(self.state.ema_vals[u], np.float64)
+        r = self._row(u)
+        nodes = np.asarray(self.state.ema_nodes[r])
+        vals = np.asarray(self.state.ema_vals[r], np.float64)
         ids = self.pool._node_ids
         return {ids[n]: float(v) for n, v in zip(nodes, vals)
                 if n >= 0 and not np.isnan(v)}
+
+
+# ---------------------------------------------------------------------------
+# mesh driver
+# ---------------------------------------------------------------------------
+
+# pad-row fill per state field (device blocks are padded to a uniform
+# per-device row count; pad rows are permanently not-running)
+_STATE_PAD_FILL = dict(
+    ema_nodes=-1, ema_vals=np.nan, cand=-1, active=-1, pending=-1,
+    running=False, ticking=False, reinit=False, lat_probe=np.nan,
+    lat_frame=np.nan, cand_traffic=-1, active_traffic=-1,
+    frame_count=0, frame_sum=0.0)
+
+
+class MeshTickDriver(FusedTickDriver):
+    """Mesh-sharded fused tick (``ClientPool(mesh=...)``): the user
+    population is split into per-device blocks by home region — region
+    shards are bin-packed onto devices by user count — and every device
+    runs the same SPMD tick body over only its own block.
+
+    Identity with the single-device tick is structural, not numeric
+    luck: a device block's region shards collapse into one synthetic
+    union shard (its concatenated task lists), and at
+    ``p >= shard_precision`` a user's proximity cells only ever match
+    home-region tasks, so the union pass computes exactly the per-shard
+    loop — same scores, same ascending-global-order ties.  Users the
+    in-region widening cannot satisfy escalate to a per-device
+    fixed-capacity border pass over the *replicated* full node set,
+    which is verbatim the unsharded scoring pass — so even a user
+    straddling a device boundary gets bit-identical candidates; device
+    placement can only ever cost border capacity, never correctness.
+
+    The host-visible decision stream stays in pool (original) user
+    order: ``_perm``/``_pos`` translate between pool order and
+    device-block order, so RNG draws, arrive_batch admission and switch
+    records replay in the exact single-device sequence.  A Beacon
+    handoff or node-epoch change that re-routes users across device
+    boundaries re-homes them wholesale: state is pulled to pool order
+    under the old placement and re-uploaded under the new one (at most
+    one retrace — block shapes only ever grow, and churn changes task
+    *content*, never shapes, so steady-state ticks never retrace)."""
+
+    def __init__(self, pool, mesh, node_pad: int = 256,
+                 ema_slots: int = 32):
+        super().__init__(pool, node_pad=node_pad, ema_slots=ema_slots)
+        from repro.distributed.sharding import make_pool_rules
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                "ClientPool mesh must be 1-D (a single users axis); "
+                f"got axes {mesh.axis_names}")
+        self.mesh = mesh
+        self.users_axis = mesh.axis_names[0]
+        self.n_dev = int(mesh.devices.size)
+        self.rules = make_pool_rules(mesh)
+        self._sharded = False
+        self._ud = 0            # per-device user rows (monotonic)
+        self._tloc = 0          # per-device task columns (monotonic)
+        self._perm = None       # (Up,) device row -> pool user, -1 pad
+        self._pos = None        # (U,) pool user -> device row
+        self._valid = None      # (Up,) bool real rows
+        self._local_task = None  # (D, Tloc) device-resident task lists
+        self._programs = {}
+        self._state_sh = None
+        self._static_sh = None
+        self._lt_sh = None
+
+    # --------------------------------------------------------- placement
+
+    def _default_border_cap(self) -> int:
+        """Per-device border capacity (the border pass is local — each
+        device escalates only its own block's unsatisfied users)."""
+        ud = max(self._ud, 1)
+        return min(ud, max(128, -(-ud // 8 // 128) * 128))
+
+    def _compute_placement(self):
+        """Route users to region shards, bin-pack shards onto devices,
+        and derive the block permutation + per-device task lists."""
+        pool = self.pool
+        engine = pool.am.engine
+        D = self.n_dev
+        u = pool.n_users
+        if self._u_codes is None:
+            from repro.core import geohash
+            from repro.core.selection import CODE_PRECISION
+            self._u_codes = geohash.encode_batch(
+                pool.locs[:, 0], pool.locs[:, 1], CODE_PRECISION)
+        shard_view = engine.shard_view(
+            pool.service_id, pool.am.tasks.get(pool.service_id, ()))
+        if shard_view is None:
+            # unsharded engine: contiguous blocks, each device scores
+            # its users against the full replicated set — identity by
+            # construction (no region structure to exploit)
+            self._sharded = False
+            self.p_min = 0
+            blocks = [b for b in
+                      np.array_split(np.arange(u, dtype=np.int64), D)]
+            local_cols = [np.full(1, -1, np.int32) for _ in range(D)]
+        else:
+            self._sharded = True
+            from repro.core.selection import assign_shards_to_devices
+            route_key = (shard_view.precision, shard_view.owner_version)
+            if self._u_shard is None or self._u_shard[0] != route_key:
+                self._u_shard = (route_key,
+                                 shard_view.route(self._u_codes))
+            u_shard = self._u_shard[1]
+            shards = [(sh, np.nonzero(u_shard == sh.code)[0])
+                      for sh in shard_view.shards]
+            shards = [(sh, ix) for sh, ix in shards if ix.size]
+            assign, _ = assign_shards_to_devices(
+                [ix.size for _, ix in shards], D)
+            users_d = [[] for _ in range(D)]
+            tasks_d = [[] for _ in range(D)]
+            for (sh, ix), d in zip(shards, assign):
+                users_d[d].append(ix)
+                tasks_d[d].append(sh.task_ix_padded(self.node_pad))
+            # users routed to no shard always escalate to the (local,
+            # full-set) border pass — park them on the lightest device
+            homed = np.zeros(u, bool)
+            for _, ix in shards:
+                homed[ix] = True
+            orphans = np.nonzero(~homed)[0]
+            if orphans.size:
+                d = int(np.argmin([sum(x.size for x in b)
+                                   for b in users_d]))
+                users_d[d].append(orphans)
+            blocks = [np.concatenate(b).astype(np.int64) if b
+                      else np.empty(0, np.int64) for b in users_d]
+            local_cols = [np.concatenate(t) if t
+                          else np.full(1, -1, np.int32) for t in tasks_d]
+            self.p_min = shard_view.precision
+        # uniform per-device sizes, monotonic: a handoff can only grow
+        # them (one retrace), steady-state churn changes content only
+        need_ud = max(1, max(b.size for b in blocks))
+        self._ud = max(self._ud, -(-need_ud // 64) * 64)
+        self._tloc = max(self._tloc, max(c.size for c in local_cols))
+        up = D * self._ud
+        perm = np.full(up, -1, np.int64)
+        for d, b in enumerate(blocks):
+            perm[d * self._ud: d * self._ud + b.size] = b
+        valid = perm >= 0
+        pos = np.empty(u, np.int64)
+        pos[perm[valid]] = np.nonzero(valid)[0]
+        self._perm, self._pos, self._valid = perm, pos, valid
+        lt = np.full((D, self._tloc), -1, np.int32)
+        for d, c in enumerate(local_cols):
+            lt[d, :c.size] = c
+        self.border_cap = pool.shard_border_cap \
+            if pool.shard_border_cap is not None \
+            else self._default_border_cap()
+        return lt
+
+    def _to_dev(self, arr, fill=0):
+        """Pool-order (U, ...) host array -> padded device-order
+        (Up, ...)."""
+        arr = np.asarray(arr)
+        out = np.full((self._perm.shape[0],) + arr.shape[1:], fill,
+                      arr.dtype)
+        out[self._valid] = arr[self._perm[self._valid]]
+        return out
+
+    def _pull(self, arr) -> np.ndarray:
+        return np.asarray(arr)[self._pos]
+
+    def _row(self, u: int) -> int:
+        return int(self._pos[u])
+
+    # ------------------------------------------------------------ setup
+
+    def _rebuild_static(self, view):
+        from repro.distributed.sharding import (POOL_LOCAL_TASK_AXES,
+                                                POOL_STATE_AXES,
+                                                POOL_STATIC_AXES,
+                                                pool_shardings)
+        pool = self.pool
+        st, tn, proc, slots, ulat, ulon, unet, ucode = \
+            self._host_static_arrays(view)
+        old = (self._perm, self._pos) if self._perm is not None else None
+        lt = self._compute_placement()
+        if self._static_sh is None:
+            self._static_sh = pool_shardings(
+                self.mesh, POOL_STATIC_AXES, self.rules)
+            self._state_sh = pool_shardings(
+                self.mesh, POOL_STATE_AXES, self.rules)
+            self._lt_sh = pool_shardings(
+                self.mesh, POOL_LOCAL_TASK_AXES,
+                self.rules)["local_task"]
+        host = dict(
+            user_lat=self._to_dev(ulat), user_lon=self._to_dev(ulon),
+            user_net=self._to_dev(unet), user_code20=self._to_dev(ucode),
+            task_lat=np.asarray(st.lat), task_lon=np.asarray(st.lon),
+            task_aff=np.asarray(st.aff),
+            task_code20=np.asarray(st.code20),
+            task_cloud=np.asarray(st.cloud), task_node=tn,
+            node_proc=proc, node_slots=slots)
+        self.static = FusedTickStatic(
+            shards=None,
+            **{k: jax.device_put(v, self._static_sh[k])
+               for k, v in host.items()})
+        self._local_task = jax.device_put(lt, self._lt_sh)
+        self._epoch = view.epoch
+        self._owner_version = pool.am.engine.owner_version
+        if self.state is not None and old is not None and \
+                not (old[0].shape == self._perm.shape
+                     and np.array_equal(old[0], self._perm)):
+            self._repack_state(old[1])
+
+    def _upload_state(self, host, *, failovers: int, overflow: bool):
+        """Upload pool-order host state under the current placement."""
+        dev = {f: self._to_dev(host[f], _STATE_PAD_FILL[f])
+               for f in _STATE_PAD_FILL}
+        fo = np.zeros(self.n_dev, np.int32)
+        fo[0] = failovers               # (D,) — the host reads the sum
+        ov = np.zeros(self.n_dev, bool)
+        ov[0] = overflow
+        dev["failovers"] = fo
+        dev["ema_overflow"] = ov
+        self.state = FusedTickState(
+            **{k: jax.device_put(v, self._state_sh[k])
+               for k, v in dev.items()})
+
+    def _repack_state(self, old_pos):
+        """Re-home protocol: a handoff re-routed users across device
+        boundaries — pull the state to pool order under the old
+        placement, re-upload under the new one."""
+        s = self.state
+        host = {f: np.asarray(getattr(s, f))[old_pos]
+                for f in _STATE_PAD_FILL}
+        self._upload_state(
+            host, failovers=int(np.asarray(s.failovers).sum()),
+            overflow=bool(np.asarray(s.ema_overflow).any()))
+
+    def init_state(self):
+        pool = self.pool
+        view = pool._view()
+        self._rebuild_static(view)
+        u, k = pool.cand_task.shape
+        host = dict(
+            ema_nodes=np.full((u, self.ema_slots), -1, np.int32),
+            ema_vals=np.full((u, self.ema_slots), np.nan, np.float32),
+            cand=np.asarray(pool.cand_task),
+            active=np.asarray(pool.active),
+            pending=np.asarray(pool.pending),
+            running=np.asarray(pool.running),
+            ticking=np.asarray(pool.ticking),
+            reinit=np.zeros(u, bool),
+            lat_probe=np.full((u, k), np.nan, np.float32),
+            lat_frame=np.full((u, self.nf), np.nan, np.float32),
+            cand_traffic=np.full((u, k), -1, np.int32),
+            active_traffic=np.full(u, -1, np.int32),
+            frame_count=np.zeros(u, np.int32),
+            frame_sum=np.zeros(u, np.float32))
+        self._upload_state(host, failovers=0, overflow=False)
+
+    # ------------------------------------------------------------- tick
+
+    def _programs_for(self) -> MeshPrograms:
+        key = (self.p_min, self.border_cap, self._sharded)
+        prog = self._programs.get(key)
+        if prog is None:
+            prog = _make_mesh_programs(self.mesh, self.users_axis,
+                                       self.p_min, self.border_cap,
+                                       self._sharded)
+            self._programs[key] = prog
+        return prog
+
+    def _run_tick(self, free, sched, alive, need, deaths, n_deaths):
+        pool = self.pool
+        prog = self._programs_for()
+        r_ok = self._to_dev(self._refresh_mask(), False)
+        self.state, outs = prog.tick(
+            self.state, self.static, self._local_task, free, sched,
+            alive, need, deaths, n_deaths, pool.alpha,
+            pool.switch_margin, r_ok)
+        self._stash_dirty = False
+        if bool(np.asarray(outs.border_overflow).any()):
+            raise RuntimeError(
+                f"fused tick: a device's border band exceeded "
+                f"{self.border_cap} users — restart the pool with a "
+                "larger shard_border_cap (or a coarser shard_precision)")
+        return outs
+
+    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):
+        pool = self.pool
+        prog = self._programs_for()
+        td = self._to_dev
+        (e1p, e1f), (e2p, e2f), (e3p, e3f) = splits
+        self.state = prog.traffic(
+            self.state, self.static, work0, net_rate,
+            td(probe_ok, False), td(frame_ok, False),
+            td(e1p), td(e2p), td(e3p), td(e1f), td(e2f), td(e3f),
+            pool.workload_scale, pool.frame_interval)
+
+    def _run_flush(self, deaths, n_deaths):
+        prog = self._programs_for()
+        self.state = prog.flush(self.state, self.static, deaths,
+                                n_deaths, self.pool.alpha)
+
+    # ------------------------------------------------------- maintenance
+
+    def reset_aggregates(self):
+        self.flush()
+        up = self._perm.shape[0]
+        self.state = self.state._replace(
+            frame_count=jax.device_put(
+                np.zeros(up, np.asarray(self.state.frame_count).dtype),
+                self._state_sh["frame_count"]),
+            frame_sum=jax.device_put(
+                np.zeros(up, np.asarray(self.state.frame_sum).dtype),
+                self._state_sh["frame_sum"]))
+
+    def set_running(self, running: np.ndarray):
+        self.state = self.state._replace(running=jax.device_put(
+            self._to_dev(running, False), self._state_sh["running"]))

@@ -474,6 +474,24 @@ class _ShardSet:
             u_codes >> np.int64(5 * (CODE_PRECISION - self.precision)))
 
 
+def assign_shards_to_devices(counts: Sequence[int], n_devices: int
+                             ) -> Tuple[List[int], List[int]]:
+    """Greedy LPT bin-pack of region shards onto mesh devices by user
+    count: heaviest shard first onto the least-loaded device.  Returns
+    ``(assignment, load)`` — a device index per shard and the resulting
+    per-device user counts.  Deterministic (ties break on ascending
+    shard / device index), so every host computes the same placement;
+    the mesh tick driver consumes it to build its block permutation."""
+    order = sorted(range(len(counts)), key=lambda i: (-counts[i], i))
+    load = [0] * n_devices
+    assign = [0] * len(counts)
+    for i in order:
+        d = min(range(n_devices), key=lambda j: (load[j], j))
+        assign[i] = d
+        load[d] += counts[i]
+    return assign, load
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -500,6 +518,11 @@ class SelectionEngine:
         self.hidden_nodes: frozenset = frozenset()
         self._owner: Optional[Dict[int, int]] = None
         self.owner_version = 0
+        # client-side Beacon discovery latency (set by an ArmadaSystem):
+        # the probe loop charges this window on bootstrap and whenever a
+        # user's serving region changes (Beacon handoff/re-home) before
+        # refreshing candidates from the new Beacon
+        self.discovery_ms = 0.0
         # data-locality preference (set by a CargoManager): per-service
         # (replica_locs, weight) — a purely dynamic input like ``hidden``,
         # folded into the free-fraction vector so every tick path scores

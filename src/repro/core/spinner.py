@@ -136,9 +136,12 @@ class Spinner:
 
     def deploy_task(self, task, image: Image, location,
                     selection: str = "armada",
-                    on_ready: Optional[Callable] = None) -> Optional[float]:
+                    on_ready: Optional[Callable] = None,
+                    policy_filter: Optional[Callable] = None
+                    ) -> Optional[float]:
         """Task_Deploy: place + pull + start. Returns deployment latency."""
-        captain = self.select_captain(image, location, selection=selection)
+        captain = self.select_captain(image, location, selection=selection,
+                                      policy_filter=policy_filter)
         if captain is None:
             return None
         missing = sum(mb for lid, mb in image.layers

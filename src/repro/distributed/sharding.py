@@ -208,3 +208,67 @@ def tree_shardings(mesh: Mesh, axes_tree, rules, shapes=None):
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return {k: NamedSharding(mesh, s)
             for k, s in tree_specs(axes_tree, rules, shapes, sizes).items()}
+
+
+# ---------------------------------------------------------------------------
+# ClientPool / fused-tick mesh rules (control-plane scale-out)
+# ---------------------------------------------------------------------------
+# The pool's SoA state has exactly one shardable logical axis: ``users``
+# (the population, pre-permuted into per-device region blocks by the
+# MeshTickDriver).  Node/task attribute arrays are O(N) and replicated on
+# every device — at edge-fleet sizes (10k nodes ≈ hundreds of KB) that is
+# far cheaper than paying a cross-device gather in the border pass, and it
+# is what makes the border band a purely *local* fixed-capacity pass.
+
+# logical axes per FusedTickState field (leading ``users`` throughout;
+# () scalars are widened to one element per device, hence ("users",))
+POOL_STATE_AXES = {
+    "ema_nodes": ("users", None), "ema_vals": ("users", None),
+    "ema_overflow": ("users",),
+    "cand": ("users", None), "active": ("users",), "pending": ("users",),
+    "running": ("users",), "ticking": ("users",), "reinit": ("users",),
+    "lat_probe": ("users", None), "lat_frame": ("users", None),
+    "cand_traffic": ("users", None), "active_traffic": ("users",),
+    "frame_count": ("users",), "frame_sum": ("users",),
+    "failovers": ("users",),
+}
+
+# FusedTickStatic: user attribute arrays ride the users axis, node/task
+# arrays are replicated (the ``shards`` field is host-side only — the mesh
+# driver passes per-device task lists separately)
+POOL_STATIC_AXES = {
+    "user_lat": ("users",), "user_lon": ("users",), "user_net": ("users",),
+    "user_code20": ("users",),
+    "task_lat": (None,), "task_lon": (None,), "task_aff": (None, None),
+    "task_code20": (None,), "task_cloud": (None,), "task_node": (None,),
+    "node_proc": (None,), "node_slots": (None,),
+}
+
+# per-device local task lists: (D, T_loc) — one row per device
+POOL_LOCAL_TASK_AXES = {"local_task": ("users", None)}
+
+
+def make_pool_rules(mesh: Mesh, *, users_axis: str = None) -> Dict[str, Any]:
+    """Logical-axis -> mesh-axis rules for the mesh-sharded ClientPool.
+
+    The pool mesh is 1-D (``users`` over all devices) by default; pass
+    ``users_axis`` to place the population on one axis of a larger mesh
+    (the remaining axes replicate — the control plane has no model
+    dimension to shard)."""
+    ax = users_axis if users_axis is not None else mesh.axis_names[0]
+    if ax not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {ax!r} "
+                         f"(axes: {mesh.axis_names})")
+    return {"users": ax}
+
+
+def pool_specs(axes_tree: Dict[str, Tuple],
+               rules: Dict[str, Any]) -> Dict[str, PS]:
+    """PartitionSpecs for one of the POOL_*_AXES trees."""
+    return tree_specs(axes_tree, rules)
+
+
+def pool_shardings(mesh: Mesh, axes_tree: Dict[str, Tuple],
+                   rules: Dict[str, Any]) -> Dict[str, NamedSharding]:
+    """NamedShardings for one of the POOL_*_AXES trees."""
+    return tree_shardings(mesh, axes_tree, rules)

@@ -37,10 +37,12 @@ def _busiest_region(sys_) -> str:
 
 
 def _run_kill_recover(tick, *, n_users=50, seed=0, fail_t=5_900.0,
-                      recover_t=10_100.0, until=16_000.0, node_fail=()):
+                      recover_t=10_100.0, until=16_000.0, node_fail=(),
+                      discovery_ms=0.0):
     """One Fig 8/10 fluid run with a Beacon killed and recovered mid-run.
     Returns (pool, system, mid-outage candidate snapshots)."""
     sys_ = _fluid_system(seed=seed, shard=3)
+    sys_.am.engine.discovery_ms = discovery_ms
     rng = np.random.default_rng(seed + 1)
     locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
                      -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
@@ -84,6 +86,47 @@ def test_beacon_kill_recover_host_device_decision_identity():
     # ... and the handoff visibly moved candidates, then re-homed them
     assert not np.array_equal(hsnap["pre"][0], hsnap["outage"][0])
     assert [e for e in ds.beacons.events] == [e for e in hs.beacons.events]
+
+
+def test_discovery_window_host_device_identity():
+    """Client-side Beacon discovery latency (``discovery_ms``): the
+    bootstrap is deferred, handoff-affected users keep their stale
+    candidates until the re-discovery window closes, and the host and
+    fused device ticks gate the refresh IDENTICALLY — the whole decision
+    stream matches through kill -> replay -> recover."""
+    host, hs, hsnap = _run_kill_recover("host", discovery_ms=1_500.0)
+    dev, ds, dsnap = _run_kill_recover("device", discovery_ms=1_500.0)
+    _assert_decisions_equal(dev, host)
+    for label in ("pre", "outage", "recovered"):
+        np.testing.assert_array_equal(hsnap[label][0], dsnap[label][0],
+                                      err_msg=f"cand@{label}")
+        np.testing.assert_array_equal(hsnap[label][1], dsnap[label][1],
+                                      err_msg=f"active@{label}")
+    # the window visibly delayed the handoff: mid-outage candidates
+    # differ from an instant-discovery run's (which has already rerouted)
+    free, _, fsnap = _run_kill_recover("host")
+    assert not np.array_equal(hsnap["outage"][0], fsnap["outage"][0]), \
+        "discovery window had no visible effect on the handoff"
+    # bootstrap pays the window too: the first tick shifts by one probe
+    assert host.ticks_run < free.ticks_run
+
+
+def test_discovery_defers_bootstrap():
+    """``pool.start`` is deferred by ``discovery_ms`` — no user runs (and
+    no tick fires) until the client has found its Beacon."""
+    sys_ = _fluid_system(seed=0, shard=3)
+    sys_.am.engine.discovery_ms = 1_500.0
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 20),
+                     -93.22 + rng.uniform(-.5, .5, 20)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="numpy", tick="host")
+    sys_.sim.at(0.0, pool.start)
+    sys_.sim.run(until=1_400.0)
+    assert not pool.running.any() and pool.ticks_run == 0
+    sys_.sim.run(until=3_700.0)
+    assert pool.running.all() and pool.ticks_run > 0
 
 
 def test_beacon_outage_keeps_data_plane_alive():
@@ -228,3 +271,12 @@ def test_bench_beacon_failover_smoke_profile():
     peak = float(d.split("displaced_peak=")[1].split(";")[0])
     end = float(d.split("displaced_end=")[1].split(";")[0])
     assert peak > 0.0 and end == 0.0
+    # the discovery-charged case surfaces its window in unavail_ms:
+    # unavail = max(beacon convergence, client re-discovery)
+    disc = [d for n, _, d in rows if "/disc" in n]
+    assert disc, "smoke profile lost the discovery case"
+    dd = disc[0]
+    u = float(dd.split("unavail_ms=")[1].split(";")[0])
+    conv = float(dd.split("beacon_conv_ms=")[1].split(";")[0])
+    dms = float(dd.split("discovery_ms=")[1].split(";")[0])
+    assert dms == 500.0 and u == max(conv, dms)

@@ -361,23 +361,32 @@ def test_partition_guard_rails():
         flat.partition_beacon("9zv", 100.0)
 
 
-def test_device_tick_ema_slots_passthrough():
+def _ema_slots_locs():
+    rng = np.random.default_rng(2)
+    return np.stack([44.97 + rng.uniform(-.5, .5, 16),
+                     -93.22 + rng.uniform(-.5, .5, 16)], axis=1)
+
+
+def test_device_tick_ema_slots_overflow_is_loud():
     """``ClientPool(ema_slots=...)`` reaches the fused driver — a table
     too small for even one candidate refresh overflows loudly (the
-    remedy named in the error is actually settable), and a sized table
-    leaves decisions identical to the default."""
+    remedy named in the error is actually settable)."""
     import repro.core.fused_tick  # noqa: F401 — jax presence gate
     sys_ = _fluid_system(seed=1, shard=3)
-    rng = np.random.default_rng(2)
-    locs = np.stack([44.97 + rng.uniform(-.5, .5, 16),
-                     -93.22 + rng.uniform(-.5, .5, 16)], axis=1)
     pool = sys_.make_client_pool(
-        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
-        selection_backend="geo_topk", tick="device", shard_border_cap=16,
-        ema_slots=1)
+        SERVICE, locs=_ema_slots_locs(), transport="fluid",
+        frame_interval_ms=500.0, selection_backend="geo_topk",
+        tick="device", shard_border_cap=16, ema_slots=1)
     sys_.sim.at(0.0, pool.start)
     with pytest.raises(RuntimeError, match="ema_slots"):
         sys_.sim.run(until=4_100.0)
+
+
+@pytest.mark.slow
+def test_device_tick_ema_slots_sized_matches_default():
+    """A sized EMA table leaves decisions identical to the default."""
+    import repro.core.fused_tick  # noqa: F401 — jax presence gate
+    locs = _ema_slots_locs()
 
     def run(slots):
         s = _fluid_system(seed=1, shard=3)
@@ -406,3 +415,48 @@ def test_bench_partition_smoke_profile():
     assert float(d.split("divergence=")[1].split(";")[0]) > 0.0
     frac = float(d.split("local_frac_handoff=")[1].split(";")[0])
     assert 0.0 <= frac <= 1.0
+
+# ---------------------------------------------------------------------------
+# Beacon-scoped autoscale (Spinner scheduling respects fault domains)
+# ---------------------------------------------------------------------------
+
+def test_autoscale_never_lands_on_partitioned_minority():
+    """Demand-driven spawns must stay inside the scheduler's own
+    reachability group: while a region is cut, its Captains are in
+    ``engine.hidden_nodes`` and the majority's autoscale may not deploy
+    replicas onto them — even though the overloaded cell's centroid sits
+    exactly in the cut region, making its (hidden) Captains the
+    geo-nearest placement targets."""
+    sys_ = _fluid_system(seed=0, shard=3)
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, 600),
+                     -93.22 + rng.uniform(-.5, .5, 600)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend="numpy", tick="host", shard_border_cap=600)
+    sys_.sim.at(0.0, pool.start)
+    # 600 users on ~24 occupied nodes: every autoscale tick finds
+    # overloaded regions and spawns (capacity never catches up — new
+    # replicas land on already-counted nodes)
+    sys_.am.autoscale_enabled = True
+    sys_.am._schedule_autoscale(SERVICE)
+
+    region = sys_.beacons.busiest_region()
+    cut_t, heal_t = 4_900.0, 11_100.0
+    sys_.partition_beacon(region, cut_t).heal_at(heal_t)
+    mid: dict = {}
+    sys_.sim.at(heal_t - 100.0, lambda: mid.update(
+        hidden=set(sys_.am.engine.hidden_nodes),
+        events=list(sys_.am.scale_events)))
+    sys_.sim.run(until=14_000.0)
+
+    assert mid["hidden"], "partition never hid the minority's nodes"
+    in_window = [e for e in mid["events"] if cut_t < e["t"] < heal_t]
+    assert in_window, "no autoscale activity during the partition"
+    # deploy_log records node at PLACEMENT time, not readiness
+    placed = [e for e in sys_.spinner.deploy_log
+              if cut_t < e["t"] < heal_t]
+    assert placed, "no replica actually placed during the partition"
+    bad = [e["task"] for e in placed if e["node"] in mid["hidden"]]
+    assert not bad, f"autoscale deployed onto unreachable minority: {bad}"
+    assert pool.ticks_run > 0
