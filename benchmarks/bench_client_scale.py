@@ -21,8 +21,13 @@ ticks — the ≥3× target from ROADMAP's "Pool jnp tick fusion" item is
 measured against the numpy tick).
 
 Default sweep ends at the headline 100k users × 1k nodes run (probing +
-frames + volunteer churn); ``run(smoke=True)`` (or ``--smoke`` on the
-CLI) is a seconds-scale profile exercised by tier-1 tests.
+frames + volunteer churn), then a steady-state comparison pair
+(``device_full`` vs ``device_inc``) under identical gentle churn that
+isolates what incremental candidate refresh (``refresh_period_ms``)
+buys: the ``speedup_incremental`` derived row is the ISSUE's ≥5×
+target, and both rows carry per-tick dirty-fraction columns.
+``run(smoke=True)`` (or ``--smoke`` on the CLI) is a seconds-scale
+profile exercised by tier-1 tests and includes a ``device_inc`` case.
 """
 from __future__ import annotations
 
@@ -77,66 +82,98 @@ def _system(n_nodes: int, seed: int) -> ArmadaSystem:
 def _bench_case(n_users: int, n_nodes: int, n_ticks: int,
                 seed: int = 0, probe_period: float = 2000.0,
                 frame_interval: float = 1000.0,
-                mode: str = "geo_topk"):
-    """``mode``: ``numpy``/``geo_topk`` (host tick, backend named) or
-    ``device`` (fused device-resident tick)."""
+                mode: str = "geo_topk", mttf_factor: float = 40.0,
+                warm_ticks: int = 0):
+    """``mode``: ``numpy``/``geo_topk`` (host tick, backend named),
+    ``device`` (fused device-resident tick), or the steady-state
+    comparison pair ``device_full`` / ``device_inc`` (identical fused
+    tick, the latter with incremental candidate refresh:
+    ``refresh_period_ms`` at 20 probe periods, ``refresh_cap`` U/8).
+    ``warm_ticks`` excludes jit compilation + tracker ramp-up from the
+    timed window so the pair measures steady-state per-tick cost."""
     sys_ = _system(n_nodes, seed)
     rng = np.random.default_rng(seed + 1)
     locs = np.stack(
         [_METRO[0] + rng.uniform(-0.5, 0.5, n_users),
          _METRO[1] + rng.uniform(-0.5, 0.5, n_users)], axis=1)
-    tick = "device" if mode == "device" else "host"
-    backend = "geo_topk" if mode == "device" else mode
+    tick = "device" if mode.startswith("device") else "host"
+    backend = "geo_topk" if mode.startswith("device") else mode
+    kw = {}
+    if mode == "device_inc":
+        kw["refresh_period_ms"] = 20 * probe_period
+        kw["refresh_cap"] = max(128, n_users // 8)
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, nets="wifi", transport="fluid",
         probe_period_ms=probe_period, frame_interval_ms=frame_interval,
-        selection_backend=backend, tick=tick, record_samples=False)
+        selection_backend=backend, tick=tick, record_samples=False, **kw)
     sys_.sim.at(0.0, pool.start)
     # volunteer churn: non-dedicated nodes fail/recover throughout the run
     churn = ChurnModel(sys_.sim, sys_.captains,
-                       volunteer_mttf_ms=40 * probe_period,
+                       volunteer_mttf_ms=mttf_factor * probe_period,
                        mttr_ms=5 * probe_period)
     churn.start()
 
-    horizon = n_ticks * probe_period
+    if warm_ticks:
+        sys_.sim.run(until=warm_ticks * probe_period)
+    ticks0, dirty0 = pool.ticks_run, len(pool.dirty_counts or ())
+    horizon = (warm_ticks + n_ticks) * probe_period
     t0 = time.perf_counter()
     sys_.sim.run(until=horizon)
     wall_ms = (time.perf_counter() - t0) * 1e3
     assert not sys_.sim.truncated
-    assert pool.ticks_run >= n_ticks - 1, pool.ticks_run
-    per_tick = wall_ms / max(pool.ticks_run, 1)
+    timed = pool.ticks_run - ticks0
+    assert timed >= n_ticks - 1, timed
+    per_tick = wall_ms / max(timed, 1)
     req_per_s = pool.requests_sent / (wall_ms / 1e3)
     leaves = sum(1 for e in churn.events if e["kind"] == "leave")
     phases = ";".join(
         f"phase_{k}_ms={v / max(pool.ticks_run, 1):.1f}"
         for k, v in sorted(pool.phase_ms.items()))
+    dirty = ""
+    counts = pool.dirty_counts
+    if counts is not None:
+        counts = counts[dirty0:]
+        fracs = [c / n_users for c in counts]
+        mean = sum(fracs) / max(len(fracs), 1)
+        dirty = (f";dirty_frac_mean={mean:.4f};dirty_frac_ticks=" +
+                 "|".join(f"{f:.4f}" for f in fracs))
     tag = f"client_scale/u{n_users}_n{n_nodes}/{mode}"
     return [(tag, per_tick,
              f"ticks={pool.ticks_run};reqs={pool.requests_sent};"
              f"req_per_s={req_per_s:.0f};node_failures={leaves};"
              f"failovers={pool.failovers};"
-             f"mean_frame_ms={pool.mean_latency():.1f};{phases}")]
+             f"mean_frame_ms={pool.mean_latency():.1f};{phases}{dirty}")]
 
 
 def run(smoke: bool = False):
     if smoke:
         # seconds-scale tier-1 profile: small enough that jit compilation,
-        # not the swept population, is the dominant cost
-        sweep = [(256, 64, 4, "numpy"),
-                 (256, 64, 4, "device")]
+        # not the swept population, is the dominant cost (device_inc
+        # registers the incremental-refresh mode so --smoke exercises the
+        # sparse program + tracker end-to-end)
+        sweep = [(256, 64, 4, "numpy", {}),
+                 (256, 64, 4, "device", {}),
+                 (256, 64, 4, "device_inc", {})]
     else:
         # numpy wins at small N (no jit round-trip); the fused geo_topk
         # oracle takes over once U x N scoring dominates the tick, and
         # the device-resident tick removes the remaining host round-trips
-        sweep = [(10_000, 100, 10, "numpy"),
-                 (10_000, 1_000, 10, "numpy"),
-                 (10_000, 1_000, 10, "geo_topk"),
-                 (100_000, 1_000, 15, "numpy"),
-                 (100_000, 1_000, 15, "geo_topk"),
-                 (100_000, 1_000, 15, "device")]
+        pair = {"mttf_factor": 400.0, "warm_ticks": 3}
+        sweep = [(10_000, 100, 10, "numpy", {}),
+                 (10_000, 1_000, 10, "numpy", {}),
+                 (10_000, 1_000, 10, "geo_topk", {}),
+                 (100_000, 1_000, 15, "numpy", {}),
+                 (100_000, 1_000, 15, "geo_topk", {}),
+                 (100_000, 1_000, 15, "device", {}),
+                 # steady-state incremental pair: identical gentle churn
+                 # (mttf 400 probe periods — a few node events per run,
+                 # not a fleet-wide storm), jit warmup excluded, only the
+                 # refresh strategy differs
+                 (100_000, 1_000, 15, "device_full", pair),
+                 (100_000, 1_000, 15, "device_inc", pair)]
     rows = []
-    for n_users, n_nodes, n_ticks, mode in sweep:
-        rows.extend(_bench_case(n_users, n_nodes, n_ticks, mode=mode))
+    for n_users, n_nodes, n_ticks, mode, kw in sweep:
+        rows.extend(_bench_case(n_users, n_nodes, n_ticks, mode=mode, **kw))
     return rows
 
 
@@ -151,7 +188,12 @@ def derive(us_by_name):
         b = us_by_name.get(pre + base)
         if b and dev and b == b and dev == dev:
             rows.append((f"{pre}speedup_device_vs_{base}",
-                         float("nan"), f"speedup={b / dev:.2f}x"))
+                         None, f"speedup={b / dev:.2f}x"))
+    inc = us_by_name.get(pre + "device_inc")
+    full = us_by_name.get(pre + "device_full")
+    if inc and full and inc == inc and full == full:
+        rows.append((f"{pre}speedup_incremental",
+                     None, f"speedup={full / inc:.2f}x"))
     return rows
 
 
@@ -165,4 +207,4 @@ if __name__ == "__main__":
     for name, ms, derived in rows:
         print(f"{name},{ms:.1f},{derived}")
     for name, ms, derived in derive({n: m * 1e3 for n, m, _ in rows}):
-        print(f"{name},{ms:.1f},{derived}")
+        print(f"{name},{'' if ms is None else f'{ms:.1f}'},{derived}")

@@ -101,17 +101,19 @@ def _child_case(case: dict):
     n_meas = case.get("measure", 4)
     seed = case.get("seed", 0)
     churn_on = case.get("churn", True)
+    refresh = case.get("refresh_ms", 0.0)
 
     sys_ = _build_system(n_per, n_regions, seed)
     rng = np.random.default_rng(seed + 1)
     region = rng.integers(0, n_regions, n_users)
     base = np.asarray(REGIONS)[region % len(REGIONS)]
     locs = base + rng.uniform(-0.3, 0.3, (n_users, 2))
+    kw = {"refresh_period_ms": refresh} if refresh else {}
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, transport="fluid",
         probe_period_ms=PROBE_MS, frame_interval_ms=FRAME_MS,
         selection_backend="geo_topk", tick="device", mesh=mesh,
-        record_samples=False)
+        record_samples=False, **kw)
     sys_.sim.at(0.0, pool.start)
     churn = None
     if churn_on:
@@ -137,13 +139,21 @@ def _child_case(case: dict):
         for k, v in sorted(pool.phase_ms.items()))
     leaves = sum(1 for e in churn.events if e["kind"] == "leave") \
         if churn else 0
+    dirty = ""
+    if pool.dirty_counts is not None:
+        fracs = [c / n_users for c in pool.dirty_counts]
+        mean = sum(fracs) / max(len(fracs), 1)
+        dirty = (f";dirty_frac_mean={mean:.4f};dirty_frac_ticks=" +
+                 "|".join(f"{f:.4f}" for f in fracs))
     kind = f"mesh_d{mesh}" if mesh else "single_d1"
+    if refresh:
+        kind += "_inc"
     tag = f"mesh_scale/u{n_users}_n{n_per * n_regions}/{kind}"
     derived = (f"ticks={ticks};reqs={pool.requests_sent};"
                f"failovers={pool.failovers};node_failures={leaves};"
                f"mean_frame_ms={pool.mean_latency():.1f};"
                f"host_devices={N_DEVICES};physical_cores={os.cpu_count()};"
-               f"{phases}")
+               f"{phases}{dirty}")
     return [tag, per_tick, derived]
 
 
@@ -190,6 +200,10 @@ def run(smoke: bool = False):
                  mesh=None),
             dict(users=1_000_000, nodes_per_region=2_500, regions=4,
                  mesh=4),
+            # incremental candidate refresh at the acceptance shape:
+            # same churn, staleness deadline at 20 probe periods
+            dict(users=1_000_000, nodes_per_region=2_500, regions=4,
+                 mesh=4, refresh_ms=20 * PROBE_MS),
         ]
     rows = []
     for case in cases:
@@ -211,7 +225,7 @@ def derive(us_by_name):
         raw = t1 / tm
         rows.append((
             "mesh_scale/u1000000_n10000/weak_scaling_4dev",
-            float("nan"),
+            None,
             f"normalized_speedup={N_DEVICES * raw:.2f}x;"
             f"raw_per_tick_ratio={raw:.2f}x;"
             f"host_devices={N_DEVICES};physical_cores={os.cpu_count()};"
@@ -234,4 +248,4 @@ if __name__ == "__main__":
         for name, ms, derived in rows:
             print(f"{name},{ms:.1f},{derived}")
         for name, ms, derived in derive({n: m * 1e3 for n, m, _ in rows}):
-            print(f"{name},{ms:.1f},{derived}")
+            print(f"{name},{'' if ms is None else f'{ms:.1f}'},{derived}")

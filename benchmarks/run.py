@@ -34,6 +34,21 @@ MODULES = [
 ]
 
 
+def _us(ms):
+    """ms -> us; annotation-only rows (``None`` or NaN timing) become
+    ``None`` so the JSON artifact stays strict (``null``, never the
+    non-standard ``NaN`` literal that breaks spec-compliant parsers)."""
+    return ms * 1e3 if ms is not None and ms == ms else None
+
+
+def _fmt(us):
+    return "" if us is None else f"{us:.1f}"
+
+
+def _artifacts_dir() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -48,19 +63,22 @@ def main() -> None:
         t0 = time.time()
         rows = mod.run()
         for name, ms, derived in rows:
-            us = ms * 1e3 if ms == ms else float("nan")   # ms -> us
-            print(f"{name},{us:.1f},{derived}")
+            us = _us(ms)                                  # ms -> us
+            print(f"{name},{_fmt(us)},{derived}")
             all_rows.append({"name": name, "us_per_call": us,
                              "derived": derived})
         print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
-    out = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+    out = _artifacts_dir()
     out.mkdir(parents=True, exist_ok=True)
     results = out / "results.json"
     if args.only and results.exists():
         # partial run: refresh the selected rows in place instead of
         # clobbering every other benchmark's recorded results
         prev = json.loads(results.read_text())
+        for r in prev:                       # heal pre-fix NaN artifacts
+            if r["us_per_call"] != r["us_per_call"]:
+                r["us_per_call"] = None
         fresh = {r["name"] for r in all_rows}
         all_rows = [r for r in prev if r["name"] not in fresh
                     and not r.get("derived_row")] + all_rows
@@ -74,15 +92,16 @@ def main() -> None:
         if fn is None:
             continue
         for name, ms, derived in fn(us_by_name):
-            us = ms * 1e3 if ms == ms else float("nan")
-            print(f"{name},{us:.1f},{derived}")
+            us = _us(ms)
+            print(f"{name},{_fmt(us)},{derived}")
             all_rows.append({"name": name, "us_per_call": us,
                              "derived": derived, "derived_row": True})
-    results.write_text(json.dumps(all_rows, indent=1))
+    results.write_text(json.dumps(all_rows, indent=1, allow_nan=False))
     with open(out / "results.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         for r in all_rows:
-            f.write(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}\n")
+            f.write(f"{r['name']},{_fmt(r['us_per_call'])},"
+                    f"{r['derived']}\n")
 
 
 if __name__ == "__main__":

@@ -205,6 +205,9 @@ class BeaconSet:
         # node -> global monotonic registration sequence (LWW clock)
         self.hb_seq: Dict[str, int] = {}
         self._heal_pending: set = set()
+        # last-pushed visibility map (node -> (serving, group)) — diffed
+        # in ``_push`` to attribute refresh-epoch marks to regions
+        self._last_serving: Optional[Dict[str, tuple]] = None
 
     # ---------------------------------------------------------- regions
 
@@ -702,8 +705,26 @@ class BeaconSet:
         return out
 
     def _push(self):
+        # attribute node-visibility changes to regions for the engine's
+        # incremental-refresh epochs: any node whose serving entry moved
+        # (registered, lost, re-registered, re-homed) dirties its home
+        # region and both serving regions — exactly the shards whose
+        # schedulable set the change can touch
+        vis = {n: (s, self.group_of(s) if s is not None else -1)
+               for n, s in self.serving.items()}
+        regions = set()
+        if self._last_serving is not None:
+            for n in vis.keys() | self._last_serving.keys():
+                if vis.get(n) != self._last_serving.get(n):
+                    for r in (self.home.get(n),
+                              vis.get(n, (None,))[0],
+                              self._last_serving.get(n, (None,))[0]):
+                        if r is not None:
+                            regions.add(r)
+        self._last_serving = vis
         self.am.engine.set_beacon_routing(self.ownership(),
-                                          self.hidden_nodes())
+                                          self.hidden_nodes(),
+                                          dirty_regions=sorted(regions))
 
     def convergence_ms(self, fail_t: float) -> float:
         """Selection-unavailability window of the failure at ``fail_t``:

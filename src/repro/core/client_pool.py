@@ -326,6 +326,113 @@ def default_rtt_model(user_lat, user_lon, node_lat, node_lon, node_cloud):
 
 
 # ---------------------------------------------------------------------------
+# Incremental refresh
+# ---------------------------------------------------------------------------
+
+class _RefreshTracker:
+    """Host-side dirty-set bookkeeping for incremental candidate refresh
+    (``ClientPool(refresh_period_ms=...)``).
+
+    A user is rescored only when it is *dirty*:
+
+    * **region epoch** — its serving shard's node set changed (churn
+      recovery, autoscale spawn, hidden/ownership/locality change):
+      diffed from ``SelectionEngine.region_epoch`` / ``epoch_all``;
+    * **route change** — Beacon handoff / re-home moved the user to a
+      different serving shard (``owner_version`` diff of routed codes);
+    * **pool event** — its candidate set or active replica was touched
+      by a connection break (``mark``), or it lost every candidate;
+    * **staleness** — its per-user refresh deadline fired.  Deadlines
+      are staggered over ``STAGGER`` deterministic phase lanes so a
+      population never rescores in one burst, and re-armed only when
+      the user is *actually* refreshed — a deadline deferred by a
+      discovery window (masks compose by AND) fires exactly once.
+
+    One tracker instance drives every tick path (numpy, geo_topk
+    kernel, fused device tick, mesh): the mask is computed host-side
+    from the same inputs, so the paths stay decision-identical.
+    """
+
+    STAGGER = 64
+
+    def __init__(self, pool: "ClientPool", period_ms: float):
+        self.pool = pool
+        self.period = float(period_ms)
+        u = pool.n_users
+        self.marks = np.zeros(u, bool)
+        lane = (np.arange(u) % self.STAGGER) + 1
+        self.next_refresh = pool.sim.now \
+            + self.period * lane / float(self.STAGGER)
+        self._seen_all: Optional[int] = None
+        self._seen_region: Dict[int, int] = {}
+        self._routes: Optional[np.ndarray] = None
+        self._route_owner_version = -1
+        # stats for benchmarks: per-tick dirty counts (post-gating) and
+        # device sparse-capacity overflows (fell back to the dense scan)
+        self.dirty_counts: List[int] = []
+        self.fallbacks = 0
+
+    def mark(self, users) -> None:
+        self.marks[users] = True
+
+    def note_refreshed(self, refreshed, now: float) -> None:
+        """``refreshed`` users were rescored this tick: clear their event
+        marks and re-arm their staleness deadlines."""
+        self.marks[refreshed] = False
+        self.next_refresh[refreshed] = now + self.period
+
+    def dirty_mask(self, now: float) -> np.ndarray:
+        """(U,) bool — users whose candidates may be stale.  Forces the
+        engine's lazy view/shard rebuild *before* reading epochs, so the
+        host and device paths observe identical marks no matter which
+        rebuilt last."""
+        pool = self.pool
+        eng = pool.am.engine
+        pool._view()
+        sv = eng.shard_view(pool.service_id,
+                            pool.am.tasks.get(pool.service_id, ())) \
+            if eng.shard_precision is not None else None
+        dirty = self.marks.copy()
+        if sv is not None and \
+                eng.owner_version != self._route_owner_version:
+            routes = sv.route(pool._user_codes())
+            if self._routes is not None:
+                dirty |= routes != self._routes
+            self._routes = routes
+            self._route_owner_version = eng.owner_version
+        engine_dirty = self._engine_dirty(eng)
+        if engine_dirty is True:
+            dirty[:] = True
+        elif engine_dirty is not False:
+            dirty |= engine_dirty
+        dirty |= self.next_refresh <= now
+        return dirty
+
+    def _engine_dirty(self, eng):
+        """Epoch diff vs the last-seen snapshot: False / True (all) / a
+        (U,) bool mask of users routed to a bumped region."""
+        if self._seen_all is None:
+            # first tick: adopt the epochs that produced the initial
+            # selection — nothing is stale yet
+            self._seen_all = eng.epoch_all
+            self._seen_region = dict(eng.region_epoch)
+            return False
+        if eng.epoch_all != self._seen_all:
+            self._seen_all = eng.epoch_all
+            self._seen_region = dict(eng.region_epoch)
+            return True
+        changed = [c for c, e in eng.region_epoch.items()
+                   if self._seen_region.get(c, 0) != e]
+        if not changed:
+            return False
+        self._seen_region = dict(eng.region_epoch)
+        if self._routes is None:
+            return True
+        return np.isin(self._routes,
+                       np.asarray(changed, self._routes.dtype))
+
+
+# ---------------------------------------------------------------------------
 # ClientPool
 # ---------------------------------------------------------------------------
 
@@ -355,9 +462,23 @@ class ClientPool:
                  record_samples: bool = True,
                  shard_border_cap: Optional[int] = None,
                  ema_slots: Optional[int] = None,
-                 mesh=None):
+                 mesh=None,
+                 refresh_period_ms: Optional[float] = None,
+                 refresh_cap: Optional[int] = None):
         if transport not in ("events", "fluid"):
             raise ValueError(f"unknown transport {transport!r}")
+        if refresh_period_ms is not None:
+            if transport != "fluid":
+                raise ValueError(
+                    "refresh_period_ms=... (incremental refresh) needs "
+                    "transport='fluid' — the events transport derives its "
+                    "probe sends from the refresh plan, so skipping a "
+                    "refresh would skip probing too")
+            if refresh_period_ms <= 0:
+                raise ValueError("refresh_period_ms must be > 0")
+        elif refresh_cap is not None:
+            raise ValueError("refresh_cap sizes the device tick's sparse "
+                             "refresh buffer — pass refresh_period_ms too")
         if mesh is not None and tick != "device":
             raise ValueError("mesh=... shards the fused device tick "
                              "across devices — pass tick='device'")
@@ -423,6 +544,13 @@ class ClientPool:
         # jax.sharding.Mesh with one axis, or an int device count
         # (resolved against jax.devices() at start)
         self.mesh = mesh
+        # incremental candidate refresh: rescore only dirty users, at
+        # most every refresh_period_ms per user (None = every tick, the
+        # bit-for-bit historical semantics); refresh_cap bounds the device
+        # tick's sparse gather (None = driver default, U/8)
+        self.refresh_period = refresh_period_ms
+        self.refresh_cap = refresh_cap
+        self._rt: Optional[_RefreshTracker] = None
         # client-side Beacon discovery (engine.discovery_ms): bootstrap
         # pays one window before the first selection; a handoff charges
         # per-user windows that gate candidate refreshes only
@@ -521,6 +649,8 @@ class ClientPool:
             return
         self.running[:] = True
         self.am.user_join(self.service_id, self)
+        if self.refresh_period is not None:
+            self._rt = _RefreshTracker(self, self.refresh_period)
         sel = np.arange(self.n_users)
         if self.transport == "events":
             plan = self._refresh(sel, initial=True)
@@ -903,6 +1033,17 @@ class ClientPool:
         nix = self._node_of.get(node_id)
         if nix is None:
             return
+        if self._rt is not None:
+            # dirty-mark every user whose candidate set or active replica
+            # touched the dead node.  Computed on the host mirrors on
+            # every path (the device mirrors are post-last-tick state), so
+            # the mark set is identical host == device — a superset of the
+            # fused program's own death hit, never a miss
+            safe_c = np.where(self.cand_task >= 0, self.cand_task, 0)
+            c_hit = (self.cand_task >= 0) & (self.task_node[safe_c] == nix)
+            safe_a = np.where(self.active >= 0, self.active, 0)
+            a_hit = (self.active >= 0) & (self.task_node[safe_a] == nix)
+            self._rt.mark(self.running & (c_hit.any(axis=1) | a_hit))
         if self._dev is not None:
             # device tick: queue the break; the fused program replays the
             # queue in arrival order at the next tick (or flush), which
@@ -1044,11 +1185,25 @@ class ClientPool:
         sel = np.nonzero(self.running & self.ticking)[0]
         if sel.size:
             if not first:
+                if self._rt is not None:
+                    t0 = time.perf_counter()
+                    dirty = self._rt.dirty_mask(now)
+                    self.phase_add("refresh_track", t0)
+                else:
+                    dirty = None
                 t0 = time.perf_counter()
                 r_ok = self._discovery_refresh_mask()
                 r_sel = sel if r_ok is None else sel[r_ok[sel]]
+                if dirty is not None:
+                    # incremental: refresh only the dirty subset (the
+                    # discovery gate above composes by AND — a deferred
+                    # user stays marked and refreshes when it opens)
+                    r_sel = r_sel[dirty[r_sel]]
+                    self._rt.dirty_counts.append(int(r_sel.size))
                 if r_sel.size:
                     self._refresh(r_sel)
+                    if dirty is not None:
+                        self._rt.note_refreshed(r_sel, now)
                 self.phase_add("selection", t0)
             t0 = time.perf_counter()
             self._switch_step(sel)
@@ -1157,6 +1312,15 @@ class ClientPool:
         sel = np.asarray(users, np.int64)
         self._refresh(sel, initial=True)
 
+    def _user_codes(self) -> np.ndarray:
+        """Full-precision Morton codes of the user locations (cached) —
+        shared by the discovery gate and the refresh tracker's routing."""
+        if self._disc_codes is None:
+            from repro.core.selection import CODE_PRECISION
+            self._disc_codes = geohash.encode_batch(
+                self.locs[:, 0], self.locs[:, 1], CODE_PRECISION)
+        return self._disc_codes
+
     def _discovery_refresh_mask(self) -> Optional[np.ndarray]:
         """(U,) bool gate for the candidate refresh, or None when Beacon
         discovery is free (``engine.discovery_ms == 0``).  A user whose
@@ -1173,11 +1337,7 @@ class ClientPool:
             view = eng.shard_view(self.service_id,
                                   self.am.tasks.get(self.service_id, ()))
             if view is not None:
-                if self._disc_codes is None:
-                    from repro.core.selection import CODE_PRECISION
-                    self._disc_codes = geohash.encode_batch(
-                        self.locs[:, 0], self.locs[:, 1], CODE_PRECISION)
-                route = view.route(self._disc_codes)
+                route = view.route(self._user_codes())
                 if self._disc_route is not None:
                     changed = route != self._disc_route
                     if changed.any():
@@ -1225,6 +1385,12 @@ class ClientPool:
         if not ok.any():
             return float("nan")
         return float(bits[act[ok]].mean())
+
+    @property
+    def dirty_counts(self) -> Optional[List[int]]:
+        """Per-tick refreshed-user counts under incremental refresh
+        (``None`` when ``refresh_period_ms`` is unset)."""
+        return self._rt.dirty_counts if self._rt is not None else None
 
     def active_node(self, u: int) -> Optional[str]:
         t = int(self.active[u])

@@ -150,6 +150,8 @@ class TickOuts(NamedTuple):
     frame_ok: jnp.ndarray       # (U,) bool frames to send this window
     failovers: jnp.ndarray      # () i32 running total
     border_overflow: jnp.ndarray  # () bool sharded border band > capacity
+    refresh_fallback: jnp.ndarray  # () bool dirty set > refresh_cap (the
+    #                               tick fell back to the dense scan)
 
 
 # ---------------------------------------------------------------------------
@@ -344,8 +346,71 @@ def _sharded_candidates(static, free, sched, need, k, p_min, border_cap,
     return new_cand, b_count > border_cap
 
 
+def _shard_refresh_caps(static, refresh_cap: int) -> tuple:
+    """Static per-shard sparse-gather capacities: ``refresh_cap`` rows
+    per shard, clamped to the shard's population."""
+    return tuple(min(int(sh.user_ix.shape[0]), refresh_cap)
+                 for sh in static.shards)
+
+
+def _sharded_candidates_sparse(static, free, sched, need, k, p_min,
+                               border_cap, refresh_cap, dirty, cand):
+    """Sparse variant of ``_sharded_candidates``: gather only each
+    shard's *dirty* rows (``jnp.nonzero(size=cap)`` — the border-band
+    idiom, jit-stable shapes under any churn) and scatter their top-k
+    straight back into the resident candidate matrix.  Callers must
+    guarantee no shard's dirty count exceeds its capacity (the tick
+    latches overflow OUTSIDE and takes the dense branch instead — a
+    dropped dirty user would silently keep wrong candidates).  Returns
+    ``(cand, border_overflow)`` with the refresh already applied; rows
+    outside ``dirty`` are untouched bit-for-bit."""
+    u = static.user_lat.shape[0]
+    sat_all = jnp.zeros(u, bool)
+    caps = _shard_refresh_caps(static, refresh_cap)
+    for sh, cap_s in zip(static.shards, caps):
+        us = sh.user_ix.shape[0]
+        l_ix, = jnp.nonzero(dirty[sh.user_ix], size=cap_s, fill_value=us)
+        g_ix = sh.user_ix[jnp.clip(l_ix, 0, us - 1)]
+        # pad rows (l_ix == us) must drop at the scatter, not clobber the
+        # shard's last user — send them out of range
+        g_put = jnp.where(l_ix < us, g_ix, u)
+        safe_t = jnp.clip(sh.task_ix, 0)
+        t_ok = (sh.task_ix >= 0).astype(jnp.float32)
+        s_scores, sat = score_matrix_restricted(
+            static.user_lat[g_ix], static.user_lon[g_ix],
+            static.user_net[g_ix], static.user_code20[g_ix],
+            static.task_lat[safe_t], static.task_lon[safe_t],
+            free[safe_t] * t_ok, static.task_aff[:, safe_t],
+            static.task_code20[safe_t], sched[safe_t] * t_ok, need, p_min)
+        kk = min(k, sh.task_ix.shape[0])
+        top_s, top_i = jax.lax.top_k(s_scores, kk)
+        g = sh.task_ix[top_i]
+        cand_s = jnp.where(top_s > -1e29, g.astype(jnp.int32), -1)
+        if kk < k:
+            cand_s = jnp.pad(cand_s, ((0, 0), (0, k - kk)),
+                             constant_values=-1)
+        cand = cand.at[g_put].set(cand_s)
+        sat_all = sat_all.at[g_put].set(sat)
+    # dirty users the in-shard widening could not satisfy (plus dirty
+    # users homed to no shard at all) ride the standard border pass
+    border = dirty & ~sat_all
+    b_count = border.sum()
+    b_ix, = jnp.nonzero(border, size=border_cap, fill_value=u)
+    safe_b = jnp.clip(b_ix, 0, u - 1)
+    b_scores = score_matrix(
+        static.user_lat[safe_b], static.user_lon[safe_b],
+        static.user_net[safe_b], static.user_code20[safe_b],
+        static.task_lat, static.task_lon, free, static.task_aff,
+        static.task_code20, sched, need)
+    top_s, top_i = jax.lax.top_k(b_scores, k)
+    cand_b = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+    cand = cand.at[b_ix].set(cand_b)
+    return cand, b_count > border_cap
+
+
 def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
-               alpha, margin, refresh_ok, p_min, border_cap):
+               alpha, margin, refresh_ok, dirty, p_min, border_cap,
+               refresh_cap):
     COMPILE_COUNTS["tick"] += 1
     u, k = state.cand.shape
     rows = jnp.arange(u)
@@ -368,19 +433,81 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
     #    re-discovery window keep (and keep probing) their stale
     #    candidates, exactly like the host tick's filtered ``_refresh``
     tick_mask = state.running & state.ticking
-    refresh_mask = tick_mask & refresh_ok
-    if static.shards is None:
-        scores = score_matrix(
-            static.user_lat, static.user_lon, static.user_net,
-            static.user_code20, static.task_lat, static.task_lon, free,
-            static.task_aff, static.task_code20, sched, need)
-        top_s, top_i = jax.lax.top_k(scores, k)
-        new_cand = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
-        border_overflow = jnp.zeros((), bool)
+    if refresh_cap == 0:
+        # every-tick refresh (the historical semantics, bit-for-bit)
+        refresh_mask = tick_mask & refresh_ok
+        if static.shards is None:
+            scores = score_matrix(
+                static.user_lat, static.user_lon, static.user_net,
+                static.user_code20, static.task_lat, static.task_lon, free,
+                static.task_aff, static.task_code20, sched, need)
+            top_s, top_i = jax.lax.top_k(scores, k)
+            new_cand = jnp.where(top_s > -1e29,
+                                 top_i.astype(jnp.int32), -1)
+            border_overflow = jnp.zeros((), bool)
+        else:
+            new_cand, border_overflow = _sharded_candidates(
+                static, free, sched, need, k, p_min, border_cap,
+                refresh_mask)
+        cand = jnp.where(refresh_mask[:, None], new_cand, cand)
+        refresh_fallback = jnp.zeros((), bool)
     else:
-        new_cand, border_overflow = _sharded_candidates(
-            static, free, sched, need, k, p_min, border_cap, refresh_mask)
-    cand = jnp.where(refresh_mask[:, None], new_cand, cand)
+        # incremental refresh: rescore only the dirty rows (host-supplied
+        # marks, plus users who just lost every candidate), gathered into
+        # a fixed-capacity buffer.  If the dirty set outgrows the buffer
+        # the whole tick falls back to the dense scan *applied to exactly
+        # the same rows* — identical decisions, latched as
+        # ``refresh_fallback`` so the driver can account for it
+        dirty_full = (dirty | reinit) & tick_mask & refresh_ok
+        if static.shards is None:
+            over = dirty_full.sum() > refresh_cap
+
+            def dense_fn(cand_in):
+                scores = score_matrix(
+                    static.user_lat, static.user_lon, static.user_net,
+                    static.user_code20, static.task_lat, static.task_lon,
+                    free, static.task_aff, static.task_code20, sched, need)
+                top_s, top_i = jax.lax.top_k(scores, k)
+                nc = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+                return (jnp.where(dirty_full[:, None], nc, cand_in),
+                        jnp.zeros((), bool))
+
+            def sparse_fn(cand_in):
+                d_ix, = jnp.nonzero(dirty_full, size=refresh_cap,
+                                    fill_value=u)
+                safe_d = jnp.clip(d_ix, 0, u - 1)
+                scores = score_matrix(
+                    static.user_lat[safe_d], static.user_lon[safe_d],
+                    static.user_net[safe_d], static.user_code20[safe_d],
+                    static.task_lat, static.task_lon, free,
+                    static.task_aff, static.task_code20, sched, need)
+                top_s, top_i = jax.lax.top_k(scores, k)
+                nc = jnp.where(top_s > -1e29, top_i.astype(jnp.int32), -1)
+                # fill rows (d_ix == u) drop at the scatter
+                return cand_in.at[d_ix].set(nc), jnp.zeros((), bool)
+
+        else:
+            caps = _shard_refresh_caps(static, refresh_cap)
+            counts = [dirty_full[sh.user_ix].sum()
+                      for sh in static.shards]
+            over = jnp.zeros((), bool)
+            for c, cap_s in zip(counts, caps):
+                over = over | (c > cap_s)
+
+            def dense_fn(cand_in):
+                nc, b_over = _sharded_candidates(
+                    static, free, sched, need, k, p_min, border_cap,
+                    dirty_full)
+                return jnp.where(dirty_full[:, None], nc, cand_in), b_over
+
+            def sparse_fn(cand_in):
+                return _sharded_candidates_sparse(
+                    static, free, sched, need, k, p_min, border_cap,
+                    refresh_cap, dirty_full, cand_in)
+
+        cand, border_overflow = jax.lax.cond(over, dense_fn, sparse_fn,
+                                             cand)
+        refresh_fallback = over
 
     # users who lost every candidate re-enter initial selection: active
     # is the best-base-RTT candidate (Client start semantics)
@@ -421,7 +548,8 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
     outs = TickOuts(cand=cand, active=active, pending=pending,
                     confirm=confirm, from_node=act_node,
                     probe_ok=probe_ok, frame_ok=frame_ok,
-                    failovers=failovers, border_overflow=border_overflow)
+                    failovers=failovers, border_overflow=border_overflow,
+                    refresh_fallback=refresh_fallback)
     return new_state, outs
 
 
@@ -482,7 +610,8 @@ def _flush_impl(state, static, deaths, n_deaths, alpha):
 
 
 _fused_tick = jax.jit(_tick_impl, donate_argnums=_DONATE,
-                      static_argnames=("p_min", "border_cap"))
+                      static_argnames=("p_min", "border_cap",
+                                       "refresh_cap"))
 _fused_traffic = jax.jit(_traffic_impl, donate_argnums=_DONATE)
 _fused_flush = jax.jit(_flush_impl, donate_argnums=_DONATE)
 
@@ -498,7 +627,7 @@ class MeshPrograms(NamedTuple):
 
 
 def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
-                        sharded: bool) -> MeshPrograms:
+                        sharded: bool, refresh_cap: int = 0) -> MeshPrograms:
     """Build the shard_map-wrapped tick/traffic/flush programs for one
     mesh layout.  Each device runs the *same* ``_tick_impl`` body over
     its own (Ud, ...) user block — the block's shards collapse into one
@@ -523,7 +652,7 @@ def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
         shards=None)
 
     def tick_body(state, static, local_task, free, sched, alive, need,
-                  deaths, n_deaths, alpha, margin, refresh_ok):
+                  deaths, n_deaths, alpha, margin, refresh_ok, dirty):
         COMPILE_COUNTS["mesh_tick"] += 1
         if sharded:
             ud = state.cand.shape[0]
@@ -534,11 +663,13 @@ def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
             st = static
         new_state, outs = _tick_impl(
             state, st, free, sched, alive, need, deaths, n_deaths,
-            alpha, margin, refresh_ok, p_min, border_cap)
+            alpha, margin, refresh_ok, dirty, p_min, border_cap,
+            refresh_cap)
         # lift per-device () scalars to (1,) so the global outputs carry
         # one element per device ((D,) — reduced on the host)
         return new_state, outs._replace(
-            border_overflow=outs.border_overflow.reshape(1))
+            border_overflow=outs.border_overflow.reshape(1),
+            refresh_fallback=outs.refresh_fallback.reshape(1))
 
     def traffic_body(state, static, work0, net_rate, probe_ok, frame_ok,
                      e1p, e2p, e3p, e1f, e2f, e3f, scale, frame_interval):
@@ -554,7 +685,7 @@ def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
     tick = jax.jit(shard_map(
         tick_body, mesh=mesh,
         in_specs=(ps_u, static_spec, ps_u, ps_r, ps_r, ps_r, ps_r,
-                  ps_r, ps_r, ps_r, ps_r, ps_u),
+                  ps_r, ps_r, ps_r, ps_r, ps_u, ps_u),
         out_specs=ps_u, check_rep=False), donate_argnums=_DONATE)
     traffic = jax.jit(shard_map(
         traffic_body, mesh=mesh,
@@ -601,6 +732,14 @@ class FusedTickDriver:
         self.p_min = 0                  # 0 = unsharded scoring
         self.border_cap = 0
         self._all_refresh = None        # cached all-True refresh mask
+        self._no_dirty = None           # cached all-False dirty input
+        # incremental refresh: sparse-gather capacity (0 = every-tick
+        # dense refresh, the bit-for-bit historical program)
+        self.refresh_cap = 0
+        if pool.refresh_period is not None:
+            self.refresh_cap = pool.refresh_cap \
+                if pool.refresh_cap is not None \
+                else self._default_border_cap()
 
     def _default_border_cap(self) -> int:
         """Fixed border-band capacity: the cross-shard pass costs
@@ -754,20 +893,52 @@ class FusedTickDriver:
             m = self._all_refresh
         return m
 
+    def _dirty_input(self):
+        """(U,) bool dirty rows for the tick program (pool order), or the
+        cached all-False array when refresh is every-tick."""
+        pool = self.pool
+        if pool._rt is None:
+            if self._no_dirty is None:
+                self._no_dirty = np.zeros(pool.n_users, bool)
+            return self._no_dirty
+        t0 = time.perf_counter()
+        dirty = pool._rt.dirty_mask(pool.sim.now)
+        pool.phase_add("refresh_track", t0)
+        return dirty
+
+    def _note_refreshed(self, dirty, r_ok, outs):
+        """Mirror the program's refresh set back into the tracker: clear
+        marks, re-arm deadlines, account dirty fraction and fallbacks.
+        (In-program reinit rows refresh too but have no host mark — the
+        tracker only ever over-refreshes, never misses.)"""
+        pool = self.pool
+        rt = pool._rt
+        if rt is None:
+            return
+        refreshed = dirty & pool.running & pool.ticking & r_ok
+        if bool(np.asarray(outs.refresh_fallback).any()):
+            rt.fallbacks += 1
+        rt.note_refreshed(refreshed, pool.sim.now)
+        rt.dirty_counts.append(int(refreshed.sum()))
+
     def _run_tick(self, free, sched, alive, need, deaths, n_deaths):
         """Run the tick program; returns per-user decision arrays in the
         pool's (original) user order."""
         pool = self.pool
+        dirty = self._dirty_input()
+        r_ok = self._refresh_mask()
         self.state, outs = _fused_tick(
             self.state, self.static, free, sched, alive, need, deaths,
-            n_deaths, pool.alpha, pool.switch_margin, self._refresh_mask(),
-            p_min=self.p_min, border_cap=self.border_cap)
+            n_deaths, pool.alpha, pool.switch_margin, r_ok, dirty,
+            p_min=self.p_min, border_cap=self.border_cap,
+            refresh_cap=self.refresh_cap)
         self._stash_dirty = False       # tick folded the previous window
         if bool(np.asarray(outs.border_overflow).any()):
             raise RuntimeError(
                 f"fused tick: border band exceeded {self.border_cap} "
                 "users — restart the pool with a larger shard_border_cap "
                 "(or a coarser shard_precision)")
+        self._note_refreshed(dirty, r_ok, outs)
         return outs
 
     def tick(self):
@@ -1014,8 +1185,11 @@ class MeshTickDriver(FusedTickDriver):
 
     def _default_border_cap(self) -> int:
         """Per-device border capacity (the border pass is local — each
-        device escalates only its own block's unsatisfied users)."""
-        ud = max(self._ud, 1)
+        device escalates only its own block's unsatisfied users).  Also
+        the per-device default for ``refresh_cap`` — before placement
+        (``_ud`` unset) it returns a placeholder that
+        ``_compute_placement`` re-derives."""
+        ud = max(getattr(self, "_ud", 0), 1)
         return min(ud, max(128, -(-ud // 8 // 128) * 128))
 
     def _compute_placement(self):
@@ -1093,6 +1267,11 @@ class MeshTickDriver(FusedTickDriver):
         self.border_cap = pool.shard_border_cap \
             if pool.shard_border_cap is not None \
             else self._default_border_cap()
+        if pool.refresh_period is not None and pool.refresh_cap is None:
+            # per-device sparse capacity needs _ud — re-derive now that
+            # placement fixed it (monotonic, so the program cache key
+            # changes at most when a block grows)
+            self.refresh_cap = self._default_border_cap()
         return lt
 
     def _to_dev(self, arr, fill=0):
@@ -1200,29 +1379,33 @@ class MeshTickDriver(FusedTickDriver):
     # ------------------------------------------------------------- tick
 
     def _programs_for(self) -> MeshPrograms:
-        key = (self.p_min, self.border_cap, self._sharded)
+        key = (self.p_min, self.border_cap, self._sharded,
+               self.refresh_cap)
         prog = self._programs.get(key)
         if prog is None:
             prog = _make_mesh_programs(self.mesh, self.users_axis,
                                        self.p_min, self.border_cap,
-                                       self._sharded)
+                                       self._sharded, self.refresh_cap)
             self._programs[key] = prog
         return prog
 
     def _run_tick(self, free, sched, alive, need, deaths, n_deaths):
         pool = self.pool
         prog = self._programs_for()
-        r_ok = self._to_dev(self._refresh_mask(), False)
+        dirty = self._dirty_input()
+        r_ok = self._refresh_mask()
         self.state, outs = prog.tick(
             self.state, self.static, self._local_task, free, sched,
             alive, need, deaths, n_deaths, pool.alpha,
-            pool.switch_margin, r_ok)
+            pool.switch_margin, self._to_dev(r_ok, False),
+            self._to_dev(dirty, False))
         self._stash_dirty = False
         if bool(np.asarray(outs.border_overflow).any()):
             raise RuntimeError(
                 f"fused tick: a device's border band exceeded "
                 f"{self.border_cap} users — restart the pool with a "
                 "larger shard_border_cap (or a coarser shard_precision)")
+        self._note_refreshed(dirty, r_ok, outs)
         return outs
 
     def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):

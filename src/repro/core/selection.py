@@ -441,18 +441,29 @@ class _ShardSet:
         shift = 5 * (CODE_PRECISION - precision)
         shard_code = self._apply_owner(parent.codes >> shift)
         prev_by_code = {}
-        if prev is not None and prev.precision == precision:
+        diffable = prev is not None and prev.precision == precision
+        if diffable:
             prev_by_code = {s.code: s for s in prev.shards}
         self.shards: List[_Shard] = []
+        # refresh-epoch attribution: serving codes whose membership
+        # actually changed across this rebuild (failed adopt, new shard,
+        # vanished shard); None when there is no predecessor to diff
+        # against (initial build / teardown) — the engine marks globally
+        changed: List[int] = []
         for code in np.unique(shard_code):
             ix = np.nonzero(shard_code == code)[0]
             sh = _Shard(code, ix, [parent.tasks[i] for i in ix])
-            old = prev_by_code.get(int(code))
+            old = prev_by_code.pop(int(code), None)
             if old is not None and len(old.ix) == len(ix) \
                     and old.arrays.fingerprint == sh.arrays.fingerprint \
                     and np.array_equal(old.ix, ix):
                 sh.adopt(old)
+            else:
+                changed.append(int(code))
             self.shards.append(sh)
+        changed.extend(prev_by_code)          # vanished shards
+        self.changed_codes: Optional[List[int]] = changed if diffable \
+            else None
 
     def _apply_owner(self, codes: np.ndarray) -> np.ndarray:
         """Map prefix codes through the Beacon ownership table (identity
@@ -528,6 +539,34 @@ class SelectionEngine:
         # folded into the free-fraction vector so every tick path scores
         # it identically (no jit-shape or cache impact)
         self.data_locality: Dict[str, Tuple[tuple, float]] = {}
+        # incremental-refresh epoch channel: a monotonic counter per
+        # serving-region prefix code, bumped whenever that region's
+        # schedulable node set (membership, ownership, visibility) may
+        # have changed, plus a global counter for events that cannot be
+        # attributed to a region (locality change, unsharded rebuilds,
+        # full invalidation).  ``ClientPool._RefreshTracker`` diffs these
+        # against its last-seen snapshot to decide which users to rescore.
+        self.region_epoch: Dict[int, int] = {}
+        self.epoch_all = 0
+
+    # ------------------------------------------------- region dirty epochs
+
+    def mark_all_dirty(self) -> None:
+        """Bump the global refresh epoch: every user's candidates may be
+        stale (events with no region attribution)."""
+        self.epoch_all += 1
+
+    def mark_regions_dirty(self, codes) -> None:
+        """Bump the refresh epoch of the given *home*-region prefix codes
+        (mapped through Beacon ownership, so a dead region's mark lands on
+        the merged serving shard its users actually route to).  Serving
+        codes are fixed points of the map, so callers may pass either."""
+        owner = self._owner
+        for c in codes:
+            c = int(c)
+            if owner:
+                c = owner.get(c, c)
+            self.region_epoch[c] = self.region_epoch.get(c, 0) + 1
 
     # ------------------------------------------------------------- caching
 
@@ -539,14 +578,20 @@ class SelectionEngine:
         Algorithm-1 score, so failover and handoff prefer nodes that can
         reach the service's store in situ (paper §3.4).  Pass an empty /
         None ``replica_locs`` to clear the preference."""
+        prev = self.data_locality.get(service_id)
         if not replica_locs:
             self.data_locality.pop(service_id, None)
         else:
             self.data_locality[service_id] = (
                 tuple(tuple(map(float, p)) for p in replica_locs),
                 float(weight))
+        if self.data_locality.get(service_id) != prev:
+            # the preference shifts scores everywhere within radius of any
+            # replica — no region attribution, mark globally
+            self.mark_all_dirty()
 
-    def set_beacon_routing(self, owner, hidden) -> None:
+    def set_beacon_routing(self, owner, hidden,
+                           dirty_regions=None) -> None:
         """Control-plane routing update from a ``BeaconSet``.
 
         ``owner`` maps home region codes (Morton prefixes at
@@ -563,7 +608,17 @@ class SelectionEngine:
         if owner != self._owner:
             self._owner = owner
             self.owner_version += 1
-        self.hidden_nodes = frozenset(hidden)
+        hidden = frozenset(hidden)
+        hidden_changed = hidden != self.hidden_nodes
+        self.hidden_nodes = hidden
+        # refresh epochs: ``dirty_regions`` is the caller's attribution of
+        # which regions' node visibility changed (a BeaconSet diffs its
+        # serving map).  A visibility change without attribution must
+        # still dirty *someone* — fall back to the global epoch.
+        if dirty_regions:
+            self.mark_regions_dirty(dirty_regions)
+        elif hidden_changed and dirty_regions is None:
+            self.mark_all_dirty()
 
     def invalidate(self, service_id: Optional[str] = None):
         """Drop cached node arrays (replica set changed).  A per-service
@@ -576,6 +631,7 @@ class SelectionEngine:
         if service_id is None:
             self._cache.clear()
             self._shard_cache.clear()
+            self.mark_all_dirty()
         else:
             self._cache.pop(service_id, None)
 
@@ -585,6 +641,11 @@ class SelectionEngine:
         if arr is None or arr.fingerprint != _fingerprint(tasks):
             arr = _ServiceArrays(tasks)
             self._cache[service_id] = arr
+            if self.shard_precision is None:
+                # unsharded engines have no region diff — any replica-set
+                # change dirties the whole population (the sharded path
+                # attributes the change per shard in ``_shards`` below)
+                self.mark_all_dirty()
         return arr
 
     def _shards(self, service_id: str, arr: _ServiceArrays) -> _ShardSet:
@@ -596,6 +657,10 @@ class SelectionEngine:
                             owner=self._owner,
                             owner_version=self.owner_version)
             self._shard_cache[service_id] = cur
+            if cur.changed_codes is None:
+                self.mark_all_dirty()
+            elif cur.changed_codes:
+                self.mark_regions_dirty(cur.changed_codes)
         return cur
 
     def shard_view(self, service_id: str,

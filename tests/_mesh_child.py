@@ -13,9 +13,12 @@ rounding).  A band of users placed midway between two metros sits
 outside every home shard: on the mesh they straddle a device boundary
 and are served through the fixed-capacity border pass.
 
-Usage: ``python tests/_mesh_child.py [n_users] [nodes_per_region]``
-Prints one ``##OUT##{json}`` line on success; any parity violation
-raises and fails the parent test with this traceback.
+Usage: ``python tests/_mesh_child.py [n_users] [nodes_per_region]
+[refresh_period_ms]`` — a non-zero third argument runs BOTH sides with
+incremental candidate refresh (``refresh_period_ms``) and additionally
+pins the host-side dirty-count stream single == mesh.  Prints one
+``##OUT##{json}`` line on success; any parity violation raises and
+fails the parent test with this traceback.
 """
 import json
 import sys
@@ -76,17 +79,18 @@ def _locs(n_users: int, seed: int) -> np.ndarray:
     return np.concatenate([clustered, mid], axis=0)
 
 
-def _run(mesh, n_users: int, n_per: int):
+def _run(mesh, n_users: int, n_per: int, refresh_ms: float = 0.0):
     import repro.core.fused_tick as fused_tick
 
     sys_ = _system(n_per, seed=0)
+    kw = {"refresh_period_ms": refresh_ms} if refresh_ms else {}
     # the Beacon failover floods the border band with the dead domain's
     # users — size the cap for the whole affected region
     pool = sys_.make_client_pool(
         SERVICE, locs=_locs(n_users, seed=0), transport="fluid",
         frame_interval_ms=500.0, selection_backend="geo_topk",
         tick="device", mesh=mesh,
-        shard_border_cap=max(256, n_users // 2))
+        shard_border_cap=max(256, n_users // 2), **kw)
     sys_.sim.at(0.0, pool.start)
     sys_.fail_node("R0N1", 4_200.0)
     sys_.fail_node("R1N2", 4_300.0)
@@ -141,11 +145,12 @@ def _assert_parity(host, dev, n_users: int) -> None:
 def main() -> None:
     n_users = int(sys.argv[1]) if len(sys.argv) > 1 else 2_000
     n_per = int(sys.argv[2]) if len(sys.argv) > 2 else 16
+    refresh_ms = float(sys.argv[3]) if len(sys.argv) > 3 else 0.0
     import jax
     assert len(jax.devices()) >= 4, jax.devices()
 
-    single, _ = _run(None, n_users, n_per)
-    mesh, churn_delta = _run(4, n_users, n_per)
+    single, _ = _run(None, n_users, n_per, refresh_ms)
+    mesh, churn_delta = _run(4, n_users, n_per, refresh_ms)
     assert mesh._dev._sharded, "mesh driver should be region-sharded"
     _assert_parity(single, mesh, n_users)
 
@@ -160,13 +165,23 @@ def main() -> None:
     assert not mesh_delta, f"mesh programs re-traced under churn: " \
                            f"{mesh_delta}"
 
-    print("##OUT##" + json.dumps({
+    out = {
         "ok": True,
         "ticks": single.ticks_run,
         "switches": len(single.switch_t),
         "failovers": single.failovers,
         "border_users": int(border.size),
-    }))
+    }
+    if refresh_ms:
+        # the host-side dirty tracker is shared logic: the mesh driver
+        # must refresh exactly the users the single-device driver does
+        assert single._rt.dirty_counts == mesh._rt.dirty_counts, \
+            "dirty-count streams diverge single vs mesh"
+        out["dirty_total"] = int(sum(mesh._rt.dirty_counts))
+        out["dirty_frac"] = float(sum(mesh._rt.dirty_counts) /
+                                  (n_users * max(1, mesh.ticks_run)))
+        out["fallbacks"] = int(mesh._rt.fallbacks)
+    print("##OUT##" + json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,107 @@
+"""Benchmark artifact hygiene: results.json must be strict JSON.
+
+The runner used to serialize annotation-only rows (derive hooks that
+carry their result in ``derived``, e.g. the mesh weak-scaling ratio)
+with ``us_per_call: NaN`` — a Python-ism that is not JSON: strict
+parsers (``jq``, browsers, ``json.loads(..., parse_constant=...)``)
+reject the whole file.  These tests drive ``benchmarks.run``'s real
+serialization path end-to-end with a stub benchmark module and pin:
+
+* timing-less rows are written as ``null`` (JSON) / an empty field
+  (CSV), never ``NaN``;
+* a ``--only`` merge against a pre-fix artifact containing a literal
+  ``NaN`` heals it in place;
+* the checked-in ``artifacts/bench/results.json`` itself strict-parses;
+* the derive hooks that produce annotation rows return ``None``, not
+  ``float("nan")``.
+"""
+import json
+import sys
+import types
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def _strict(text: str):
+    def boom(s):
+        raise ValueError(f"non-strict JSON constant: {s}")
+    return json.loads(text, parse_constant=boom)
+
+
+def _stub_module(name: str):
+    mod = types.ModuleType(name)
+    mod.run = lambda: [("stub/measured", 2.5, "ticks=3")]
+    mod.derive = lambda us_by_name: [
+        ("stub/ratio", None, "speedup=2.00x")]
+    sys.modules[name] = mod
+    return mod
+
+
+def _run_main(tmp_path, monkeypatch, argv):
+    name = "benchmarks._stub_bench"
+    _stub_module(name)
+    monkeypatch.setattr(bench_run, "MODULES", [name])
+    monkeypatch.setattr(bench_run, "_artifacts_dir", lambda: tmp_path)
+    monkeypatch.setattr(sys, "argv", ["run.py"] + argv)
+    try:
+        bench_run.main()
+    finally:
+        sys.modules.pop(name, None)
+    return tmp_path / "results.json", tmp_path / "results.csv"
+
+
+def test_runner_writes_strict_json_and_csv(tmp_path, monkeypatch, capsys):
+    results, csv = _run_main(tmp_path, monkeypatch, [])
+    rows = _strict(results.read_text())          # raises on NaN/Infinity
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["stub/measured"]["us_per_call"] == pytest.approx(2500.0)
+    assert by_name["stub/ratio"]["us_per_call"] is None
+    assert by_name["stub/ratio"]["derived_row"] is True
+    lines = csv.read_text().splitlines()
+    assert "stub/ratio,,speedup=2.00x" in lines
+    assert "NaN" not in results.read_text()
+    # the stdout CSV mirrors the file: empty field, not "nan"
+    out = capsys.readouterr().out
+    assert "stub/ratio,,speedup=2.00x" in out.splitlines()
+
+
+def test_only_merge_heals_pre_fix_nan_rows(tmp_path, monkeypatch):
+    """A partial --only run merging into an artifact written before the
+    fix (literal NaN) must emit a file that strict-parses."""
+    stale = ('[\n {\n  "name": "old/row",\n  "us_per_call": NaN,\n'
+             '  "derived": "x=1"\n }\n]')
+    (tmp_path / "results.json").write_text(stale)
+    results, csv = _run_main(tmp_path, monkeypatch, ["--only", "_stub"])
+    rows = _strict(results.read_text())
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["old/row"]["us_per_call"] is None      # healed
+    assert by_name["stub/measured"]["us_per_call"] > 0
+    assert "old/row,," in csv.read_text()
+
+
+def test_checked_in_results_json_is_strict():
+    path = bench_run._artifacts_dir() / "results.json"
+    if not path.exists():
+        pytest.skip("no recorded bench artifact")
+    rows = _strict(path.read_text())
+    assert isinstance(rows, list) and rows
+
+
+def test_derive_hooks_return_none_not_nan():
+    from benchmarks.bench_client_scale import derive as client_derive
+    from benchmarks.bench_mesh_scale import derive as mesh_derive
+    pre = "client_scale/u100000_n1000/"
+    rows = client_derive({pre + "numpy": 100.0, pre + "geo_topk": 50.0,
+                          pre + "device": 10.0, pre + "device_inc": 2.0,
+                          pre + "device_full": 10.0})
+    rows += mesh_derive({"mesh_scale/u250000_n10000/single_d1": 40.0,
+                         "mesh_scale/u1000000_n10000/mesh_d4": 80.0})
+    assert len(rows) == 4
+    for _, ms, _ in rows:
+        assert ms is None
+    by_name = dict((n, d) for n, _, d in rows)
+    assert by_name[pre + "speedup_incremental"] == "speedup=5.00x"
+    # None-valued entries in the merged map must never produce a row
+    assert client_derive({pre + "numpy": None, pre + "device": 10.0}) == []

@@ -290,6 +290,13 @@ def test_bench_client_scale_smoke_profile():
     assert rows and rows[0][1] > 0
     derived = rows[0][2]
     assert "req_per_s=" in derived and "failovers=" in derived
+    # incremental refresh is a registered smoke mode: the sparse device
+    # program + dirty tracker run (and report) on every tier-1 pass
+    by_mode = {name.rsplit("/", 1)[1]: d for name, _, d in rows}
+    assert "device_inc" in by_mode
+    assert "dirty_frac_mean=" in by_mode["device_inc"]
+    assert "dirty_frac_ticks=" in by_mode["device_inc"]
+    assert "dirty_frac_mean" not in by_mode["device"]
 
 
 @pytest.mark.slow

@@ -32,7 +32,8 @@ _ROOT = pathlib.Path(__file__).resolve().parents[1]
 _OUT = "##OUT##"
 
 
-def _run_child(n_users: int, n_per_region: int, timeout: float = 600.0):
+def _run_child(n_users: int, n_per_region: int, timeout: float = 600.0,
+               refresh_ms: float = 0.0):
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         " --xla_force_host_platform_device_count=4").strip()
@@ -41,7 +42,8 @@ def _run_child(n_users: int, n_per_region: int, timeout: float = 600.0):
         ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     proc = subprocess.run(
         [sys.executable, str(_ROOT / "tests" / "_mesh_child.py"),
-         str(n_users), str(n_per_region)],
+         str(n_users), str(n_per_region)] +
+        ([str(refresh_ms)] if refresh_ms else []),
         env=env, capture_output=True, text=True, timeout=timeout)
     assert proc.returncode == 0, \
         f"mesh identity child failed:\n{proc.stdout}\n{proc.stderr}"
@@ -60,6 +62,21 @@ def test_mesh_identity_churn_beacon_failover():
     assert out["switches"] > 0, "scenario never exercised two-round switch"
     assert out["failovers"] > 0, "scenario never exercised failover"
     assert out["border_users"] > 0
+
+
+@pytest.mark.slow
+def test_mesh_identity_incremental_refresh():
+    """Incremental candidate refresh on the mesh: with
+    ``refresh_period_ms`` set, the 4-device mesh still reproduces the
+    single-device decision stream through churn + Beacon failover, the
+    host-side dirty-count streams match exactly, and the steady-state
+    dirty fraction is genuinely sparse (the whole point of the mode)."""
+    out = _run_child(2_000, 16, refresh_ms=6 * 2_000.0)
+    assert out["ok"]
+    assert out["switches"] > 0 and out["failovers"] > 0
+    assert out["dirty_total"] > 0
+    assert out["dirty_frac"] < 0.6, \
+        f"incremental refresh not sparse: {out['dirty_frac']:.2f}"
 
 
 @pytest.mark.slow
