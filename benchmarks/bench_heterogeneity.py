@@ -1,8 +1,19 @@
-"""Table 5 — node heterogeneity calibration.
+"""Table 5 — node heterogeneity + serving-profile calibration.
 
-Times the REAL jitted armada-detector forward on this host, then derives
-each testbed node's modeled per-frame time via its speed factor — showing
-the simulator's processing times are anchored to real JAX compute.
+Times the REAL jitted armada-detector forward on this host and derives
+each testbed node's modeled per-frame time via its speed factor — the
+simulator's processing times are anchored to real JAX compute.
+
+Calibration (serving-aware data plane): for every model family the
+``ServingProfile`` real backend is stepped at batch occupancies 1/2/4
+and the ``derive`` hook least-squares fits the affine surrogate
+``t(b) = c0 + c1*b``, recording ``table5/calibration/<family>`` rows
+(``ms_per_frame``, ``fixed_frac``, fit residual ``mre``) into
+artifacts/bench/results.json — the constants ``ServingProfile``
+consumes instead of the hardcoded fallbacks.  The LLM family runs on
+the reduced same-family config (the full 1.7B is not CPU-feasible);
+its constants therefore calibrate the reduced architecture and are
+labeled as such.
 """
 from __future__ import annotations
 
@@ -14,9 +25,36 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.cluster import emulation, real_world
 from repro.models.api import build_model, make_batch
+from repro.serving.profile import FAMILIES, ServingProfile
+
+BATCHES = (1, 2, 4)
+_REPS = 7
+# the LLM family calibrates on the reduced config (full 1.7B needs ~7 GB
+# of fp32 weights); vision families run their full configs
+_REAL_KW = {"llm-decode": {"reduce_layers": 4, "max_batch": 4,
+                           "max_seq": 64}}
 
 
-def run():
+def _profile_rows(fam: str, reps: int):
+    prof = ServingProfile(fam, calibration={})
+    prof.attach_real(**_REAL_KW.get(fam, {"max_batch": 4}))
+    rows = []
+    # ascending occupancy: the LLM backend's profiling requests never
+    # finish, so slots only fill — exactly the order we measure in
+    for b in BATCHES:
+        prof.step_ms(b)                     # warm (compile / fill slots)
+        med = float(np.median([prof.step_ms(b) for _ in range(reps)]))
+        note = "reduced-config" if fam in _REAL_KW else "full-config"
+        rows.append((f"table5/profile/{fam}/step_b{b}", med, note))
+    # satellite: the real backend's measured EMA next to the surrogate
+    # estimate at the same occupancy — the heartbeat decode_ms signal
+    est = prof.estimate_step_ms(BATCHES[-1])
+    rows.append((f"table5/profile/{fam}/measured_ema", prof.measured_ms(),
+                 f"surrogate_b{BATCHES[-1]}={est:.3f}ms"))
+    return rows
+
+
+def run(smoke: bool = False):
     cfg = get_config("armada-detector")
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -28,7 +66,7 @@ def run():
 
     fwd(params, batch)[0].block_until_ready()
     times = []
-    for _ in range(20):
+    for _ in range(3 if smoke else 20):
         t0 = time.perf_counter()
         fwd(params, batch).block_until_ready()
         times.append((time.perf_counter() - t0) * 1e3)
@@ -44,4 +82,37 @@ def run():
             rows.append((f"table5/{topo_name}/{nid}", spec.proc_ms,
                          f"speed_factor={spec.proc_ms / ref:.2f};"
                          f"host_equiv={host_ms * spec.proc_ms / ref:.1f}ms"))
+    for fam in FAMILIES:
+        rows.extend(_profile_rows(fam, reps=3 if smoke else _REPS))
+    return rows
+
+
+def derive(us_by_name):
+    """Fit the affine surrogate per family from the measured step rows
+    and record the constants ``ServingProfile.load_calibration`` reads."""
+    rows = []
+    for fam in FAMILIES:
+        meas = []
+        for b in BATCHES:
+            us = us_by_name.get(f"table5/profile/{fam}/step_b{b}")
+            if us is None or us != us or us <= 0.0:
+                break
+            meas.append((b, us / 1e3))          # us -> ms
+        if len(meas) != len(BATCHES):
+            continue                            # family not (re)measured
+        bs = np.asarray([b for b, _ in meas], dtype=np.float64)
+        ts = np.asarray([t for _, t in meas], dtype=np.float64)
+        A = np.stack([np.ones_like(bs), bs], axis=1)
+        (c0, c1), *_ = np.linalg.lstsq(A, ts, rcond=None)
+        # physical clamps: no negative intercept, no negative batch slope
+        # (decode on a fixed padded batch is ~occupancy-invariant: c1 -> 0)
+        c0 = max(float(c0), 0.0)
+        c1 = max(float(c1), 1e-6)
+        unit = c0 + c1                          # t(1): the batch-1 frame time
+        fixed = min(max(c0 / unit, 0.0), 0.95)
+        fit = c0 + c1 * bs
+        mre = float(np.mean(np.abs(fit - ts) / ts))
+        rows.append((f"table5/calibration/{fam}", None,
+                     f"ms_per_frame={unit:.4f};c0={c0:.4f};c1={c1:.4f};"
+                     f"fixed_frac={fixed:.4f};mre={mre:.4f}"))
     return rows

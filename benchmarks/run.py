@@ -1,13 +1,16 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark runner: every paper table/figure + roofline + kernels.
 
-``PYTHONPATH=src python -m benchmarks.run [--only substring]``
+``PYTHONPATH=src python -m benchmarks.run [--only substring] [--smoke]``
 Writes artifacts/bench/results.csv alongside the stdout CSV.
+``--smoke`` is forwarded to every module whose ``run`` accepts it
+(seconds-scale sweeps for CI; full-profile numbers otherwise).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import pathlib
 import sys
@@ -21,6 +24,7 @@ MODULES = [
     "benchmarks.bench_beacon_failover",    # Beacon fault domains / handoff
     "benchmarks.bench_partition",          # split-brain + data locality
     "benchmarks.bench_client_scale",       # client-pool scaling (beyond paper)
+    "benchmarks.bench_serving_selection",  # queueing-aware vs proximity-only
     "benchmarks.bench_mesh_scale",         # mesh-sharded pool (multi-device)
     "benchmarks.bench_scalability",        # Fig 6
     "benchmarks.bench_user_distribution",  # Fig 7
@@ -52,6 +56,8 @@ def _artifacts_dir() -> pathlib.Path:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale profiles for modules that offer one")
     args = ap.parse_args()
 
     all_rows = []
@@ -61,7 +67,10 @@ def main() -> None:
         if args.only and args.only not in modname:
             continue
         t0 = time.time()
-        rows = mod.run()
+        kw = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kw["smoke"] = True
+        rows = mod.run(**kw)
         for name, ms, derived in rows:
             us = _us(ms)                                  # ms -> us
             print(f"{name},{_fmt(us)},{derived}")

@@ -3,9 +3,15 @@
 Hosts service replicas (tasks), processes offloaded frames through a
 ``slots``-server queue, reports load/layers via heartbeats, and notifies
 warm-connected clients on failure (the multi-connection strategy's break
-signal).  Processing time = node's per-frame speed × service workload scale
-× jitter — calibrated against the real jitted models in
-benchmarks/bench_heterogeneity.py.
+signal).  Per-request processing time comes from the captain's
+:class:`~repro.serving.profile.ServingProfile` (``request_ms`` — the
+served model's calibrated frame/decode time × node speed × service
+workload scale × jitter, calibrated against the real jitted models in
+benchmarks/bench_heterogeneity.py); nodes without an attached profile
+keep the historical synthetic draw ``spec.proc_ms × scale`` exactly.
+Heartbeats additionally carry serving occupancy, the expected queueing
+delay (consumed by SelectionEngine's queueing-aware load term), and the
+real-mode measured decode EMA.
 """
 from __future__ import annotations
 
@@ -71,6 +77,11 @@ class Captain:
         self.node_id = spec.node_id
         self.alive = True
         self.tasks: Dict[str, "object"] = {}         # task_id -> Task
+        # serving profile (repro.serving.profile.ServingProfile) — the
+        # latency model behind this node.  None = synthetic: request time
+        # is spec.proc_ms, read live so topology-level proc_ms rescaling
+        # keeps working
+        self.profile = spec.profile
         self.connections = ConnectionSet()
         self.queue: List[Request] = []
         self.busy = 0
@@ -83,6 +94,16 @@ class Captain:
 
     # ------------------------------------------------------------- status
 
+    def request_ms(self, proc_scale: float = 1.0) -> float:
+        """Effective per-request service time (ms) through the serving
+        profile — ``spec.proc_ms * proc_scale`` when no profile is
+        attached.  Linear in ``proc_scale`` by contract: the fused
+        device tick bakes ``request_ms(1.0)`` into a static per-node
+        scalar and multiplies by the workload scale on device."""
+        if self.profile is None:
+            return self.spec.proc_ms * proc_scale
+        return self.profile.request_ms(proc_scale)
+
     def load(self) -> float:
         return (self.busy + len(self.queue) + self._fluid_requests()) \
             / max(self.spec.slots, 1)
@@ -90,10 +111,30 @@ class Captain:
     def free_fraction(self) -> float:
         return max(0.0, 1.0 - self.load())
 
+    def queueing_delay_ms(self) -> float:
+        """Expected wait (ms) for a request arriving now: backlog ahead
+        of it (events queue + lazily-drained fluid work) over the node's
+        drain capacity.  Unlike ``free_fraction`` — which clamps at 0
+        once the backlog exceeds the slot count — this keeps growing
+        with the backlog, so the selection engine's queueing-aware load
+        term can tell a slightly-busy node from a drowning one."""
+        unit = self.request_ms()
+        work = (len(self.queue) + self._fluid_requests()) * unit
+        return work / max(self.spec.slots, 1)
+
     def heartbeat(self) -> Dict:
+        p = self.profile
         return {"node": self.node_id, "load": self.load(),
                 "layers": set(self.spec.layers), "alive": self.alive,
-                "tasks": list(self.tasks)}
+                "tasks": list(self.tasks),
+                # serving-aware data plane: occupancy + expected queueing
+                # delay feed the engine's queueing-aware scoring;
+                # decode_ms surfaces the real-mode measured decode/frame
+                # EMA (None for surrogate/synthetic nodes)
+                "model": p.model_id if p is not None else "synthetic",
+                "occupancy": min(1.0, self.load()),
+                "queue_ms": self.queueing_delay_ms(),
+                "decode_ms": p.measured_ms() if p is not None else None}
 
     # ------------------------------------------------------------ serving
 
@@ -107,7 +148,7 @@ class Captain:
 
     def _start(self, req: Request):
         self.busy += 1
-        proc = self.sim.jitter(self.spec.proc_ms * req.proc_scale, 0.06)
+        proc = self.sim.jitter(self.request_ms(req.proc_scale), 0.06)
         self.sim.after(max(proc, 0.1), self._finish, req)
 
     def _finish(self, req: Request):
@@ -135,7 +176,7 @@ class Captain:
         dt = self.sim.now - self.fluid_updated
         work = self.fluid_work - self.spec.slots * dt if dt > 0 \
             else self.fluid_work
-        return max(0.0, work) / max(self.spec.proc_ms, 1e-9)
+        return max(0.0, work) / max(self.request_ms(), 1e-9)
 
     def drain_fluid(self, now: float):
         """Lazily drain the fluid backlog up to ``now`` (capacity =
@@ -153,7 +194,7 @@ class Captain:
                      ) -> Tuple[float, float, float]:
         """Admit a tick's worth of pool traffic as fluid work.
 
-        ``n_requests`` requests of ``proc_ms * proc_scale`` work each,
+        ``n_requests`` requests of ``request_ms(proc_scale)`` work each,
         uniformly spread over ``[now, now + window_ms)``.  Returns
         ``(work0, in_rate, cap_rate)`` — the backlog at window start (ms of
         work), the arrival work rate, and the drain rate — from which the
@@ -167,7 +208,7 @@ class Captain:
         """
         self.drain_fluid(now)
         work0 = self.fluid_work
-        work_in = n_requests * self.spec.proc_ms * proc_scale
+        work_in = n_requests * self.request_ms() * proc_scale
         cap_rate = float(self.spec.slots)
         in_rate = work_in / max(window_ms, 1e-9)
         end = now + window_ms

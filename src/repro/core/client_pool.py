@@ -460,6 +460,7 @@ class ClientPool:
                  tick: str = "host",
                  rtt_model: Callable = default_rtt_model,
                  record_samples: bool = True,
+                 latency_hist: bool = False,
                  shard_border_cap: Optional[int] = None,
                  ema_slots: Optional[int] = None,
                  mesh=None,
@@ -625,6 +626,20 @@ class ClientPool:
         self.ticks_run = 0
         self.failovers = 0
         self._fluid_buf: List[Tuple] = []       # (users, nodes, ms, rounds)
+        # frame-latency histogram (latency_hist=True): log-spaced bins
+        # 1 ms .. ~100 s, ~5% wide — tail quantiles / SLO-violation
+        # fractions at population scale without per-sample records.  The
+        # top decade exists for saturation studies: a drowned node's
+        # fluid backlog reaches tens of seconds, and p99 must resolve
+        # there rather than clip at the final edge.
+        # Fed by the fluid transport's flush and the device tick's
+        # per-window latency stash (bench_serving_selection).
+        self._lat_edges: Optional[np.ndarray] = None
+        self._lat_hist: Optional[np.ndarray] = None
+        if latency_hist:
+            self._lat_edges = np.concatenate(
+                [[0.0], np.logspace(0.0, 5.0, 230), [np.inf]])
+            self._lat_hist = np.zeros(self._lat_edges.size - 1, np.int64)
         # per-phase wall time (ms) accumulated across ticks, so benchmark
         # runs can attribute where a tick goes (selection / policy /
         # transport on the host tick; fused_tick / transport on device)
@@ -1261,7 +1276,7 @@ class ClientPool:
             work0[nix] = w0
             net_rate[nix] = in_rate - cap_rate
             slots[nix] = max(cap.spec.slots, 1)
-            proc[nix] = cap.spec.proc_ms
+            proc[nix] = cap.request_ms()    # serving-profile unit time
 
         wait = np.maximum(0.0, work0[nodes] + net_rate[nodes] * taus) \
             / slots[nodes]
@@ -1306,6 +1321,9 @@ class ClientPool:
                                       self.alpha)
                 np.add.at(self.frame_count, f_users, 1)
                 np.add.at(self.frame_sum, f_users, f_lat)
+                if self._lat_hist is not None:
+                    self._lat_hist += np.histogram(
+                        f_lat, bins=self._lat_edges)[0]
         self._fluid_buf.clear()
 
     def _retry_fluid(self, users: List[int]):
@@ -1354,13 +1372,19 @@ class ClientPool:
     # ------------------------------------------------------------- metrics
 
     def reset_stats(self):
-        """Zero the aggregate frame stats — call at a measurement-window
-        start on aggregate-only (fluid / record_samples=False) pools."""
+        """Zero the aggregate frame stats (and the latency histogram when
+        enabled) — call at a measurement-window start on aggregate-only
+        (fluid / record_samples=False) pools.  bench_serving_selection
+        resets at flash-crowd end so tail quantiles describe the
+        recovery phase selection actually controls, not the flash whose
+        pile-up predates any load signal."""
         self._flush_fluid()                 # open window belongs to the past
         if self._dev is not None:
             self._dev.reset_aggregates()
         self.frame_count[:] = 0
         self.frame_sum[:] = 0.0
+        if self._lat_hist is not None:
+            self._lat_hist[:] = 0
 
     def active_locs(self) -> np.ndarray:
         """(k, 2) locations of running users (ApplicationManager's
@@ -1444,6 +1468,36 @@ class ClientPool:
         if u is not None:
             m &= us == u
         return float(ms[m].mean()) if m.any() else float("nan")
+
+    def _hist_sync(self) -> np.ndarray:
+        if self._lat_hist is None:
+            raise ValueError("pool was built without latency_hist=True")
+        self._flush_fluid()
+        if self._dev is not None:
+            self._dev.flush()
+        return self._lat_hist
+
+    def latency_quantile(self, q: float) -> float:
+        """Approximate frame-latency quantile (e.g. ``q=0.99`` for p99)
+        from the log-spaced histogram — the upper edge of the bin the
+        quantile falls in (≤5% bin width).  Needs ``latency_hist=True``."""
+        hist = self._hist_sync()
+        cum = np.cumsum(hist)
+        if cum[-1] == 0:
+            return float("nan")
+        i = int(np.searchsorted(cum, q * cum[-1]))
+        return float(self._lat_edges[min(i + 1, self._lat_edges.size - 2)])
+
+    def slo_violation_fraction(self, slo_ms: float) -> float:
+        """Fraction of frame responses whose latency exceeded ``slo_ms``
+        (counted over bins whose lower edge is ≥ ``slo_ms`` — snap the
+        SLO to a bin edge for exact accounting)."""
+        hist = self._hist_sync()
+        tot = hist.sum()
+        if tot == 0:
+            return float("nan")
+        bad = hist[self._lat_edges[:-1] >= slo_ms].sum()
+        return float(bad / tot)
 
 
 def _dup_rank(keys: np.ndarray) -> np.ndarray:

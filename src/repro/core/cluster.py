@@ -26,6 +26,9 @@ class NodeSpec:
     storage_gb: float = 2.0
     layers: set = field(default_factory=set)    # artifact chunks present
     is_cloud: bool = False
+    # served-model latency profile (repro.serving.profile.ServingProfile);
+    # None = synthetic node whose per-request time is proc_ms exactly
+    profile: Optional[object] = None
 
 
 @dataclass

@@ -786,7 +786,10 @@ class FusedTickDriver:
         slots = np.ones(np_cap, np.float32)
         for i, cap in enumerate(pool._node_caps):
             if cap is not None:
-                proc[i] = cap.spec.proc_ms
+                # serving-profile unit time: static per node-epoch by the
+                # linearity contract (request_ms(s) == request_ms()·s), so
+                # the device program's node_proc·scale matches the host
+                proc[i] = cap.request_ms()
                 slots[i] = max(cap.spec.slots, 1)
         ulat, ulon, unet, ucode = self._packed_user()
         return st, tn, proc, slots, ulat, ulon, unet, ucode
@@ -953,7 +956,8 @@ class FusedTickDriver:
             self._rebuild_static(view)
         free, sched, alive = view.padded_dynamic(
             self.node_pad, hidden=engine.hidden_nodes,
-            locality=engine.data_locality.get(pool.service_id))
+            locality=engine.data_locality.get(pool.service_id),
+            queueing=engine.queueing.get(pool.service_id))
         need = np.int32(min(MIN_PROXIMITY_HITS, int(sched.sum())))
         deaths, n_deaths = self._drain_deaths()
         pool.phase_add("transport", t0)
@@ -1041,6 +1045,15 @@ class FusedTickDriver:
         self._push_traffic(work0, net_rate, probe_ok, frame_ok,
                            ((e1p, e1f), (e2p, e2f), (e3p, e3f)))
         self._stash_dirty = True
+        if pool._lat_hist is not None:
+            # frame-latency histogram (latency_hist=True): each window's
+            # latency stash is pulled exactly once, right after it is
+            # computed — one device round-trip per tick, bench-only
+            lat = self._pull(self.state.lat_frame)
+            lat = lat[np.isfinite(lat)]
+            if lat.size:
+                pool._lat_hist += np.histogram(
+                    lat, bins=pool._lat_edges)[0]
 
     def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):
         pool = self.pool

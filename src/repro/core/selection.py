@@ -91,6 +91,21 @@ W_PROXIMITY = 0.3
 W_DATA = 0.15
 DATA_LOCAL_RADIUS_KM = 50.0
 
+# queueing-aware load term (serving-aware data plane): penalty for nodes
+# whose serving profile reports expected queueing delay.  free_fraction
+# clamps at 0 once the backlog exceeds the slot count, so under
+# saturation proximity decides and users keep piling onto drowning
+# nodes; this term keeps growing with the backlog
+# (min(queue_ms / QUEUE_NORM_MS, 1)), letting scoring tell a
+# slightly-busy node from a saturated one.  Folded into the
+# free-fraction vector in ``_ServiceArrays.dynamic_state`` exactly like
+# the data-locality bonus — one injection point, all four tick paths
+# (numpy, geo_topk kernel, fused device, mesh) stay decision-identical.
+# Off (exact pre-existing scores) unless enabled per service via
+# ``SelectionEngine.set_queueing_awareness``.
+W_QUEUE = 0.2
+QUEUE_NORM_MS = 250.0
+
 PROXIMITY_PRECISION = 4       # max geohash chars the proximity filter uses
 MIN_PROXIMITY_HITS = 4        # widen the cell until this many replicas hit
 CODE_PRECISION = 9            # full-precision Morton codes (45 bits)
@@ -269,7 +284,7 @@ class _ServiceArrays:
             self._local_bits[locs] = bits
         return bits
 
-    def dynamic_state(self, hidden=None, locality=None
+    def dynamic_state(self, hidden=None, locality=None, queueing=None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """(mask, free): alive+running mask and free-slot fractions.
 
@@ -284,23 +299,38 @@ class _ServiceArrays:
         ``SelectionEngine.set_data_locality``: the data-locality bonus is
         folded into ``free`` here, scaled by ``1/W_RESOURCE`` so the final
         Algorithm-1 score gains exactly ``weight`` per data-local node.
+
+        ``queueing`` is an optional ``(weight, norm_ms)`` pair from
+        ``SelectionEngine.set_queueing_awareness``: each captain's
+        expected queueing delay (heartbeat ``queue_ms``, from its serving
+        profile's backlog) is normalized to ``min(queue_ms / norm_ms, 1)``
+        and subtracted the same way, so a saturated node loses up to
+        ``weight`` score even after ``free_fraction`` has clamped at 0.
+
         This is the single injection point every tick path (numpy scorer,
-        geo_topk kernel, fused device tick) draws its dynamic node state
-        from — folding the term here keeps them decision-identical by
-        construction."""
+        geo_topk kernel, fused device tick, mesh) draws its dynamic node
+        state from — folding the terms here keeps them decision-identical
+        by construction."""
         n = len(self.tasks)
         mask = np.zeros(n, bool)
         free = np.zeros(n)
+        queue_ms = np.zeros(n) if queueing is not None else None
         for i, t in enumerate(self.tasks):
             c = t.captain
             if t.status == "running" and c is not None and c.alive \
                     and not (hidden and c.node_id in hidden):
                 mask[i] = True
                 free[i] = c.free_fraction()
+                if queue_ms is not None:
+                    queue_ms[i] = c.queueing_delay_ms()
         if locality is not None:
             locs, weight = locality
             free = free + (weight / W_RESOURCE) * self.locality_bits(locs) \
                 * mask
+        if queueing is not None:
+            weight, norm_ms = queueing
+            free = free - (weight / W_RESOURCE) \
+                * np.minimum(queue_ms / max(norm_ms, 1e-9), 1.0) * mask
         return mask, free
 
     def packed_static(self, node_pad: int = 256) -> PackedStatic:
@@ -348,15 +378,16 @@ class _ServiceArrays:
         return free_p, sched
 
     def padded_dynamic(self, node_pad: int = 256, hidden=None,
-                       locality=None
+                       locality=None, queueing=None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-tick (free, valid_sched, valid_alive) padded to match
-        ``packed_static``: fp32 free fractions (data-locality bonus folded
-        in when ``locality`` is set — see ``dynamic_state``), schedulable
-        mask (running + alive + Beacon-visible — what selection scores)
-        and alive mask (what the client data plane may still talk to;
-        control-plane ``hidden`` does NOT touch it)."""
-        mask, free = self.dynamic_state(hidden, locality)
+        ``packed_static``: fp32 free fractions (data-locality bonus and
+        queueing-delay penalty folded in when ``locality`` / ``queueing``
+        are set — see ``dynamic_state``), schedulable mask (running +
+        alive + Beacon-visible — what selection scores) and alive mask
+        (what the client data plane may still talk to; control-plane
+        ``hidden`` does NOT touch it)."""
+        mask, free = self.dynamic_state(hidden, locality, queueing)
         free_p, sched = self.padded_sched(mask, free, node_pad)
         alive = np.zeros(free_p.shape[0], bool)
         alive[:len(self.tasks)] = self.alive_mask()
@@ -539,6 +570,11 @@ class SelectionEngine:
         # folded into the free-fraction vector so every tick path scores
         # it identically (no jit-shape or cache impact)
         self.data_locality: Dict[str, Tuple[tuple, float]] = {}
+        # queueing-aware load term (serving-aware data plane): per-service
+        # (weight, norm_ms) — like data_locality a purely dynamic input,
+        # folded into the free-fraction vector at the single injection
+        # point so every tick path scores it identically
+        self.queueing: Dict[str, Tuple[float, float]] = {}
         # incremental-refresh epoch channel: a monotonic counter per
         # serving-region prefix code, bumped whenever that region's
         # schedulable node set (membership, ownership, visibility) may
@@ -588,6 +624,26 @@ class SelectionEngine:
         if self.data_locality.get(service_id) != prev:
             # the preference shifts scores everywhere within radius of any
             # replica — no region attribution, mark globally
+            self.mark_all_dirty()
+
+    def set_queueing_awareness(self, service_id: str,
+                               weight: float = W_QUEUE,
+                               norm_ms: float = QUEUE_NORM_MS) -> None:
+        """Enable the queueing-aware load term for a service: every
+        captain's expected queueing delay (its serving profile's backlog,
+        ``Captain.queueing_delay_ms``) is normalized against ``norm_ms``
+        and subtracts up to ``weight`` from the Algorithm-1 score — so
+        selection keeps differentiating nodes after their free fraction
+        has clamped at 0 (batch slots saturated).  Pass a falsy
+        ``weight`` to disable (exact pre-existing scores)."""
+        prev = self.queueing.get(service_id)
+        if not weight:
+            self.queueing.pop(service_id, None)
+        else:
+            self.queueing[service_id] = (float(weight), float(norm_ms))
+        if self.queueing.get(service_id) != prev:
+            # backlog is per-node state with no region attribution —
+            # enabling/disabling shifts scores fleet-wide
             self.mark_all_dirty()
 
     def set_beacon_routing(self, owner, hidden,
@@ -709,7 +765,8 @@ class SelectionEngine:
         nets = parse_nets(user_nets, u_total)
         arr = self._arrays(service_id, tasks)
         mask, free = arr.dynamic_state(self.hidden_nodes,
-                                       self.data_locality.get(service_id))
+                                       self.data_locality.get(service_id),
+                                       self.queueing.get(service_id))
         run_ix = np.nonzero(mask)[0]
         out = np.full((u_total, k), -1, np.int32)   # always (U, k)
         if run_ix.size == 0:
@@ -849,7 +906,8 @@ class SelectionEngine:
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
         mask, free = arr.dynamic_state(self.hidden_nodes,
-                                       self.data_locality.get(service_id))
+                                       self.data_locality.get(service_id),
+                                       self.queueing.get(service_id))
         run_ix = np.nonzero(mask)[0]
         u_codes = geohash.encode_batch(users[:, 0], users[:, 1],
                                        CODE_PRECISION)
@@ -916,7 +974,8 @@ class SelectionEngine:
         nets = parse_nets(user_nets, len(users))
         arr = self._arrays(service_id, tasks)
         mask, free = arr.dynamic_state(self.hidden_nodes,
-                                       self.data_locality.get(service_id))
+                                       self.data_locality.get(service_id),
+                                       self.queueing.get(service_id))
         n_run = int(mask.sum())
         if n_run == 0:
             return None

@@ -20,6 +20,10 @@ class GenRequest:
     slot: Optional[int] = None
     done: bool = False
     session_id: Optional[str] = None        # Cargo-backed session (failover)
+    # imported session queued while every slot was busy: the saved cache
+    # slice to re-splice on admission (instead of a fresh prefill, which
+    # would lose the generated-token cache state)
+    resume_cache: Optional[Dict] = None
 
 
 class SlotScheduler:

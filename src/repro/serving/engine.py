@@ -35,7 +35,12 @@ class ServeEngine:
         self.scheduler = SlotScheduler(max_batch)
         self.cache = self.model.init_cache(max_batch, max_seq, "float32")
         self.steps = 0
+        # measured decode wall time: last step + EMA.  Surfaced through
+        # ServingProfile.measured_ms() -> Captain.heartbeat()["decode_ms"]
+        # so real-mode captains report serving reality, and the surrogate
+        # can be sanity-checked against it (bench_heterogeneity).
         self.decode_ms_ema: Optional[float] = None
+        self.last_decode_ms: float = 0.0
 
         model = self.model
         # authoritative batch-axis index per cache leaf (size-based guessing
@@ -79,6 +84,15 @@ class ServeEngine:
 
     def _admit(self):
         for slot, req in self.scheduler.admit():
+            if req.resume_cache is not None:
+                # imported session that queued while every slot was busy:
+                # re-splice its saved cache slice — a prefill would rebuild
+                # the cache from the prompt alone and corrupt the
+                # mid-generation state
+                sub = jax.tree.map(jnp.asarray, req.resume_cache)
+                self.cache = self._splice(self.cache, sub, slot)
+                req.resume_cache = None
+                continue
             toks = np.zeros((1, self.max_seq // 2), np.int32)
             L = min(len(req.prompt), toks.shape[1])
             toks[0, :L] = req.prompt[:L]
@@ -106,6 +120,7 @@ class ServeEngine:
                                           jnp.asarray(toks))
         logits.block_until_ready()
         dt = (time.perf_counter() - t0) * 1e3
+        self.last_decode_ms = dt
         self.decode_ms_ema = dt if self.decode_ms_ema is None else \
             0.3 * dt + 0.7 * self.decode_ms_ema
         self.steps += 1

@@ -1,0 +1,366 @@
+"""Serving profiles: the latency model behind every Captain.
+
+The paper's captains serve real latency-sensitive models (object
+detection, face recognition — §3.3.2/§5); this module is the layer that
+connects those models to the control plane.  A :class:`ServingProfile`
+owns a captain's per-request latency model behind ONE API with two
+backends (the mamba-jax kernel-interface idiom — SNIPPETS §1–2: one
+entry point, enum-dispatched modes):
+
+* ``SURROGATE`` — analytic: a calibrated per-family frame time plus an
+  affine batch-occupancy step model whose fixed/variable split comes
+  from a roofline cost estimate (``telemetry/hlo_cost`` over the
+  compiled forward, or the parameter-count estimate when nothing is
+  compiled).  Pure arithmetic — cheap enough for tier-1 and the
+  100k-user fused tick.
+* ``REAL`` — actual jitted compute: a :class:`~repro.serving.engine.
+  ServeEngine` decode step with ``SlotScheduler`` continuous batching
+  for causal (LLM-decode) families, a jitted batched frame forward for
+  the vision families.  ``bench_heterogeneity`` calibrates the
+  surrogate against it and records the constants this module consumes.
+
+The tick paths consume only :meth:`ServingProfile.request_ms`, which is
+**linear in** ``proc_scale`` with a unit time fixed at profile
+construction — the fused device tick bakes ``request_ms(1.0)`` into its
+static per-node array and multiplies by the workload scale on device,
+so host and device latencies stay identical by construction.  Real-mode
+measurements never feed the tick; they feed calibration and the
+heartbeat ``decode_ms`` telemetry field.
+"""
+from __future__ import annotations
+
+import enum
+import json
+import pathlib
+from typing import Dict, Optional
+
+# reference per-frame service time (ms) of the paper's D6 anchor node
+# (speed factor 1.0, Table 5) — the scale all node speed factors are
+# expressed against
+REF_FRAME_MS = 30.0
+
+# per-family frame/step time (ms) at speed factor 1.0, used when no
+# calibration artifact has been recorded yet (satellite: bench's derive
+# hook writes measured constants that override these)
+FALLBACK_MS = {
+    "armada-detector": 30.0,
+    "armada-facerec": 12.0,
+    "llm-decode": 45.0,
+}
+
+# model family -> backing architecture in the repro.configs registry
+FAMILY_ARCH = {
+    "armada-detector": "armada-detector",
+    "armada-facerec": "armada-facerec",
+    "llm-decode": "qwen3-1.7b",
+}
+
+FAMILIES = tuple(FAMILY_ARCH)
+
+
+class ProfileMode(enum.Enum):
+    SURROGATE = "surrogate"
+    REAL = "real"
+
+
+# --------------------------------------------------------------- calibration
+
+def calibration_path() -> pathlib.Path:
+    """Default location of the bench runner's merged results."""
+    return pathlib.Path(__file__).resolve().parents[3] \
+        / "artifacts" / "bench" / "results.json"
+
+
+_CAL_CACHE: Dict[str, object] = {"path": None, "table": None}
+
+
+def load_calibration(path=None) -> Dict[str, Dict[str, float]]:
+    """Per-family calibration constants recorded by bench_heterogeneity's
+    ``derive`` hook (rows named ``table5/calibration/<family>``, derived
+    fields ``k=v`` semicolon-joined).  Missing/unreadable artifacts give
+    an empty table — profiles fall back to :data:`FALLBACK_MS`."""
+    p = pathlib.Path(path) if path is not None else calibration_path()
+    if _CAL_CACHE["path"] == p and _CAL_CACHE["table"] is not None:
+        return _CAL_CACHE["table"]          # type: ignore[return-value]
+    table: Dict[str, Dict[str, float]] = {}
+    try:
+        rows = json.loads(p.read_text())
+    except (OSError, ValueError):
+        rows = []
+    for row in rows if isinstance(rows, list) else []:
+        name = str(row.get("name", ""))
+        if not name.startswith("table5/calibration/"):
+            continue
+        kv: Dict[str, float] = {}
+        for part in str(row.get("derived", "")).split(";"):
+            key, _, val = part.partition("=")
+            try:
+                kv[key.strip()] = float(val)
+            except ValueError:
+                pass
+        if kv.get("ms_per_frame", 0.0) > 0.0:
+            table[name.rsplit("/", 1)[1]] = kv
+    _CAL_CACHE.update(path=p, table=table)
+    return table
+
+
+def reset_calibration_cache() -> None:
+    _CAL_CACHE.update(path=None, table=None)
+
+
+# ------------------------------------------------------------ analytic cost
+
+_FIXED_FRAC_CACHE: Dict[str, float] = {}
+
+
+def analytic_cost(cfg, tokens: Optional[int] = None):
+    """Roofline :class:`~repro.telemetry.hlo_cost.Cost` for one batch-1
+    forward straight from the model config — no compile.  FLOPs follow
+    the 2·N·D rule; bytes are one full sweep over the (active) weights,
+    the term that dominates small-batch serving."""
+    from repro.telemetry.hlo_cost import Cost
+    n = cfg.param_count(active_only=True)
+    if tokens is None:
+        tokens = (cfg.num_patches + 8) if cfg.num_patches else 1
+    cost = Cost()
+    cost.flops = 2.0 * n * tokens
+    cost.add_bytes("parameter-sweep", 4.0 * n)
+    return cost
+
+
+def compiled_cost(compiled):
+    """Cost via the while-trip-count-aware HLO walker, for profiles that
+    have a compiled real backend."""
+    from repro.telemetry.hlo_cost import analyze_compiled
+    return analyze_compiled(compiled)
+
+
+def fixed_fraction(model_id: str, cost=None) -> float:
+    """Roofline estimate of the batch-independent share of one serving
+    step: the weight-sweep (bytes) time is paid once per step regardless
+    of how many batch slots are occupied, while compute scales with the
+    occupied slots.  Feeds the surrogate's affine step model
+    ``t(b) = unit·(fixed + (1-fixed)·b)``."""
+    if cost is None:
+        if model_id in _FIXED_FRAC_CACHE:
+            return _FIXED_FRAC_CACHE[model_id]
+        arch = FAMILY_ARCH.get(model_id)
+        if arch is None:
+            return 0.0
+        from repro.configs import get_config
+        cost = analytic_cost(get_config(arch))
+    from repro.config import V5E
+    t_flops = cost.flops / V5E.peak_flops
+    t_bytes = cost.bytes / V5E.hbm_bw
+    frac = min(t_bytes / max(t_bytes + t_flops, 1e-30), 0.95)
+    if model_id in FAMILY_ARCH:
+        _FIXED_FRAC_CACHE[model_id] = frac
+    return frac
+
+
+# ----------------------------------------------------------------- profile
+
+class ServingProfile:
+    """Per-captain serving latency model (dual-mode, one API).
+
+    ``unit_ms`` — the effective per-request service time at batch 1 —
+    is fixed at construction: calibrated per-family frame time (artifact
+    or fallback) times the node's ``speed_factor``.  ``request_ms`` is
+    linear in ``proc_scale`` so the device tick's static per-node scalar
+    reproduces it exactly.
+    """
+
+    def __init__(self, model_id: str = "armada-detector",
+                 mode=ProfileMode.SURROGATE, *,
+                 speed_factor: float = 1.0,
+                 unit_ms: Optional[float] = None,
+                 calibration: Optional[Dict] = None):
+        if model_id not in FAMILY_ARCH and unit_ms is None:
+            raise ValueError(f"unknown model family {model_id!r} "
+                             f"(known: {sorted(FAMILY_ARCH)}) — pass "
+                             "unit_ms= for ad-hoc profiles")
+        self.model_id = model_id
+        self.mode = ProfileMode(mode)
+        self.speed_factor = float(speed_factor)
+        cal = calibration if calibration is not None else load_calibration()
+        fam = cal.get(model_id, {})
+        base = unit_ms if unit_ms is not None else \
+            fam.get("ms_per_frame", FALLBACK_MS.get(model_id, REF_FRAME_MS))
+        self.unit_ms = float(base) * self.speed_factor
+        frac = fam.get("fixed_frac")
+        if frac is None:
+            frac = fixed_fraction(model_id)
+        self.fixed_frac = min(max(float(frac), 0.0), 0.95)
+        self._real = None               # _RealDecode | _RealFrame
+
+    # ------------------------------------------------------------- tick API
+
+    def request_ms(self, proc_scale: float = 1.0) -> float:
+        """Effective per-request service time (ms).  Linear in
+        ``proc_scale`` by contract — see the module docstring."""
+        return self.unit_ms * proc_scale
+
+    def estimate_step_ms(self, n_active: int = 1) -> float:
+        """Surrogate serving-step estimate with ``n_active`` occupied
+        batch slots: affine in occupancy, with the batch-independent
+        share from the roofline split (``fixed_fraction``)."""
+        n = max(int(n_active), 1)
+        return self.unit_ms * (self.fixed_frac + (1.0 - self.fixed_frac) * n)
+
+    def step_ms(self, n_active: int = 1) -> float:
+        """One serving step at the given occupancy — measured wall time
+        in REAL mode, the analytic estimate in SURROGATE mode."""
+        if self.mode is ProfileMode.REAL and self._real is not None:
+            return self._real.step(n_active)
+        return self.estimate_step_ms(n_active)
+
+    def measured_ms(self) -> Optional[float]:
+        """Measured decode/frame EMA from the real backend (``None`` in
+        surrogate mode) — surfaced through captain heartbeats so the
+        surrogate can be sanity-checked against serving reality."""
+        return self._real.ema() if self._real is not None else None
+
+    # ------------------------------------------------------------ real mode
+
+    def attach_real(self, *, reduce_layers: Optional[int] = None,
+                    max_batch: int = 4, max_seq: int = 64,
+                    seed: int = 0) -> "ServingProfile":
+        """Switch to REAL mode: build the jitted backend (a ServeEngine
+        for causal families, a batched frame forward for vision
+        families).  ``reduce_layers`` swaps in the tiny same-family
+        config for CPU-feasible tests."""
+        from repro.config import reduced
+        from repro.configs import get_config
+        cfg = get_config(FAMILY_ARCH.get(self.model_id, self.model_id))
+        if reduce_layers is not None:
+            cfg = reduced(cfg, num_layers=reduce_layers)
+        if cfg.family == "vlm" and not cfg.attention.causal:
+            self._real = _RealFrame(cfg, max_batch=max_batch, seed=seed)
+        else:
+            self._real = _RealDecode(cfg, max_batch=max_batch,
+                                     max_seq=max_seq, seed=seed)
+        self.mode = ProfileMode.REAL
+        return self
+
+    def real_cost(self):
+        """HLO-walker Cost of the real backend's step (None until
+        the backend has compiled)."""
+        return self._real.cost() if self._real is not None else None
+
+
+def attach_profiles(captains, *, families=FAMILIES,
+                    ref_ms: float = REF_FRAME_MS,
+                    calibration: Optional[Dict] = None) -> None:
+    """Heterogeneous-fleet helper: assign the model families round-robin
+    over the captains (deterministic in captain order), preserving each
+    node's relative speed (``spec.proc_ms / ref_ms``) so existing
+    topologies keep their latency ordering."""
+    for i, cap in enumerate(captains):
+        fam = families[i % len(families)]
+        cap.profile = ServingProfile(
+            fam, speed_factor=cap.spec.proc_ms / ref_ms,
+            calibration=calibration)
+
+
+# ------------------------------------------------------------ real backends
+
+class _EmaMixin:
+    """decode/frame-time EMA with the ServeEngine smoothing constants."""
+
+    _ema: Optional[float] = None
+
+    def _fold(self, dt_ms: float) -> float:
+        self._ema = dt_ms if self._ema is None \
+            else 0.3 * dt_ms + 0.7 * self._ema
+        return dt_ms
+
+    def ema(self) -> Optional[float]:
+        return self._ema
+
+
+class _RealFrame(_EmaMixin):
+    """Vision families (detector / facerec): one jitted ``hidden_states``
+    forward over a batch of ``n`` frames per step.  Non-causal frame
+    models have no decode loop — a serving step IS the batched forward."""
+
+    def __init__(self, cfg, *, max_batch: int = 4, seed: int = 0):
+        import jax
+        from repro.models.api import build_model, make_batch
+        self.cfg = cfg
+        self.max_batch = max_batch
+        model = build_model(cfg)
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self._apply = jax.jit(lambda p, b: model.hidden_states(p, b)[0])
+        batch1 = make_batch(cfg, "train", 1, cfg.num_patches + 8,
+                            seed=seed)
+        self._batches = {1: batch1}
+        self._compiled = None
+        self._warm: set = set()
+
+    def _batch(self, n: int):
+        import jax
+        b = self._batches.get(n)
+        if b is None:
+            b = jax.tree.map(
+                lambda x: x.repeat(n, axis=0) if hasattr(x, "ndim")
+                and x.ndim and x.shape[0] == 1 else x, self._batches[1])
+            self._batches[n] = b
+        return b
+
+    def step(self, n_active: int = 1) -> float:
+        import time
+
+        import jax
+        n = min(max(int(n_active), 1), self.max_batch)
+        batch = self._batch(n)
+        if n not in self._warm:
+            jax.block_until_ready(self._apply(self.params, batch))
+            self._warm.add(n)
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._apply(self.params, batch))
+        return self._fold((time.perf_counter() - t0) * 1e3)
+
+    def cost(self):
+        if self._compiled is None:
+            self._compiled = compiled_cost(
+                self._apply.lower(self.params, self._batches[1]).compile())
+        return self._compiled
+
+
+class _RealDecode(_EmaMixin):
+    """Causal (LLM-decode) family: a real ServeEngine with SlotScheduler
+    continuous batching — one step decodes every occupied slot."""
+
+    def __init__(self, cfg, *, max_batch: int = 4, max_seq: int = 64,
+                 seed: int = 0):
+        import jax
+        from repro.models.api import build_model
+        from repro.serving.engine import ServeEngine
+        self.cfg = cfg
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        # eos_id outside the tiny vocab: requests run to max_new_tokens,
+        # keeping slots occupied for as many steps as the caller wants
+        self.engine = ServeEngine(cfg, params, max_batch=max_batch,
+                                  max_seq=max_seq, eos_id=-1)
+        self._n_submitted = 0
+
+    def step(self, n_active: int = 1) -> float:
+        # occupancy is monotone: profiling requests never finish (eos -1,
+        # unbounded max_new_tokens), so measure ascending batch sizes
+        eng = self.engine
+        n = min(max(int(n_active), 1), eng.max_batch)
+        sched = eng.scheduler
+        for _ in range(n - len(sched.active()) - len(sched.queue)):
+            self._n_submitted += 1
+            eng.submit(f"prof-{self._n_submitted}",
+                       [1 + self._n_submitted % 17],
+                       max_new_tokens=1 << 30)
+        eng.step()
+        return self._fold(eng.last_decode_ms)
+
+    def ema(self) -> Optional[float]:
+        return self.engine.decode_ms_ema
+
+    def cost(self):
+        return None

@@ -41,17 +41,27 @@ def export_slot(engine, req: GenRequest) -> bytes:
 
 
 def import_session(engine, data: bytes) -> GenRequest:
-    """Attach a session blob to a free slot of another engine replica."""
+    """Attach a session blob to another engine replica.
+
+    With a free slot the saved cache slice is spliced in immediately.
+    With every slot busy the request **queues** (scheduler FIFO order,
+    behind any waiting fresh requests) carrying its cache slice in
+    ``resume_cache``; the engine's admit path re-splices it on the next
+    free slot instead of prefilling — occupied slots are never touched,
+    and no session is dropped under load."""
     blob = pickle.loads(data)
     assert blob["arch"] == engine.cfg.name, "cross-arch session"
+    req = GenRequest(blob["request_id"], blob["prompt"],
+                     blob["max_new_tokens"],
+                     generated=list(blob["generated"]))
     free = engine.scheduler.free_slots()
     if not free:
-        raise RuntimeError("no free slot")
+        req.resume_cache = blob["cache"]
+        engine.scheduler.submit(req)
+        return req
     slot = free[0]
     sub = jax.tree.map(jnp.asarray, blob["cache"])
     engine.cache = engine._splice(engine.cache, sub, slot)
-    req = GenRequest(blob["request_id"], blob["prompt"],
-                     blob["max_new_tokens"],
-                     generated=list(blob["generated"]), slot=slot)
+    req.slot = slot
     engine.scheduler.slots[slot] = req
     return req

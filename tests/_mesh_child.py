@@ -83,6 +83,9 @@ def _run(mesh, n_users: int, n_per: int, refresh_ms: float = 0.0):
     import repro.core.fused_tick as fused_tick
 
     sys_ = _system(n_per, seed=0)
+    # serving-aware scoring active on BOTH sides: mesh parity covers the
+    # queueing-delay fold in dynamic_state (single == mesh by construction)
+    sys_.am.engine.set_queueing_awareness(SERVICE)
     kw = {"refresh_period_ms": refresh_ms} if refresh_ms else {}
     # the Beacon failover floods the border band with the dead domain's
     # users — size the cap for the whole affected region

@@ -282,6 +282,7 @@ def test_fluid_pool_end_to_end_with_failover():
                for a in pool.active if a >= 0)
 
 
+@pytest.mark.slow       # registration smoke, not an identity pin
 def test_bench_client_scale_smoke_profile():
     """The registered benchmark's --smoke profile runs in tier-1, so the
     population-scale path is exercised on every test run."""

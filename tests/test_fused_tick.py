@@ -47,15 +47,27 @@ def _fluid_system(n_nodes=24, seed=0, spread=0.5):
 
 
 def _run_pool(tick, *, n_users=50, n_nodes=24, seed=0, until=12_000.0,
-              fail=(), frame_interval=500.0):
+              fail=(), frame_interval=500.0, profiled=False,
+              queueing=False, slots=None, workload_scale=1.0):
     sys_ = _fluid_system(n_nodes, seed)
+    if slots is not None:                 # force capacity (saturation tests)
+        for cap in sys_.captains.values():
+            cap.spec.slots = slots
+    if profiled:
+        # heterogeneous serving profiles (detector / facerec / llm-decode
+        # round-robin, speed scaled off each node's proc_ms); calibration={}
+        # pins the deterministic fallback unit times
+        from repro.serving.profile import attach_profiles
+        attach_profiles(sys_.captains.values(), calibration={})
+    if queueing:
+        sys_.am.engine.set_queueing_awareness(SERVICE)
     rng = np.random.default_rng(seed + 1)
     locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
                      -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
     pool = sys_.make_client_pool(
         SERVICE, locs=locs, transport="fluid",
         frame_interval_ms=frame_interval, selection_backend="geo_topk",
-        tick=tick)
+        tick=tick, workload_scale=workload_scale)
     sys_.sim.at(0.0, pool.start)
     for node, t in fail:
         sys_.fail_node(node, t)
@@ -118,6 +130,56 @@ def test_device_tick_matches_host_under_volunteer_churn():
         s.captains["N3"].recover()
         s.sim.run(until=18_000.0)
     _assert_tick_parity(host, dev, 50)
+
+
+def test_device_tick_matches_host_with_profiles_and_queueing():
+    """Serving-aware regime: heterogeneous ServingProfiles set per-node
+    unit times, the fleet is driven into saturation (6 single-slot nodes,
+    4x workload) so the queueing-aware load fold is numerically active —
+    and the
+    fused device tick must still reproduce the host decision stream
+    exactly (the fold happens in ``dynamic_state``, upstream of both)."""
+    # slots=1 + 4x workload on 6 nodes saturates; workload_scale is a
+    # runtime scalar and U/nf/node_pad stay at the suite defaults, so the
+    # device run reuses the already-compiled fused programs
+    hot = dict(until=14_000.0, n_nodes=6, slots=1, workload_scale=4.0,
+               profiled=True, queueing=True)
+    host, hs = _run_pool("host", **hot)
+    dev, _ = _run_pool("device", **hot)
+    _assert_tick_parity(host, dev, 50)
+    assert dev.ticks_run >= 6
+    # the term was genuinely active: backlog built up...
+    assert max(c.queueing_delay_ms() for c in hs.captains.values()) > 0.0
+    # ...and queueing awareness changed at least one decision vs baseline
+    base, _ = _run_pool("host", **{**hot, "queueing": False})
+    assert not np.array_equal(base.active, host.active) or \
+        list(base.switch_t) != list(host.switch_t) or \
+        (base.cand_task != host.cand_task).any()
+
+
+def test_numpy_kernel_parity_with_queueing_backlog():
+    """numpy vs geo_topk index path with the occupancy term active and a
+    real injected backlog: a third of the fleet is saturated, so the
+    queueing fold moves scores — both paths must still rank identically."""
+    sys_ = _fluid_system(24, seed=6)
+    from repro.serving.profile import attach_profiles
+    attach_profiles(sys_.captains.values(), calibration={})
+    sys_.am.engine.set_queueing_awareness(SERVICE)
+    for i, cap in enumerate(sys_.captains.values()):
+        if i % 3 == 0:                    # drown every third node
+            cap.arrive_batch(400.0, 1.0, 1_000.0, 0.0)
+    rng = np.random.default_rng(7)
+    locs = [(44.97 + float(rng.uniform(-.5, .5)),
+             -93.22 + float(rng.uniform(-.5, .5))) for _ in range(20)]
+    eng = sys_.am.engine
+    tasks = sys_.am.tasks[SERVICE]
+    want = eng.candidate_indices(SERVICE, tasks, locs, "wifi")
+    got = eng.candidate_indices_kernel(SERVICE, tasks, locs, "wifi",
+                                       node_pad=32)
+    np.testing.assert_array_equal(got, want)
+    # the saturated nodes actually carry a queueing signal
+    qs = [cap.queueing_delay_ms() for cap in sys_.captains.values()]
+    assert max(qs) > 0.0
 
 
 def test_device_tick_compiles_once_under_churn():

@@ -132,6 +132,7 @@ def test_refresh_identity_period_sweep(period):
 # ------------------------------------------------- overflow -> dense branch
 
 
+@pytest.mark.slow       # ~7 s edge pin; the main identity pin stays fast
 def test_overflow_cap_falls_back_to_full_scan_identically():
     """A refresh_cap smaller than the dirty set must not drop users: the
     program latches overflow and takes the dense branch for that tick,

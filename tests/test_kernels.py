@@ -399,6 +399,7 @@ def test_geo_topk_tiled_vmem_independent_of_n():
     assert geo_vmem(128, 131072) > 64 * 2**20      # untiled would not fit
 
 
+@pytest.mark.slow       # registration smoke, not an identity pin
 def test_geo_topk_autotune_smoke_end_to_end(monkeypatch, tmp_path):
     """The registered ``bench_autotune --smoke`` profile: a tiny
     interpret-mode sweep must run both layouts, cache a winner, and the

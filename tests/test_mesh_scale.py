@@ -87,6 +87,7 @@ def test_mesh_identity_10k_users():
     assert out["switches"] > 0 and out["failovers"] > 0
 
 
+@pytest.mark.slow       # ~20 s: registration smoke, not an identity pin
 def test_bench_mesh_scale_smoke_profile():
     """The registered benchmark's --smoke profile runs in tier-1: the
     multi-device subprocess harness, mesh driver, churn and per-phase
