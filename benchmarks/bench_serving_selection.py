@@ -65,15 +65,18 @@ def _system(n_hot: int, n_res: int, seed: int,
     geohash pre-filter, decides hot-vs-reserve.
 
     ``slot_mult`` fans capacity out *within* each site instead of
-    multiplying the site count: the full profile serves 100x the users
-    on 100x-slot nodes (fat edge sites), holding per-slot demand — and
+    multiplying the site count: the fat-site full profile serves 100x
+    the users on 100x-slot nodes, holding per-slot demand — and
     therefore the fluid queue dynamics (``wait = backlog/slots``) —
     identical to the validated small profile.  Growing the *node* count
-    instead puts hundreds of near-tied reserve nodes in every candidate
-    set; their scores and EMA argmins rotate every tick and the
-    two-round switch confirmation never lands on the same node twice,
-    so no user can leave a drowned node in either mode (see the ROADMAP
-    follow-on on confirmation starvation)."""
+    instead (the ``slot_mult=1`` thin-node profile) rotates hundreds of
+    near-tied reserve nodes through every candidate set; since the
+    switch fix (``switch_decide`` confirms the *nominated* pending task
+    against the per-user EMA table instead of requiring the fresh
+    argmin to repeat) rotation no longer starves confirmation, and a
+    wider candidate fan-out (``top_n``) keeps nominations diverse
+    enough that the dense cluster spreads over the ring instead of
+    herding onto the few closest reserve nodes."""
     rng = np.random.default_rng(seed)
     nodes = {}
     for i in range(n_hot):
@@ -132,8 +135,16 @@ def _locs(n_users: int, dense_frac: float, seed: int) -> np.ndarray:
 def _case(queueing: bool, *, n_users: int, n_hot: int, n_res: int,
           n_ticks: int, flash_scale: float, steady_scale: float,
           flash_ticks: int = 4, seed: int = 0, slot_mult: int = 1,
+          top_n: int = 0, ema_slots: int = 128,
           probe_period: float = 2000.0, frame_interval: float = 1000.0):
     sys_ = _system(n_hot, n_res, seed, slot_mult=slot_mult)
+    if top_n:
+        # thin-node profile: with thousands of near-tied ring nodes the
+        # default top-3 candidate cut collapses everyone onto the few
+        # geographically closest reserve nodes (prox breaks the tie the
+        # same way for the whole dense cluster); a wider fan-out keeps
+        # per-user EMA histories diverse so nominations spread
+        sys_.am.top_n = top_n
     if queueing:
         sys_.am.engine.set_queueing_awareness(SERVICE, norm_ms=NORM_MS)
     pool = sys_.make_client_pool(
@@ -144,8 +155,9 @@ def _case(queueing: bool, *, n_users: int, n_hot: int, n_res: int,
         workload_scale=flash_scale,
         # candidate sets rotate over many distinct nodes as the fleet
         # drains node-by-node; the default 32 EMA slots/user overflow at
-        # the 3200-node full scale
-        ema_slots=128)
+        # the 3200-node thin-node scale (512 needed there — see
+        # _THIN_EMA_SLOTS — vs 128 for the fat-site profile)
+        ema_slots=ema_slots)
     sys_.sim.at(0.0, pool.start)
 
     def _end_flash():
@@ -165,8 +177,18 @@ def _case(queueing: bool, *, n_users: int, n_hot: int, n_res: int,
     p50 = pool.latency_quantile(0.5)
     p99 = pool.latency_quantile(0.99)
     viol = pool.slo_violation_fraction(SLO_MS)
+    # evacuation metric: fraction of the dense cluster still pinned to
+    # the drowned hot nodes at end of run (the starvation signature)
+    hot_ix = np.array([i for i, nm in enumerate(pool._node_ids)
+                       if nm.startswith("H")])
+    act = pool.active
+    n_dense = int(n_users * 0.7)
+    act_node = pool.task_node[np.where(act >= 0, act, 0)]
+    on_hot = np.isin(act_node, hot_ix) & (act >= 0)
+    dense_on_hot = float(on_hot[:n_dense].mean())
     mode = "queueing" if queueing else "proximity"
-    tag = f"serving_sel/u{n_users}_h{n_hot}_r{n_res}/{mode}"
+    thin = "_thin" if slot_mult == 1 and n_hot >= 100 else ""
+    tag = f"serving_sel/u{n_users}_h{n_hot}_r{n_res}{thin}/{mode}"
     # p99 and the SLO-violation fraction ride as companion TIMING rows so
     # the derive hook can compute the headline improvement from the
     # merged artifact (same pattern as bench_client_scale's speedup rows)
@@ -174,14 +196,17 @@ def _case(queueing: bool, *, n_users: int, n_hot: int, n_res: int,
              f"p50_ms={p50:.1f};p99_ms={p99:.1f};"
              f"slo_viol_frac={viol:.4f};slo_ms={SLO_MS:.0f};"
              f"mean_frame_ms={pool.mean_latency():.1f};"
+             f"dense_on_hot={dense_on_hot:.3f};"
              f"ticks={pool.ticks_run};reqs={pool.requests_sent};"
              f"flash_scale={flash_scale};steady_scale={steady_scale};"
-             f"slot_mult={slot_mult}"),
+             f"slot_mult={slot_mult};top_n={top_n or 3}"),
             (tag + "/p99", p99,
              f"slo_viol_frac={viol:.4f};slo_ms={SLO_MS:.0f};"
              f"p50_ms={p50:.1f}"),
             (tag + "/slo_viol_pct", 100.0 * viol,
-             f"slo_ms={SLO_MS:.0f}")]
+             f"slo_ms={SLO_MS:.0f}"),
+            (tag + "/dense_on_hot_pct", 100.0 * dense_on_hot,
+             "stranded dense-cluster fraction at end of run")]
 
 
 # (n_users, n_hot, n_res, n_ticks, flash_scale, steady_scale,
@@ -198,6 +223,17 @@ def _case(queueing: bool, *, n_users: int, n_hot: int, n_res: int,
 # quantiles integrate over exactly that gap.
 _FULL = (102_400, 16, 16, 28, 4.0, 0.3, 100)
 _SMOKE = (512, 8, 8, 10, 4.0, 0.3, 1)
+# thin-node full profile: the same population spread over 1600 1-slot
+# hot nodes + 1600 8-slot ring nodes (slot_mult=1) — the regime where
+# candidate rotation used to starve the two-round switch confirmation
+# and strand the dense cluster in BOTH modes.  With the nominated-
+# pending confirm rule plus a 16-wide candidate fan-out the cluster
+# evacuates; this case exists to keep that fixed
+_THIN_FULL = (102_400, 1_600, 1_600, 28, 4.0, 0.3, 1)
+_THIN_TOP_N = 16
+# 16 candidates/tick rotating over 28 ticks can touch ~450 distinct
+# nodes per user; the EMA table never evicts, so size for the worst case
+_THIN_EMA_SLOTS = 512
 
 
 def run(smoke: bool = False):
@@ -209,6 +245,14 @@ def run(smoke: bool = False):
                           n_res=n_res, n_ticks=n_ticks,
                           flash_scale=flash, steady_scale=steady,
                           slot_mult=mult))
+    if not smoke:
+        n_users, n_hot, n_res, n_ticks, flash, steady, mult = _THIN_FULL
+        for queueing in (False, True):
+            rows.extend(_case(queueing, n_users=n_users, n_hot=n_hot,
+                              n_res=n_res, n_ticks=n_ticks,
+                              flash_scale=flash, steady_scale=steady,
+                              slot_mult=mult, top_n=_THIN_TOP_N,
+                              ema_slots=_THIN_EMA_SLOTS))
     return rows
 
 
@@ -217,8 +261,11 @@ def derive(us_by_name):
     recomputed by the runner over the merged result set so ``--only``
     partial runs never pair a fresh measurement with a stale one."""
     rows = []
-    for n_users, n_hot, n_res, *_ in (_FULL, _SMOKE):
-        pre = f"serving_sel/u{n_users}_h{n_hot}_r{n_res}/"
+    shapes = [(f"serving_sel/u{u}_h{h}_r{r}/", False)
+              for u, h, r, *_ in (_FULL, _SMOKE)]
+    u, h, r, *_ = _THIN_FULL
+    shapes.append((f"serving_sel/u{u}_h{h}_r{r}_thin/", True))
+    for pre, thin in shapes:
         parts = []
         base = us_by_name.get(pre + "proximity/p99")
         aware = us_by_name.get(pre + "queueing/p99")
@@ -228,6 +275,11 @@ def derive(us_by_name):
         av = us_by_name.get(pre + "queueing/slo_viol_pct")
         if bv is not None and av is not None and bv == bv and av == av:
             parts.append(f"slo_viol={bv / 1e5:.4f}->{av / 1e5:.4f}")
+        if thin:
+            # evacuation headline for the thin-node regression case
+            dq = us_by_name.get(pre + "queueing/dense_on_hot_pct")
+            if dq is not None and dq == dq:
+                parts.append(f"dense_on_hot={dq / 1e5:.3f}")
         if parts:
             rows.append((pre + "improvement", None, ";".join(parts)))
     return rows

@@ -82,7 +82,7 @@ class Client:
         self.samples: List[LatencySample] = []
         self.switches: List[dict] = []
         self.downtime_until = 0.0
-        self._pending_switch: Optional[str] = None   # two-round confirmation
+        self._pending_switch: Optional[Task] = None  # two-round confirmation
 
     # ------------------------------------------------------------- control
 
@@ -158,38 +158,49 @@ class Client:
         self.sim.after(self.probe_period, self._probe_tick)
 
     def _maybe_switch(self):
-        """Switch to a better candidate only when it beats the active EMA
-        by the margin on TWO consecutive probe rounds — damps the herd
-        oscillation naive probing causes after mass failures.  Decision
-        logic is the shared ``switch_decide`` array policy on a U=1 row."""
+        """Switch to a better candidate only when the pending nomination
+        still beats the active EMA by the margin one probe round later —
+        damps the herd oscillation naive probing causes after mass
+        failures without starving when the candidate list churns.
+        Decision logic is the shared ``switch_decide`` array policy on a
+        U=1 row; the pending target's EMA/liveness are looked up directly
+        so it confirms even after dropping off the candidate list."""
         if not self.candidates:
             return
-        nodes = [self._task_node(t) for t in self.candidates]
+        cands = self.candidates
+        nodes = [self._task_node(t) for t in cands]
         cur = None if self.active is None else self._task_node(self.active)
-        names = list(dict.fromkeys(
-            nodes + ([cur] if cur else [])
-            + ([self._pending_switch] if self._pending_switch else [])))
-        nid = {n: i for i, n in enumerate(names)}
-        # slot ids stand in for task identity; an active task outside the
-        # candidate list gets a sentinel id no slot can equal
+        # slot ids stand in for task identity; active/pending tasks
+        # outside the candidate list get sentinel ids no slot can equal
         try:
-            a_ix = next(i for i, t in enumerate(self.candidates)
-                        if t is self.active)
+            a_ix = next(i for i, t in enumerate(cands) if t is self.active)
         except StopIteration:
-            a_ix = -1 if self.active is None else len(self.candidates)
-        confirm, best_slot, new_pending = switch_decide(
+            a_ix = -1 if self.active is None else len(cands)
+        p = self._pending_switch
+        try:
+            p_ix = -1 if p is None else next(
+                i for i, t in enumerate(cands) if t is p)
+        except StopIteration:
+            p_ix = len(cands) + 1
+        pend_ema = (np.nan if p is None
+                    else self.ema.get(self._task_node(p), np.nan))
+        pend_alive = (p is not None and p.captain is not None
+                      and p.captain.alive)
+        confirm, target, new_pending = switch_decide(
             np.arange(len(nodes), dtype=np.int64)[None, :],
             np.array([[self.ema.get(n, np.nan) for n in nodes]]),
-            np.array([[nid[n] for n in nodes]]),
             np.array([a_ix]),
             np.array([np.nan if cur is None
                       else self.ema.get(cur, np.nan)]),
-            np.array([nid.get(self._pending_switch, -1)]),
-            self.switch_margin)
-        p = int(new_pending[0])
-        self._pending_switch = None if p < 0 else names[p]
+            np.array([p_ix]), np.array([pend_ema]),
+            np.array([pend_alive]), self.switch_margin)
+        np_ix = int(new_pending[0])
+        self._pending_switch = (None if np_ix < 0
+                                else cands[np_ix] if np_ix < len(cands)
+                                else p)
         if confirm[0]:
-            best = self.candidates[int(best_slot[0])]
+            t_ix = int(target[0])
+            best = cands[t_ix] if t_ix < len(cands) else p
             self.switches.append({"t": self.sim.now, "from": cur,
                                   "to": self._task_node(best)})
             self.active = best

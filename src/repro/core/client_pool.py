@@ -120,19 +120,35 @@ def ema_fold(prev, ms, alpha: float, xp=np):
     return xp.where(has, alpha * ms + (1 - alpha) * prev, ms)
 
 
-def switch_decide(cand_task, cand_ema, cand_node, active_task, active_ema,
-                  pending_node, margin: float, xp=np):
+def switch_decide(cand_task, cand_ema, active_task, active_ema,
+                  pending_task, pend_ema, pend_alive, margin: float, xp=np):
     """Two-round confirmed switch (``Client._maybe_switch``, vectorized).
 
-    Rows are users; ``cand_task``/``cand_node`` are (U, C) int arrays
-    padded with -1, ``cand_ema`` the matching EMA values (NaN unknown),
-    ``active_task`` the current task per user (-1 none), ``active_ema``
-    the active node's EMA (NaN if unknown), ``pending_node`` the node a
-    first better-round nominated (-1 none).
+    Rows are users; ``cand_task`` is a (U, C) int array padded with -1,
+    ``cand_ema`` the matching EMA values (NaN unknown), ``active_task``
+    the current task per user (-1 none), ``active_ema`` the active
+    node's EMA (NaN if unknown).  ``pending_task`` is the task a first
+    better-round nominated (-1 none); the caller supplies the pending
+    target's current standing — ``pend_ema`` from its EMA table (NaN no
+    sample) and ``pend_alive`` (False when -1 or the task died) —
+    because the pending target is judged on its OWN merit, not through
+    the candidate list.
 
-    Returns ``(confirm, best_slot, new_pending)``: users to switch, the
-    winning candidate slot, and the updated pending state.  Pure in
-    ``xp`` — runs under numpy or jax.numpy unchanged.
+    Round 1 nominates the instantaneous EMA-argmin; round 2 confirms
+    against the NOMINATED task — "is my pending target still better
+    than my active?" — not against a fresh argmin, and not through
+    candidate-list membership.  Both stricter rules starve convergence
+    with hundreds of near-tied candidates: load-feedback in the
+    scoring rotates the candidate set every tick, so the nomination
+    never reappears (neither as argmin nor as a member) and no user can
+    ever leave a drowned node (the bench_serving_selection thin-node
+    case).  A pending target that went stale — dead or no longer
+    margin-better — falls back to a fresh nomination.
+
+    Returns ``(confirm, target_task, new_pending)``: users to switch,
+    the task to switch to (the confirmed pending target for confirmed
+    rows, the fresh argmin otherwise), and the updated pending state.
+    Pure in ``xp`` — runs under numpy or jax.numpy unchanged.
     """
     valid = cand_task >= 0
     known = valid & ~xp.isnan(cand_ema)
@@ -142,14 +158,21 @@ def switch_decide(cand_task, cand_ema, cand_node, active_task, active_ema,
     rows = xp.arange(cand_task.shape[0])
     best_ema = masked[rows, best_slot]
     best_task = cand_task[rows, best_slot]
-    best_node = cand_node[rows, best_slot]
     better = (eligible & (best_task != active_task)
               & ~xp.isnan(active_ema) & (best_ema < margin * active_ema))
-    confirm = better & (pending_node == best_node)
+    # round 2: the pending nomination confirms on its own merit.  NOT
+    # gated on ``eligible`` — under full rotation this tick's fresh
+    # candidates are all still unprobed (every EMA NaN), and requiring a
+    # known candidate would block confirmation forever
+    has_pend = (pending_task >= 0) & pend_alive & ~xp.isnan(pend_ema)
+    confirm = (has_pend & (pending_task != active_task)
+               & (active_task >= 0) & ~xp.isnan(active_ema)
+               & (pend_ema < margin * active_ema))
+    target_task = xp.where(confirm, pending_task, best_task)
     new_pending = xp.where(
-        confirm, -1, xp.where(better, best_node,
-                              xp.where(eligible, -1, pending_node)))
-    return confirm, best_slot, new_pending
+        confirm, -1, xp.where(better, best_task,
+                              xp.where(eligible, -1, pending_task)))
+    return confirm, target_task, new_pending
 
 
 def failover_pick(cand_task, cand_ema, xp=np):
@@ -465,9 +488,15 @@ class ClientPool:
                  ema_slots: Optional[int] = None,
                  mesh=None,
                  refresh_period_ms: Optional[float] = None,
-                 refresh_cap: Optional[int] = None):
+                 refresh_cap: Optional[int] = None,
+                 data_profile=None):
         if transport not in ("events", "fluid"):
             raise ValueError(f"unknown transport {transport!r}")
+        if data_profile is not None and transport != "fluid":
+            raise ValueError(
+                "data_profile=... folds a per-window Cargo access term "
+                "into the fluid latency model — the events transport "
+                "models per-request I/O through Cargo.read/write instead")
         if refresh_period_ms is not None:
             if transport != "fluid":
                 raise ValueError(
@@ -552,6 +581,12 @@ class ClientPool:
         self.refresh_period = refresh_period_ms
         self.refresh_cap = refresh_cap
         self._rt: Optional[_RefreshTracker] = None
+        # in-situ data plane: per-request Cargo access profile
+        # (``repro.core.storage.cargo_manager.DataProfile``).  Every tick
+        # path folds the same host-computed per-user ``data_ms`` into the
+        # frame latency model — see ``_data_node_ms``
+        self.data_profile = data_profile
+        self._data_reps = None          # (nearest, reps) of the last tick
         # client-side Beacon discovery (engine.discovery_ms): bootstrap
         # pays one window before the first selection; a handoff charges
         # per-user windows that gate candidate refreshes only
@@ -978,17 +1013,23 @@ class ClientPool:
         act_node = np.where(act >= 0, self.task_node[
             np.where(act >= 0, act, 0)], -1)
         act_ema = np.where(act >= 0, self.ema_tab.get(sel, act_node), np.nan)
-        confirm, best_slot, new_pending = switch_decide(
-            cand, cand_ema, cand_node, act, act_ema, self.pending[sel],
+        pend = self.pending[sel]
+        pend_safe = np.where(pend >= 0, pend, 0)
+        pend_node = np.where(pend >= 0, self.task_node[pend_safe], -1)
+        pend_ema = np.where(pend >= 0, self.ema_tab.get(sel, pend_node),
+                            np.nan)
+        pend_alive = (pend >= 0) & self._view().alive_mask()[pend_safe]
+        confirm, target, new_pending = switch_decide(
+            cand, cand_ema, act, act_ema, pend, pend_ema, pend_alive,
             self.switch_margin)
         self.pending[sel] = new_pending
         if confirm.any():
             rows = np.nonzero(confirm)[0]
             users = sel[rows]
-            to_task = cand[rows, best_slot[rows]]
+            to_task = target[rows]
             now = self.sim.now
             for u, frm, to in zip(users, act_node[rows],
-                                  cand_node[rows, best_slot[rows]]):
+                                  self.task_node[to_task]):
                 self.switch_t.append(now)
                 self.switch_user.append(int(u))
                 self.switch_from.append(self._node_ids[frm])
@@ -1285,6 +1326,13 @@ class ClientPool:
             proc[nodes] * self.workload_scale, 0.06)
         back = self.sim.jitter_batch(rtt / 2, 0.08)
         lat = rtt / 2 + wait + np.maximum(proc_ms, 0.1) + back
+        data = self._data_node_ms()
+        if data is not None:
+            # in-situ data access rides the frame (request) path only —
+            # probes stay pure network/queue measurements
+            f_nodes = nodes[p_users.size:]
+            lat[p_users.size:] += data[f_nodes]
+            self._charge_reads(f_nodes, window)
         self.requests_sent += users.size
 
         is_probe = np.zeros(users.size, bool)
@@ -1329,6 +1377,54 @@ class ClientPool:
     def _retry_fluid(self, users: List[int]):
         sel = np.asarray(users, np.int64)
         self._refresh(sel, initial=True)
+
+    # --------------------------------------------- in-situ data plane (fluid)
+
+    def _data_node_ms(self) -> Optional[np.ndarray]:
+        """(n_nodes,) per-NODE Cargo access latency for this window, or
+        None when the pool has no ``data_profile`` (or the service no
+        alive placement).  Computed host-side once per tick from each
+        node's nearest alive replica + measured read EMA
+        (``CargoManager.data_ms_for_nodes``) and gathered per user by
+        active node — the same single-injection idiom as the queueing
+        fold, so host, geo_topk, device, and mesh ticks consume
+        identical values by construction."""
+        if self.data_profile is None:
+            return None
+        cm = getattr(self.am, "cargo_manager", None)
+        if cm is None or not self._node_ids:
+            return None
+        n = len(self._node_ids)
+        lats = np.zeros(n)
+        lons = np.zeros(n)
+        has_loc = np.zeros(n, bool)
+        for i, cap in enumerate(self._node_caps):
+            if cap is not None:
+                lats[i], lons[i] = cap.spec.loc
+                has_loc[i] = True
+        out = cm.data_ms_for_nodes(self.service_id, self.data_profile,
+                                   lats, lons)
+        if out is None:
+            self._data_reps = None
+            return None
+        ms, nearest, reps = out
+        self._data_reps = (nearest, reps)
+        # nodes without a captain handle never serve frames; zero them so
+        # a stray gather can't inject a garbage latency
+        return np.where(has_loc, ms, 0.0)
+
+    def _charge_reads(self, f_nodes: np.ndarray, window: float):
+        """Report this window's aggregated frame reads to the Cargo
+        Manager: each frame charges ``reads_per_request`` reads to the
+        nearest replica of its serving node (the read-throughput signal
+        behind hot-store auto-scaling)."""
+        reads = float(self.data_profile.reads_per_request)
+        if self._data_reps is None or reads <= 0 or f_nodes.size == 0:
+            return
+        nearest, reps = self._data_reps
+        counts = np.bincount(nearest[f_nodes], minlength=len(reps)) * reads
+        self.am.cargo_manager.note_read_load(self.service_id, reps,
+                                             counts, window)
 
     def _user_codes(self) -> np.ndarray:
         """Full-precision Morton codes of the user locations (cached) —

@@ -98,7 +98,7 @@ class FusedTickState(NamedTuple):
     ema_overflow: jnp.ndarray   # () bool
     cand: jnp.ndarray           # (U, k) i32 candidate task positions, -1 pad
     active: jnp.ndarray         # (U,) i32 active task position, -1 none
-    pending: jnp.ndarray        # (U,) i32 pending-switch node index, -1 none
+    pending: jnp.ndarray        # (U,) i32 pending-switch task index, -1 none
     running: jnp.ndarray        # (U,) bool
     ticking: jnp.ndarray        # (U,) bool probe-tick membership
     reinit: jnp.ndarray         # (U,) bool lost every candidate; re-enter
@@ -519,17 +519,24 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
     active = jnp.where(do_init, init_active, active)
     reinit = jnp.where(do_init & has_cand, False, reinit)
 
-    # 4. two-round confirmed switch on the freshly folded EMAs
+    # 4. two-round confirmed switch on the freshly folded EMAs.  The
+    #    pending target is judged from the EMA table + task-alive mask
+    #    directly (not via candidate-list membership — the candidate set
+    #    rotates under load feedback)
     cand_node = jnp.where(cand >= 0, tn[jnp.clip(cand, 0)], -1)
     act_node = jnp.where(active >= 0, tn[jnp.clip(active, 0)], -1)
     cand_ema = _ema_get_matrix(enodes, evals, cand_node)
     act_ema = _ema_get(enodes, evals, act_node)
-    confirm, best_slot, new_pending = switch_decide(
-        cand, cand_ema, cand_node, active, act_ema, state.pending,
+    pend = state.pending
+    pend_node = jnp.where(pend >= 0, tn[jnp.clip(pend, 0)], -1)
+    pend_ema = _ema_get(enodes, evals, pend_node)
+    pend_alive = (pend >= 0) & alive[jnp.clip(pend, 0)]
+    confirm, target, new_pending = switch_decide(
+        cand, cand_ema, active, act_ema, pend, pend_ema, pend_alive,
         margin, xp=jnp)
     confirm = confirm & tick_mask
     pending = jnp.where(tick_mask, new_pending, state.pending)
-    active = jnp.where(confirm, cand[rows, best_slot], active)
+    active = jnp.where(confirm, target, active)
 
     # 5. next-window traffic: probes to every live candidate, frames to
     #    the live active
@@ -555,11 +562,15 @@ def _tick_impl(state, static, free, sched, alive, need, deaths, n_deaths,
 
 def _traffic_impl(state, static, work0, net_rate, probe_ok, frame_ok,
                   e_rtt_p, e_proc_p, e_back_p, e_rtt_f, e_proc_f, e_back_f,
-                  scale, frame_interval):
+                  data_f, scale, frame_interval):
     """Fluid-window latencies for the traffic the tick scheduled, stashed
     into the state for the next tick's fold.  Mirrors the host
     ``_traffic_fluid`` arithmetic: ``wait(tau) = max(0, work0 +
-    net_rate * tau) / slots``, multiplicative jitter on rtt/proc/back."""
+    net_rate * tau) / slots``, multiplicative jitter on rtt/proc/back.
+    ``data_f`` is the (U,) per-user in-situ data-access term (zeros when
+    the pool has no data profile), computed host-side from each user's
+    active node and added to FRAME latencies only — probes stay pure
+    network/queue measurements, exactly like the host tick."""
     COMPILE_COUNTS["traffic"] += 1
     tn = static.task_node
     nf = state.lat_frame.shape[1]
@@ -585,7 +596,8 @@ def _traffic_impl(state, static, work0, net_rate, probe_ok, frame_ok,
     proc_f = (static.node_proc[node_f][:, None] * scale) \
         * (1 + 0.06 * e_proc_f)
     back_f = (rtt_f / 2) * (1 + 0.08 * e_back_f)
-    lat_f = rtt_f / 2 + wait_f + jnp.maximum(proc_f, 0.1) + back_f
+    lat_f = rtt_f / 2 + wait_f + jnp.maximum(proc_f, 0.1) + back_f \
+        + data_f[:, None]
     lat_frame = jnp.where(frame_ok[:, None], lat_f, jnp.nan)
     return state._replace(lat_probe=lat_probe, lat_frame=lat_frame)
 
@@ -672,11 +684,12 @@ def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
             refresh_fallback=outs.refresh_fallback.reshape(1))
 
     def traffic_body(state, static, work0, net_rate, probe_ok, frame_ok,
-                     e1p, e2p, e3p, e1f, e2f, e3f, scale, frame_interval):
+                     e1p, e2p, e3p, e1f, e2f, e3f, data_f, scale,
+                     frame_interval):
         COMPILE_COUNTS["mesh_traffic"] += 1
         return _traffic_impl(state, static, work0, net_rate, probe_ok,
                              frame_ok, e1p, e2p, e3p, e1f, e2f, e3f,
-                             scale, frame_interval)
+                             data_f, scale, frame_interval)
 
     def flush_body(state, static, deaths, n_deaths, alpha):
         COMPILE_COUNTS["mesh_flush"] += 1
@@ -690,7 +703,7 @@ def _make_mesh_programs(mesh, users_axis: str, p_min: int, border_cap: int,
     traffic = jax.jit(shard_map(
         traffic_body, mesh=mesh,
         in_specs=(ps_u, static_spec, ps_r, ps_r, ps_u, ps_u,
-                  ps_u, ps_u, ps_u, ps_u, ps_u, ps_u, ps_r, ps_r),
+                  ps_u, ps_u, ps_u, ps_u, ps_u, ps_u, ps_u, ps_r, ps_r),
         out_specs=ps_u, check_rep=False), donate_argnums=_DONATE)
     flush = jax.jit(shard_map(
         flush_body, mesh=mesh,
@@ -1042,7 +1055,20 @@ class FusedTickDriver:
             return dp, df
 
         (e1p, e1f), (e2p, e2f), (e3p, e3f) = map(split, eps)
-        self._push_traffic(work0, net_rate, probe_ok, frame_ok,
+        # in-situ data access rides the frame (request) path only — the
+        # per-user term is host-computed once and injected into every
+        # backend identically (decision identity by construction)
+        data_f = np.zeros(len(frame_ok), np.float32)
+        data = pool._data_node_ms()
+        if data is not None and f_nodes.size:
+            data_f[frame_ok] = data[f_nodes]
+            nearest, reps = pool._data_reps
+            reads = pool.data_profile.reads_per_request * nf
+            rep_counts = np.bincount(nearest[f_nodes],
+                                     minlength=len(reps)) * reads
+            pool.am.cargo_manager.note_read_load(
+                pool.service_id, reps, rep_counts, pool.probe_period)
+        self._push_traffic(work0, net_rate, probe_ok, frame_ok, data_f,
                            ((e1p, e1f), (e2p, e2f), (e3p, e3f)))
         self._stash_dirty = True
         if pool._lat_hist is not None:
@@ -1055,12 +1081,13 @@ class FusedTickDriver:
                 pool._lat_hist += np.histogram(
                     lat, bins=pool._lat_edges)[0]
 
-    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):
+    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, data_f,
+                      splits):
         pool = self.pool
         (e1p, e1f), (e2p, e2f), (e3p, e3f) = splits
         self.state = _fused_traffic(
             self.state, self.static, work0, net_rate, probe_ok, frame_ok,
-            e1p, e2p, e3p, e1f, e2f, e3f, pool.workload_scale,
+            e1p, e2p, e3p, e1f, e2f, e3f, data_f, pool.workload_scale,
             pool.frame_interval)
 
     # ------------------------------------------------------- maintenance
@@ -1421,7 +1448,8 @@ class MeshTickDriver(FusedTickDriver):
         self._note_refreshed(dirty, r_ok, outs)
         return outs
 
-    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, splits):
+    def _push_traffic(self, work0, net_rate, probe_ok, frame_ok, data_f,
+                      splits):
         pool = self.pool
         prog = self._programs_for()
         td = self._to_dev
@@ -1430,7 +1458,7 @@ class MeshTickDriver(FusedTickDriver):
             self.state, self.static, work0, net_rate,
             td(probe_ok, False), td(frame_ok, False),
             td(e1p), td(e2p), td(e3p), td(e1f), td(e2f), td(e3f),
-            pool.workload_scale, pool.frame_interval)
+            td(data_f), pool.workload_scale, pool.frame_interval)
 
     def _run_flush(self, deaths, n_deaths):
         prog = self._programs_for()

@@ -9,7 +9,9 @@ followed by a Beacon fault-domain failover and recovery — once on the
 single-device fused tick and once on the 4-device mesh-sharded tick,
 and the decision streams must match exactly: candidate matrices,
 actives, pending, switch records, failover counts, EMA tables (fp32
-rounding).  A band of users placed midway between two metros sits
+rounding).  The in-situ storage data plane is active throughout
+(``data_profile`` + two regional Cargos), so the parity pin also covers
+the host-computed per-user data term and its read charge-back.  A band of users placed midway between two metros sits
 outside every home shard: on the mesh they straddle a device boundary
 and are served through the fixed-capacity border pass.
 
@@ -63,6 +65,18 @@ def _system(n_per_region: int, seed: int):
         cap.tasks[t.task_id] = t
         sys_.am.tasks[SERVICE].append(t)
     sys_.am.autoscale_enabled = False
+    # in-situ storage: Cargos in two of the four regions, so the
+    # per-user data term varies across shards (users in R2/R3 pay a
+    # longer replica hop than R0/R1) and the mesh parity pin covers the
+    # host-computed data_ms injection end-to-end
+    from repro.core.storage.cargo import Cargo
+    for nid in ("R0N0", "R1N0"):
+        cg = Cargo(sys_.sim, sys_.topo, sys_.topo.nodes[nid])
+        sys_.cargos[nid] = cg
+        sys_.beacon.register_cargo(cg)
+    spec = ServiceSpec(SERVICE, detection_image(), need_storage=True,
+                       locations=[sys_.topo.nodes["R0N0"].loc])
+    sys_.cargo_manager.store_register(spec, initial={"k": bytes(1024)})
     return sys_
 
 
@@ -81,6 +95,7 @@ def _locs(n_users: int, seed: int) -> np.ndarray:
 
 def _run(mesh, n_users: int, n_per: int, refresh_ms: float = 0.0):
     import repro.core.fused_tick as fused_tick
+    from repro.core.storage.cargo_manager import DataProfile
 
     sys_ = _system(n_per, seed=0)
     # serving-aware scoring active on BOTH sides: mesh parity covers the
@@ -93,6 +108,7 @@ def _run(mesh, n_users: int, n_per: int, refresh_ms: float = 0.0):
         SERVICE, locs=_locs(n_users, seed=0), transport="fluid",
         frame_interval_ms=500.0, selection_backend="geo_topk",
         tick="device", mesh=mesh,
+        data_profile=DataProfile(1.0, 0.2, "eventual"),
         shard_border_cap=max(256, n_users // 2), **kw)
     sys_.sim.at(0.0, pool.start)
     sys_.fail_node("R0N1", 4_200.0)
@@ -119,7 +135,7 @@ def _run(mesh, n_users: int, n_per: int, refresh_ms: float = 0.0):
     sys_.captains["R1N2"].recover()
     sys_.sim.run(until=20_100.0)
     assert not sys_.sim.truncated
-    return pool, churn_delta
+    return pool, churn_delta, sys_
 
 
 def _assert_parity(host, dev, n_users: int) -> None:
@@ -152,10 +168,21 @@ def main() -> None:
     import jax
     assert len(jax.devices()) >= 4, jax.devices()
 
-    single, _ = _run(None, n_users, n_per, refresh_ms)
-    mesh, churn_delta = _run(4, n_users, n_per, refresh_ms)
+    single, _, sys_s = _run(None, n_users, n_per, refresh_ms)
+    mesh, churn_delta, sys_m = _run(4, n_users, n_per, refresh_ms)
     assert mesh._dev._sharded, "mesh driver should be region-sharded"
     _assert_parity(single, mesh, n_users)
+
+    # the in-situ data plane charged identically on both paths: same
+    # read totals and measured rates on every Cargo replica
+    reads = 0
+    for nid in sys_s.cargos:
+        assert (sys_s.cargos[nid].reads_total
+                == sys_m.cargos[nid].reads_total), f"{nid} reads diverge"
+        np.testing.assert_allclose(sys_s.cargos[nid].read_rate,
+                                   sys_m.cargos[nid].read_rate)
+        reads += sys_s.cargos[nid].reads_total
+    assert reads > 0, "data term never charged a read"
 
     # the border band is outside every home shard yet fully served —
     # identically on both paths (covered by the parity assert above)
@@ -174,6 +201,7 @@ def main() -> None:
         "switches": len(single.switch_t),
         "failovers": single.failovers,
         "border_users": int(border.size),
+        "cargo_reads": int(reads),
     }
     if refresh_ms:
         # the host-side dirty tracker is shared logic: the mesh driver

@@ -136,31 +136,64 @@ def test_pool_parity_with_autoscaler_demand():
 # pure policy functions
 # ---------------------------------------------------------------------------
 
+def _sd(cand_ema, active_ema, pend, pend_ema, margin=0.95,
+        pend_alive=True, cand_task=None, active=None):
+    """switch_decide on one row with scalar-friendly args."""
+    ct = np.array([[0, 1, 2]]) if cand_task is None else cand_task
+    act = np.array([0]) if active is None else active
+    return switch_decide(
+        ct, np.asarray(cand_ema, float), act,
+        np.array([active_ema], float), np.array([pend]),
+        np.array([pend_ema], float), np.array([pend_alive]), margin)
+
+
 def test_switch_decide_two_round_confirmation():
-    cand_task = np.array([[0, 1, 2]])
-    cand_node = np.array([[10, 11, 12]])
-    active = np.array([0])
-    pend = np.array([-1])
     # candidate 1 beats active by > margin: round 1 nominates, no switch
-    ema = np.array([[100.0, 50.0, np.nan]])
-    confirm, slot, pend = switch_decide(
-        cand_task, ema, cand_node, active, np.array([100.0]), pend, 0.95)
-    assert not confirm[0] and pend[0] == 11
-    # round 2 confirms
-    confirm, slot, pend = switch_decide(
-        cand_task, ema, cand_node, active, np.array([100.0]), pend, 0.95)
-    assert confirm[0] and slot[0] == 1 and pend[0] == -1
+    ema = [[100.0, 50.0, np.nan]]
+    confirm, target, pend = _sd(ema, 100.0, -1, np.nan)
+    assert not confirm[0] and pend[0] == 1
+    # round 2 confirms: the pending task's own EMA still clears
+    confirm, target, pend = _sd(ema, 100.0, int(pend[0]), 50.0)
+    assert confirm[0] and target[0] == 1 and pend[0] == -1
     # a margin miss clears pending
-    ema2 = np.array([[100.0, 97.0, np.nan]])
-    _, _, pend = switch_decide(
-        cand_task, ema2, cand_node, active, np.array([100.0]),
-        np.array([11]), 0.95)
-    assert pend[0] == -1
+    confirm, _, pend = _sd([[100.0, 97.0, np.nan]], 100.0, 1, 97.0)
+    assert not confirm[0] and pend[0] == -1
     # ineligible rows (no EMA data) leave pending untouched
-    _, _, pend = switch_decide(
-        cand_task, np.full((1, 3), np.nan), cand_node, active,
-        np.array([np.nan]), np.array([11]), 0.95)
-    assert pend[0] == 11
+    confirm, _, pend = _sd([[np.nan] * 3], np.nan, 1, np.nan)
+    assert not confirm[0] and pend[0] == 1
+
+
+def test_switch_decide_confirms_nominated_not_fresh_argmin():
+    """Starvation fix (ROADMAP, filed from PR 9): round 2 asks whether
+    the NOMINATED pending task still beats the active by the margin —
+    not whether the instantaneous argmin repeated, and not whether the
+    nomination is still a candidate.  With hundreds of near-tied
+    candidates load feedback rotates both the argmin and the candidate
+    set every tick; under either stricter rule no user can ever leave a
+    drowned node."""
+    # round 1: slot 1 is the argmin -> nominated
+    confirm, target, pend = _sd([[100.0, 50.0, 50.5]], 100.0, -1, np.nan)
+    assert not confirm[0] and pend[0] == 1
+    # round 2: jitter rotates the argmin to slot 2, but the nominated
+    # task 1 still clears the margin -> the switch must confirm to 1
+    confirm, target, pend = _sd([[100.0, 50.5, 50.0]], 100.0, 1, 50.5)
+    assert confirm[0] and target[0] == 1 and pend[0] == -1
+    # a pending that dropped off the candidate list still confirms on
+    # its table EMA (candidate rotation must not starve confirmation)
+    confirm, target, pend = _sd([[100.0, 50.5, 50.0]], 100.0, 99, 50.0)
+    assert confirm[0] and target[0] == 99 and pend[0] == -1
+    # a dead pending falls back to a fresh nomination of the argmin
+    confirm, target, pend = _sd([[100.0, 50.5, 50.0]], 100.0, 99, 50.0,
+                                pend_alive=False)
+    assert not confirm[0] and pend[0] == 2
+    # a pending that no longer clears the margin is dropped even when a
+    # different candidate would qualify (fresh nomination next tick)
+    confirm, target, pend = _sd([[100.0, 97.0, 50.0]], 100.0, 1, 97.0)
+    assert not confirm[0] and pend[0] == 2
+    # a pending with no EMA sample yet cannot confirm; the argmin
+    # renominates
+    confirm, target, pend = _sd([[100.0, 50.5, 50.0]], 100.0, 99, np.nan)
+    assert not confirm[0] and pend[0] == 2
 
 
 def test_mode_filter_semantics():
@@ -215,13 +248,16 @@ def test_policy_functions_match_under_jax_numpy():
     active = rng.integers(-1, 10, u)
     active_ema = np.where(rng.random(u) < 0.3, np.nan,
                           rng.uniform(10, 100, u))
-    pending = rng.integers(-1, 6, u)
-    got_np = switch_decide(cand_task, cand_ema, cand_node, active,
-                           active_ema, pending, 0.95, xp=np)
+    pending = rng.integers(-1, 10, u)
+    pend_ema = np.where(rng.random(u) < 0.3, np.nan,
+                        rng.uniform(10, 100, u))
+    pend_alive = rng.random(u) < 0.8
+    got_np = switch_decide(cand_task, cand_ema, active, active_ema,
+                           pending, pend_ema, pend_alive, 0.95, xp=np)
     got_j = switch_decide(jnp.asarray(cand_task), jnp.asarray(cand_ema),
-                          jnp.asarray(cand_node), jnp.asarray(active),
-                          jnp.asarray(active_ema), jnp.asarray(pending),
-                          0.95, xp=jnp)
+                          jnp.asarray(active), jnp.asarray(active_ema),
+                          jnp.asarray(pending), jnp.asarray(pend_ema),
+                          jnp.asarray(pend_alive), 0.95, xp=jnp)
     for a, b in zip(got_np, got_j):
         np.testing.assert_array_equal(a, np.asarray(b))
     prev = np.where(rng.random(u) < 0.5, np.nan, rng.uniform(10, 100, u))

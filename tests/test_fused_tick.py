@@ -262,3 +262,153 @@ def test_device_tick_survives_total_candidate_loss_and_recovery():
     sys_.sim.run(until=12_000.0)
     assert (pool.active >= 0).all()
     assert np.isfinite(pool.mean_latency())
+
+
+# ---------------------------------------------------------------------------
+# switch-confirmation starvation (ROADMAP regression, filed from PR 9)
+# ---------------------------------------------------------------------------
+
+def _starved_system(n_thin=23, seed=2):
+    """One desirable-looking node whose single slot drowns under load,
+    ringed by near-tied thin alternatives: every user wants out of HOT,
+    but the thin nodes' EMAs stay within jitter of each other so the
+    instantaneous per-tick argmin rotates — the exact regime where the
+    old confirm-against-fresh-argmin rule starved every switch."""
+    nodes = {"HOT": NodeSpec("HOT", (44.97, -93.22), proc_ms=12.0,
+                             slots=1)}
+    for i in range(n_thin):
+        ang = 2 * np.pi * i / n_thin
+        nodes[f"T{i}"] = NodeSpec(
+            f"T{i}", (44.97 + 0.3 * float(np.cos(ang)),
+                      -93.22 + 0.3 * float(np.sin(ang))),
+            proc_ms=20.0, slots=2)
+    topo = Topology(nodes, {})
+    sys_ = ArmadaSystem(topo, seed=seed, trace_enabled=False,
+                        include_cloud_compute=False)
+    sys_.am.services[SERVICE] = ServiceSpec(SERVICE, detection_image())
+    sys_.am.tasks[SERVICE] = []
+    sys_.am.users[SERVICE] = []
+    for i, cap in enumerate(sys_.captains.values()):
+        t = Task(f"{SERVICE}/t{i}", SERVICE, captain=cap, status="running",
+                 ready_at=0.0)
+        cap.tasks[t.task_id] = t
+        sys_.am.tasks[SERVICE].append(t)
+    sys_.am.autoscale_enabled = False
+    return sys_
+
+
+# 50 users x 24 nodes x 500 ms frames matches _run_pool's shapes AND
+# static config, so the device program compiled by earlier tests in
+# this session is reused here (a fresh shape would recompile ~5 s)
+def _run_starved(tick, backend, *, n_users=50, until=20_000.0):
+    sys_ = _starved_system()
+    rng = np.random.default_rng(3)
+    locs = np.stack([44.97 + rng.uniform(-.02, .02, n_users),
+                     -93.22 + rng.uniform(-.02, .02, n_users)], axis=1)
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend=backend, tick=tick, workload_scale=12.0)
+    sys_.sim.at(0.0, pool.start)
+    sys_.sim.run(until=until)
+    pool.mean_latency()         # flush: sync device actives to the host
+    hot_task = next(i for i, t in enumerate(sys_.am.tasks[SERVICE])
+                    if t.captain.node_id == "HOT")
+    return pool, hot_task
+
+
+def test_switch_starvation_near_tie_evacuates_all_paths():
+    """The drowned node empties on every tick path, and the decision
+    streams stay locked: host numpy == geo_topk kernel == fused device.
+    (The mesh driver consumes the same device decision code;
+    tests/_mesh_child.py pins its stream against the device's.)"""
+    runs = {
+        "host-numpy": _run_starved("host", "numpy"),
+        "host-kernel": _run_starved("host", "geo_topk"),
+        "device": _run_starved("device", "geo_topk"),
+    }
+    base_pool, hot_task = runs["host-numpy"]
+    # the crowd initially lands on the fast nearby node...
+    first_active = np.asarray(
+        [base_pool.switch_from[base_pool.switch_user.index(u)]
+         for u in set(base_pool.switch_user)])
+    assert (first_active == "HOT").mean() > 0.5
+    for name, (pool, hot) in runs.items():
+        stranded = int((pool.active == hot).sum())
+        assert stranded <= 6, \
+            f"{name}: {stranded} users starved on the drowned node"
+        assert len(pool.switch_t) >= 32, f"{name}: too few switches"
+    _assert_tick_parity(runs["host-kernel"][0], runs["device"][0], 50)
+    a, b = runs["host-numpy"][0], runs["host-kernel"][0]
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.pending, b.pending)
+    assert list(a.switch_t) == list(b.switch_t)
+
+
+# ---------------------------------------------------------------------------
+# in-situ data plane (data_profile): identity + effect
+# ---------------------------------------------------------------------------
+
+def _data_system(n_nodes=24, seed=0):
+    from repro.core.storage.cargo import Cargo
+    sys_ = _fluid_system(n_nodes, seed)
+    for nid in ("N0", "N3", "N7"):
+        cg = Cargo(sys_.sim, sys_.topo, sys_.topo.nodes[nid])
+        sys_.cargos[nid] = cg
+        sys_.beacon.register_cargo(cg)
+    spec = ServiceSpec(SERVICE, detection_image(), need_storage=True,
+                       locations=[sys_.topo.nodes["N0"].loc])
+    sys_.cargo_manager.store_register(spec, initial={"k": bytes(1024)})
+    return sys_
+
+
+def _run_data_pool(tick, *, profile, n_users=50, until=14_000.0,
+                   backend="geo_topk"):
+    from repro.core.storage.cargo_manager import DataProfile
+    sys_ = _data_system()
+    rng = np.random.default_rng(1)
+    locs = np.stack([44.97 + rng.uniform(-.5, .5, n_users),
+                     -93.22 + rng.uniform(-.5, .5, n_users)], axis=1)
+    kw = {}
+    if profile:
+        kw["data_profile"] = DataProfile(2.0, 0.5, "strong")
+    pool = sys_.make_client_pool(
+        SERVICE, locs=locs, transport="fluid", frame_interval_ms=500.0,
+        selection_backend=backend, tick=tick, **kw)
+    sys_.sim.at(0.0, pool.start)
+    sys_.sim.run(until=until)
+    return pool, sys_
+
+
+def test_data_term_decision_identity_host_kernel_device():
+    """With the in-situ data term active the decision streams stay
+    locked across host numpy, the geo_topk kernel, and the fused device
+    tick: the (U,) data_ms is computed host-side once per window and
+    injected into every backend identically."""
+    host, hs = _run_data_pool("host", profile=True)
+    kern, _ = _run_data_pool("host", profile=True, backend="geo_topk")
+    dev, ds = _run_data_pool("device", profile=True)
+    _assert_tick_parity(kern, dev, 50)
+    np.testing.assert_array_equal(host.active, kern.active)
+    np.testing.assert_array_equal(host.cand_task, kern.cand_task)
+    assert list(host.switch_t) == list(kern.switch_t)
+    # the charge-back side is identical too: same read totals, same
+    # measured rates on every replica
+    for nid in hs.cargos:
+        assert hs.cargos[nid].reads_total == ds.cargos[nid].reads_total
+        np.testing.assert_allclose(hs.cargos[nid].read_rate,
+                                   ds.cargos[nid].read_rate)
+    assert sum(c.reads_total for c in hs.cargos.values()) > 0, \
+        "scenario never charged a read"
+
+
+def test_data_term_changes_latency_and_decisions():
+    """The fold is genuinely active: with a data profile the frame
+    latencies include the Cargo hop (mean strictly above the data-less
+    run) and at least one selection decision moves toward data."""
+    on, _ = _run_data_pool("host", profile=True)
+    off, _ = _run_data_pool("host", profile=False)
+    assert on.requests_sent == off.requests_sent
+    assert on.mean_latency() > off.mean_latency() + 1.0
+    assert (not np.array_equal(on.active, off.active)
+            or list(on.switch_t) != list(off.switch_t)
+            or (on.cand_task != off.cand_task).any())

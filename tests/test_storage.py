@@ -1,5 +1,6 @@
 """Cargo storage layer: replication count, consistency semantics,
-data-access-point selection, failover, and storage auto-scaling."""
+data-access-point selection, failover, storage auto-scaling, capacity
+accounting, and the vectorized data plane (``data_ms_for_nodes``)."""
 import numpy as np
 import pytest
 
@@ -8,6 +9,7 @@ from repro.core.app_manager import ServiceSpec, Task
 from repro.core.beacon import ArmadaSystem, facerec_image
 from repro.core.cluster import real_world
 from repro.core.storage.cargo import TIMEOUT_MS, CargoUnavailableError
+from repro.core.storage.cargo_manager import HOT_READ_RATE, DataProfile
 
 
 def _system(cargo_nodes=("V1", "V2", "D6", "Cloud")):
@@ -218,3 +220,247 @@ def test_storage_autoscaling_follows_compute():
     sys_.sim.run(until=30_000.0)
     placements = sys_.cargo_manager.placements["face"]
     assert len(placements) >= 3
+
+# ------------------------------------------------------ capacity accounting
+
+
+def test_used_mb_tracks_live_store_size():
+    """Property: under a mixed provision / write / propagate sequence,
+    the incremental ``used_mb`` accounting on EVERY Cargo equals the
+    recomputed live record size — the invariant the Cargo Manager's
+    capacity filter ranks on.  (The seed-era bug: only ``provision``
+    bumped ``used_mb``, so grown stores ranked at provision-time size.)"""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    rng = np.random.default_rng(4)
+    for i in range(40):
+        writer = chosen[int(rng.integers(len(chosen)))]
+        key = f"k{int(rng.integers(12))}"          # overwrites included
+        val = bytes(int(rng.integers(1, 2048)))
+        mode = "strong" if i % 3 == 0 else "eventual"
+        writer.write("face", key, val, "V3", mode, lambda ms: None)
+        sys_.sim.run(until=sys_.sim.now + float(rng.integers(1, 400)))
+    # a mid-life re-provision replaces the store, it must not stack
+    chosen[0].provision("face", chosen, {"k0": b"v0", "kr": bytes(512)})
+    sys_.sim.run(until=sys_.sim.now + 10_000.0)    # drain every cascade
+    for c in sys_.cargos.values():
+        c.check_capacity_invariant()
+        assert c.used_mb == pytest.approx(c.stored_mb())
+        assert c.used_mb >= 0.0
+
+
+def test_propagated_records_are_accounted():
+    """Replica propagation grows ``used_mb`` on the receiving side: after
+    an eventual write converges, every replica accounts the new record —
+    not just the one that took the client write."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    before = [c.used_mb for c in chosen]
+    chosen[0].write("face", "k9", bytes(4096), "V3", "eventual",
+                    lambda ms: None)
+    sys_.sim.run(until=5_000.0)
+    grow = (8 + 4096) / 1e6
+    for c, b in zip(chosen, before):
+        assert c.used_mb == pytest.approx(b + grow)
+        c.check_capacity_invariant()
+
+
+def test_capacity_overflow_migrates_largest_store():
+    """A propagated record that pushes a Cargo past its volume triggers
+    eviction: the store migrates to a Cargo with room, the group
+    re-links, and the accounting invariant holds everywhere."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    full = chosen[0]
+    full.spec.storage_gb = 2e-6          # ~2 KB volume: next write spills
+    big = bytes(4096)
+    chosen[1].write("face", "big", big, "V3", "eventual", lambda ms: None)
+    sys_.sim.run(until=30_000.0)
+    group = sys_.cargo_manager.placements["face"]
+    assert all(c is not full for c in group), "full Cargo still placed"
+    assert "face" not in full.stores
+    added = [c for c in group if c not in chosen]
+    assert len(added) == 1, "migration target missing from the group"
+    assert added[0].stores["face"]["big"] == big
+    assert all(added[0] in c.peers["face"] for c in group
+               if c is not added[0])
+    for c in sys_.cargos.values():
+        c.check_capacity_invariant()
+    kinds = [e["kind"] for e in sys_.sim.trace]
+    assert "storage_evict" in kinds
+
+
+def test_sole_replica_never_evicted():
+    """A Cargo holding the only alive copy of a store tolerates the
+    overflow (logged) — dropping it would lose data."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    chosen[1].fail()
+    chosen[2].fail()
+    sole = chosen[0]
+    sole.spec.storage_gb = 2e-6
+    sole.write("face", "big", bytes(4096), "V3", "eventual",
+               lambda ms: None)
+    sys_.sim.run(until=30_000.0)
+    assert sole.stores["face"]["big"] == bytes(4096)   # data kept
+    evs = [e for e in sys_.sim.trace
+           if e["kind"] == "storage_evict_failed"]
+    assert evs and evs[-1]["reason"] == "sole-replica"
+
+
+# ------------------------------------------------- auto-scaling edge cases
+
+
+def test_dead_source_copy_refused():
+    """Storage auto-scaling with every replica dead must refuse the bulk
+    copy (``storage_scale_failed``) instead of fabricating recovered
+    data out of a dead Cargo's in-memory store."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    for c in chosen:
+        c.fail()
+    started = sys_.cargo_manager._ensure_replica_near(
+        spec, sys_.topo.nodes["Cloud"].loc, "handoff")
+    sys_.sim.run(until=5_000.0)
+    assert started is False
+    assert len(sys_.cargo_manager.placements["face"]) == 3   # unchanged
+    assert all("face" not in c.stores
+               for c in sys_.cargos.values() if c not in chosen)
+    evs = [e for e in sys_.sim.trace
+           if e["kind"] == "storage_scale_failed"]
+    assert evs and evs[-1]["reason"] == "no-alive-source"
+
+
+def test_concurrent_handoffs_do_not_double_place():
+    """Two Beacon handoffs re-homing users to the same region before the
+    first bulk copy lands must place ONE replica: the in-flight copy is
+    visible to the second call's nearby check."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    assert "Cloud" not in [c.node_id for c in chosen]
+    loc = sys_.topo.nodes["Cloud"].loc
+    n1 = sys_.cargo_manager.on_domain_handoff(loc)
+    n2 = sys_.cargo_manager.on_domain_handoff(loc)     # racing duplicate
+    assert (n1, n2) == (1, 0)
+    sys_.sim.run(until=30_000.0)
+    placements = sys_.cargo_manager.placements["face"]
+    assert [c.node_id for c in placements].count("Cloud") == 1
+    assert len(placements) == 4
+    assert not sys_.cargo_manager._inflight.get("face")
+    for c in placements:
+        c.check_capacity_invariant()
+
+
+def test_hot_read_load_triggers_storage_scaling():
+    """A replica whose charged read throughput crosses ``HOT_READ_RATE``
+    gains a second access point (hot-store split), the way hot Captains
+    trigger compute auto-scaling."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    cm = sys_.cargo_manager
+    chosen[1].fail()
+    chosen[2].fail()
+    reps = [c for c in cm.placements["face"] if c.alive]
+    assert reps == [chosen[0]]
+    before = len(cm.placements["face"])
+    cm.note_read_load("face", reps, np.asarray([500.0]), 1_000.0)
+    assert chosen[0].read_rate > HOT_READ_RATE
+    sys_.sim.run(until=30_000.0)
+    after = cm.placements["face"]
+    assert len(after) == before + 1
+    assert after[-1].stores["face"]["k0"] == b"v0"     # data copied
+
+
+# ----------------------------------------------------------- data plane
+
+
+def test_effective_read_ms_inflates_with_load():
+    """The load-inflated read time grows with charged throughput and is
+    clamped at 10x the measured EMA (never a divide-by-zero)."""
+    sys_ = _system()
+    spec, chosen = _register(sys_)
+    c = chosen[0]
+    base = c.effective_read_ms()
+    assert base == pytest.approx(c.read_ema)
+    c.note_reads(50.0, 1_000.0)
+    mid = c.effective_read_ms()
+    assert mid > base
+    c.note_reads(1e6, 1_000.0)           # drive utilization to the cap
+    assert c.effective_read_ms() == pytest.approx(c.read_ema * 10.0)
+
+
+def test_data_ms_for_nodes_consistency_cost():
+    """Vectorized per-node access cost: read-only < +writes(eventual) <
+    +writes(strong) — the strong ack waits for the slowest peer
+    (Table 7 / Fig 12b ordering); no alive placement returns None."""
+    sys_ = _system()
+    spec, chosen = _register(sys_, "strong")
+    cm = sys_.cargo_manager
+    lats = np.asarray([sys_.topo.nodes[n].loc[0] for n in ("V3", "Cloud")])
+    lons = np.asarray([sys_.topo.nodes[n].loc[1] for n in ("V3", "Cloud")])
+    ro = DataProfile(reads_per_request=1.0)
+    rw_e = DataProfile(1.0, 1.0, "eventual")
+    rw_s = DataProfile(1.0, 1.0, "strong")
+    ms_ro, nearest, reps = cm.data_ms_for_nodes("face", ro, lats, lons)
+    ms_e, _, _ = cm.data_ms_for_nodes("face", rw_e, lats, lons)
+    ms_s, _, _ = cm.data_ms_for_nodes("face", rw_s, lats, lons)
+    assert ms_ro.shape == (2,) and nearest.shape == (2,)
+    assert all(reps[i].alive for i in nearest)
+    assert (ms_e > ms_ro).all()          # writes cost extra
+    assert (ms_s > ms_e).all()           # strong waits on the fan-out
+    # a loaded nearest replica makes the SAME node's access slower
+    reps[int(nearest[0])].note_reads(400.0, 1_000.0)
+    ms_hot, _, _ = cm.data_ms_for_nodes("face", ro, lats, lons)
+    assert ms_hot[0] > ms_ro[0]
+    for c in chosen:
+        c.fail()
+    assert cm.data_ms_for_nodes("face", ro, lats, lons) is None
+
+
+def test_data_profile_validates_consistency():
+    with pytest.raises(ValueError, match="unknown consistency"):
+        DataProfile(consistency="quorum")
+
+
+def test_bench_storage_smoke_profile():
+    """The registered benchmark's --smoke profile runs in tier-1,
+    driving the vectorized-pool data plane end-to-end: the data term
+    must raise end-to-end frame latency over the term-off twin, reads
+    must be charged back to the Cargo replicas, and the mid-run Cargo
+    failure must re-home reads onto the surviving replicas at a longer
+    hop (the full 100k x 1k profile rides the slow tier)."""
+    from benchmarks.bench_storage import _SMOKE, _fleet_rows, derive
+
+    rows = _fleet_rows(_SMOKE)
+    pre = rows[0][0].rsplit("/", 1)[0] + "/"
+    by_name = {n: (ms, d) for n, ms, d in rows}
+    on, on_d = by_name[pre + "data_on"]
+    off, off_d = by_name[pre + "data_off"]
+    assert np.isfinite(on) and np.isfinite(off)
+    assert on > 1.5 * off                # the Cargo hop is in the frames
+    assert "cargo_reads=0;" in off_d     # term off -> no charge-back
+    assert "cargo_reads=0;" not in on_d
+    ev, _ = by_name[pre + "write_eventual"]
+    st, _ = by_name[pre + "write_strong"]
+    assert st > ev                       # strong pays the replica fan-out
+    chp, _ = by_name[pre + "churn_pre"]
+    chq, chq_d = by_name[pre + "churn_post"]
+    assert np.isfinite(chp) and chq > chp        # longer replica hop
+    assert "replicas_alive=2" in chq_d           # the nearest replica died
+    us = {n: ms * 1e3 for n, ms, _ in rows if ms == ms}
+    imp = derive(us)
+    assert imp and "data_term_frame=" in imp[0][2]
+    assert "churn_frame_ms=" in imp[0][2]
+
+
+@pytest.mark.slow
+def test_bench_storage_full_profile():
+    """Full fleet profile (102_400 users x 1_000 nodes, 12 Cargos) —
+    same invariants as the smoke profile at paper scale."""
+    from benchmarks.bench_storage import _FULL, _fleet_rows
+
+    rows = _fleet_rows(_FULL)
+    by_name = {n: (ms, d) for n, ms, d in rows}
+    pre = rows[0][0].rsplit("/", 1)[0] + "/"
+    assert by_name[pre + "data_on"][0] > by_name[pre + "data_off"][0]
+    assert by_name[pre + "churn_post"][0] > by_name[pre + "churn_pre"][0]

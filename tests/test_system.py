@@ -83,7 +83,7 @@ def test_armada_deploy_faster_than_random():
 def test_consistency_ordering():
     """Eventual write << strong write on volunteers; both reads equal."""
     from benchmarks import bench_storage
-    rows = {n: v for n, v, _ in bench_storage.run()}
+    rows = {n: v for n, v, _ in bench_storage._micro_rows()}
     assert rows["fig13/write/volunteer"] < 0.5 * rows["fig12/write/volunteer"]
     assert rows["fig12/read/volunteer"] == rows["fig13/read/volunteer"]
     # paper Fig 12b: volunteer strong writes rival/exceed cloud latency
